@@ -1,0 +1,101 @@
+"""Shared helpers for the per-table benchmark modules."""
+from __future__ import annotations
+
+import math
+import time
+from typing import Mapping, Sequence
+
+from repro.core import (CostTable, EdgeSoCCostModel, EDGE_PUS,
+                        single_pu_cost, solve_sequential)
+from repro.core.costmodel import CostEntry
+from repro.core.op import FusedOp, OpGraph
+
+PUS = ("CPU", "GPU", "NPU")
+
+
+def geomean(xs: Sequence[float]) -> float:
+    xs = [x for x in xs if x > 0]
+    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0
+
+
+def best_single(chain, ops, table, pus=EDGE_PUS, objective: str = "latency"):
+    """(best_pu, value, per_pu dict) of monolithic execution."""
+    idx = 0 if objective == "latency" else 1
+    vals = {}
+    for pu in table.pus:
+        c = single_pu_cost(chain, pu, ops, table, pus)
+        vals[pu] = None if c is None else c[idx]
+    feas = {k: v for k, v in vals.items() if v is not None}
+    b = min(feas, key=feas.get)
+    return b, feas[b], vals
+
+
+def sequential_report(graph: OpGraph, model: EdgeSoCCostModel | None = None):
+    """One Table-2 row: single-PU latencies + BIDENT-lat + BIDENT-energy."""
+    model = model or EdgeSoCCostModel()
+    table = model.build_table(graph)
+    chain = graph.topo_order()
+    b, bl, lat = best_single(chain, graph.ops, table)
+    sched_l = solve_sequential(chain, graph.ops, table, EDGE_PUS, "latency")
+    sched_e = solve_sequential(chain, graph.ops, table, EDGE_PUS, "energy")
+    _, be, _ = best_single(chain, graph.ops, table, objective="energy")
+    return {
+        "table": table, "chain": chain, "best": b,
+        "single_lat": lat, "best_lat": bl, "best_energy": be,
+        "bident_lat": sched_l.latency, "bident_lat_energy": sched_l.energy,
+        "bident_energy": sched_e.energy, "bident_energy_lat": sched_e.latency,
+        "speedup": bl / sched_l.latency,
+        "energy_red_latopt": 1.0 - sched_l.energy / be,
+        "energy_red_engopt": 1.0 - sched_e.energy / be,
+        "sched_l": sched_l, "sched_e": sched_e,
+    }
+
+
+# ---------------------------------------------------------------------------
+# segment coarsening for the 190-pair concurrent sweep
+# ---------------------------------------------------------------------------
+
+
+def segment_table(graph: OpGraph, table: CostTable,
+                  max_segments: int = 48) -> tuple[list[int], CostTable]:
+    """Collapse a long op chain into <= max_segments super-ops.
+
+    Consecutive ops merge into one segment whose per-PU cost is the sum of
+    member costs (intra-segment transitions are zero: one PU per segment).
+    A segment supports a PU iff every member does — so e.g. KAN segments
+    stay NPU-less.  This hierarchical coarsening keeps the joint (i, j)
+    Dijkstra tractable for the paper's 190-pair sweep (pi0.5 alone has
+    ~4,600 ops); the scheduling granularity loss is the documented
+    approximation.
+    """
+    chain = graph.topo_order()
+    n = len(chain)
+    seg_len = max(1, -(-n // max_segments))
+    segments: list[list[int]] = [chain[i:i + seg_len]
+                                 for i in range(0, n, seg_len)]
+    out = CostTable(list(table.pus))
+    for si, seg in enumerate(segments):
+        sup = set(table.pus)
+        for oi in seg:
+            sup &= set(table.supported_pus(oi))
+        for pu in sup:
+            w = sum(table.require(oi, pu).w for oi in seg)
+            e = sum(table.require(oi, pu).energy for oi in seg)
+            first = table.require(seg[0], pu)
+            last = table.require(seg[-1], pu)
+            out.set(si, pu, CostEntry(
+                kernel=w, dispatch=0.0, h2d=first.h2d, d2h=last.d2h,
+                power=(e / w if w > 0 else first.power)))
+    return list(range(len(segments))), out
+
+
+class Timer:
+    def __init__(self, label: str):
+        self.label = label
+
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0

@@ -1,0 +1,58 @@
+"""Fig. 2: execution latency of seven representative operators per PU.
+
+Paper claims validated here: GPU fastest for MatMul (2.8x vs CPU, 1.6x vs
+NPU) and Conv2D (2.2x / 1.1x); CPU fastest for DWConv / Add / RDFT /
+CumSum / Gather, with NPU penalties 4.7x / 8.7x / 4.1x on the non-GEMM
+trio (RDFT / CumSum / Gather).
+"""
+from __future__ import annotations
+
+from repro.core import EDGE_PUS, EdgeSoCCostModel
+from repro.core.costmodel import FIG2_OPS
+
+from .common import PUS
+
+
+def run(verbose: bool = True) -> dict:
+    m = EdgeSoCCostModel()
+    rows = {}
+    for name, op in FIG2_OPS.items():
+        ts = {}
+        for pu in PUS:
+            e = m.entry(op, EDGE_PUS[pu])
+            ts[pu] = e.w if e else None
+        best = min(v for v in ts.values() if v)
+        rows[name] = {k: (v / best if v else None) for k, v in ts.items()}
+
+    checks = {
+        "GPU fastest MatMul": rows["MatMul"]["GPU"] == 1.0,
+        "MatMul CPU ~2.8x (got %.2f)" % rows["MatMul"]["CPU"]:
+            2.3 <= rows["MatMul"]["CPU"] <= 3.3,
+        "MatMul NPU ~1.6x (got %.2f)" % rows["MatMul"]["NPU"]:
+            1.3 <= rows["MatMul"]["NPU"] <= 2.0,
+        "GPU fastest Conv2D": rows["Conv2D"]["GPU"] == 1.0,
+        "Conv2D CPU ~2.2x (got %.2f)" % rows["Conv2D"]["CPU"]:
+            1.8 <= rows["Conv2D"]["CPU"] <= 2.7,
+        "CPU fastest DWConv/Add/RDFT/CumSum/Gather": all(
+            rows[k]["CPU"] == 1.0
+            for k in ("DWConv", "Add", "RDFT", "CumSum", "Gather")),
+        "RDFT NPU ~4.7x (got %.2f)" % rows["RDFT"]["NPU"]:
+            3.8 <= rows["RDFT"]["NPU"] <= 5.7,
+        "CumSum NPU ~8.7x (got %.2f)" % rows["CumSum"]["NPU"]:
+            7.0 <= rows["CumSum"]["NPU"] <= 10.5,
+        "Gather NPU ~4.1x (got %.2f)" % rows["Gather"]["NPU"]:
+            3.3 <= rows["Gather"]["NPU"] <= 5.0,
+    }
+    if verbose:
+        print("== Fig. 2: operator-to-PU affinity (normalized to fastest) ==")
+        print(f"{'op':8s} " + " ".join(f"{p:>6s}" for p in PUS))
+        for name, r in rows.items():
+            print(f"{name:8s} " + " ".join(
+                f"{r[p]:6.2f}" if r[p] else "   N/A" for p in PUS))
+        for c, ok in checks.items():
+            print(f"  [{'PASS' if ok else 'FAIL'}] {c}")
+    return {"rows": rows, "checks": checks}
+
+
+if __name__ == "__main__":
+    run()

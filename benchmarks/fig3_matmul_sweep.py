@@ -1,0 +1,57 @@
+"""Fig. 3: square MatMul [1,N,N]x[N,N] sweep, FP16 + INT8.
+
+Paper claims validated: FP16 — CPU fastest through N=64, GPU crosses at
+N=128 and widens to ~4.8x at N=2048.  INT8 — CPU leads through N=128, GPU
+crosses at N=256, NPU overtakes GPU only at N=2048 (the only configuration
+where the NPU is fastest).
+"""
+from __future__ import annotations
+
+from repro.core import EDGE_PUS, EdgeSoCCostModel
+from repro.core.costmodel import make_matmul
+
+from .common import PUS
+
+SIZES = (32, 64, 128, 256, 512, 1024, 2048)
+
+
+def run(verbose: bool = True) -> dict:
+    m = EdgeSoCCostModel()
+    sweeps = {}
+    for dtb, lbl in ((2, "FP16"), (1, "INT8")):
+        rows = {}
+        for n in SIZES:
+            op = make_matmul(n, dtb)
+            ts = {pu: m.entry(op, EDGE_PUS[pu]).w for pu in PUS}
+            best = min(ts.values())
+            rows[n] = {"win": min(ts, key=ts.get),
+                       **{k: v / best for k, v in ts.items()}}
+        sweeps[lbl] = rows
+
+    f16, i8 = sweeps["FP16"], sweeps["INT8"]
+    checks = {
+        "FP16 CPU fastest N<=64": all(f16[n]["win"] == "CPU" for n in (32, 64)),
+        "FP16 GPU crosses at N=128": f16[128]["win"] == "GPU",
+        "FP16 GPU lead ~4.8x at 2048 (got %.2f)" % f16[2048]["CPU"]:
+            4.0 <= f16[2048]["CPU"] <= 5.6,
+        "INT8 CPU leads through N=128": all(
+            i8[n]["win"] == "CPU" for n in (32, 64, 128)),
+        "INT8 GPU crosses at N=256": i8[256]["win"] == "GPU",
+        "INT8 NPU overtakes only at N=2048": (
+            i8[2048]["win"] == "NPU"
+            and all(i8[n]["win"] != "NPU" for n in SIZES[:-1])),
+    }
+    if verbose:
+        print("== Fig. 3: MatMul size sweep (normalized to fastest) ==")
+        for lbl, rows in sweeps.items():
+            print(f"-- {lbl} --")
+            for n, r in rows.items():
+                print(f"  N={n:5d} win={r['win']:4s} " + " ".join(
+                    f"{p}={r[p]:7.2f}" for p in PUS))
+        for c, ok in checks.items():
+            print(f"  [{'PASS' if ok else 'FAIL'}] {c}")
+    return {"sweeps": sweeps, "checks": checks}
+
+
+if __name__ == "__main__":
+    run()

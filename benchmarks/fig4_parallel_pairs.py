@@ -1,0 +1,76 @@
+"""Fig. 4: speedup of six ordered PU assignments for three independent
+operator pairs vs the best serial single-PU baseline.
+
+P1 = MatMul || Conv2D (two GPU-favoring ops), P2 = MatMul || CumSum
+(GPU-favoring + CPU-favoring, the hybrid Transformer-Mamba case),
+P3 = Conv2D || DWConv (split-preference convolutions).
+
+Paper claims: GPU||CPU is the best assignment for every pair (1.41x /
+1.38x / 1.46x); assignments that put the GEMM on the slower PU fall below
+the serial baseline.  Makespans include the cross-PU contention SF.
+"""
+from __future__ import annotations
+
+import itertools
+
+from repro.core import ContentionModel, EDGE_PUS, EdgeSoCCostModel
+from repro.core.costmodel import (make_conv2d, make_cumsum, make_dwconv,
+                                  make_matmul)
+
+from .common import PUS
+
+PAIRS = {
+    "P1 MatMul||Conv2D": (make_matmul(1024), make_conv2d(128, 128, 56, 3)),
+    "P2 MatMul||CumSum": (make_matmul(1024), make_cumsum(4096, 256)),
+    "P3 Conv2D||DWConv": (make_conv2d(128, 128, 56, 3),
+                          make_dwconv(512, 112, 3)),
+}
+
+
+def run(verbose: bool = True) -> dict:
+    m = EdgeSoCCostModel()
+    cm = ContentionModel()
+    results = {}
+    for name, (op_a, op_b) in PAIRS.items():
+        t = {}
+        for pu in PUS:
+            ea, eb = m.entry(op_a, EDGE_PUS[pu]), m.entry(op_b, EDGE_PUS[pu])
+            t[pu] = (ea.w if ea else None, eb.w if eb else None)
+        # best serial single-PU baseline: min over PUs of (t_a + t_b)
+        serial = min(a + b for a, b in t.values() if a and b)
+        rows = {}
+        for pa, pb in itertools.product(PUS, PUS):
+            if pa == pb:
+                continue
+            ta, tb = t[pa][0], t[pb][1]
+            if ta is None or tb is None:
+                continue
+            # contention-adjusted parallel makespan (paper §3.3.2)
+            mk = max(ta * cm.slowdown(pa, pb), tb * cm.slowdown(pb, pa))
+            rows[f"{pa}||{pb}"] = serial / mk
+        results[name] = {"serial_s": serial, "speedups": rows,
+                         "best": max(rows, key=rows.get)}
+
+    gpu_cpu_best = all(r["best"] in ("GPU||CPU", "CPU||GPU")
+                       for r in results.values())
+    best_vals = [max(r["speedups"].values()) for r in results.values()]
+    checks = {
+        "GPU||CPU (either order) best for every pair": gpu_cpu_best,
+        "best parallel speedups in [1.2, 2.0] (paper 1.38-1.46)": all(
+            1.2 <= v <= 2.0 for v in best_vals),
+        "mis-assignments fall below serial baseline": all(
+            min(r["speedups"].values()) < 1.0 for r in results.values()),
+    }
+    if verbose:
+        print("== Fig. 4: parallel operator pairs vs best serial ==")
+        for name, r in results.items():
+            tops = sorted(r["speedups"].items(), key=lambda kv: -kv[1])
+            print(f"{name}: best={r['best']} "
+                  + " ".join(f"{k}={v:.2f}x" for k, v in tops))
+        for c, ok in checks.items():
+            print(f"  [{'PASS' if ok else 'FAIL'}] {c}")
+    return {"results": results, "checks": checks}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure + the TPU-mode
+beyond-paper table.  ``python -m benchmarks.run`` executes everything and
+summarises claim validation.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from . import (fig2_op_affinity, fig3_matmul_sweep, fig4_parallel_pairs,
+               fig6_energy, fig8_concurrent, table2_sequential,
+               table3_parallel, tpu_autoshard)
+
+MODULES = [
+    ("Fig. 2 operator affinity", fig2_op_affinity),
+    ("Fig. 3 MatMul size sweep", fig3_matmul_sweep),
+    ("Fig. 4 parallel op pairs", fig4_parallel_pairs),
+    ("Table 2 sequential orchestration", table2_sequential),
+    ("Fig. 6 energy objectives", fig6_energy),
+    ("Table 3 intra-model parallel", table3_parallel),
+    ("Fig. 8 multi-model concurrent (190 pairs)", fig8_concurrent),
+    ("TPU autoshard (beyond-paper)", tpu_autoshard),
+]
+
+
+def main() -> int:
+    all_checks: dict[str, dict[str, bool]] = {}
+    for label, mod in MODULES:
+        print("\n" + "=" * 72)
+        print(label)
+        print("=" * 72)
+        t0 = time.time()
+        out = mod.run(verbose=True)
+        all_checks[label] = out.get("checks", {})
+        print(f"[{label}: {time.time()-t0:.1f}s]")
+
+    print("\n" + "=" * 72)
+    print("CLAIM VALIDATION SUMMARY")
+    print("=" * 72)
+    n_pass = n_fail = 0
+    for label, checks in all_checks.items():
+        for c, ok in checks.items():
+            n_pass += ok
+            n_fail += not ok
+            if not ok:
+                print(f"FAIL  [{label}] {c}")
+    print(f"{n_pass} checks passed, {n_fail} failed "
+          f"(across {len(all_checks)} benchmark modules)")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

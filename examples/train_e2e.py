@@ -1,0 +1,93 @@
+"""End-to-end training driver example: a ~100M-parameter dense LM trained
+for a few hundred steps on the deterministic synthetic pipeline, with
+atomic checkpoints, exact resume, and fault-managed stepping — the
+complete production path of launch/train.py at example scale.
+
+Run:  PYTHONPATH=src python examples/train_e2e.py [--steps 300]
+(Defaults are sized for a CPU container; pass --d-model/--layers to grow.)
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, SyntheticTokenSource
+from repro.fault.manager import FaultConfig, run_with_recovery
+from repro.models import model as M
+from repro.optim import adamw
+from repro.sharding import Policy
+from repro.launch.mesh import make_host_mesh
+from repro.train import trainer as T
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--batch", type=int, default=8)
+ap.add_argument("--seq", type=int, default=128)
+ap.add_argument("--d-model", type=int, default=768)
+ap.add_argument("--layers", type=int, default=12)
+ap.add_argument("--vocab", type=int, default=4096)
+ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+args = ap.parse_args()
+
+# ~100M-parameter llama-family config (exact size printed below)
+cfg = dataclasses.replace(
+    get_config("llama3.2-1b"),
+    name="llama-100m", n_layers=args.layers, d_model=args.d_model,
+    n_heads=8, n_kv_heads=4, d_head=args.d_model // 8,
+    d_ff=4 * args.d_model, vocab=args.vocab, dtype="float32", remat=False,
+    q_chunk=64, kv_chunk=64)
+print(f"config: {cfg.n_layers}L d={cfg.d_model} ff={cfg.d_ff} "
+      f"vocab={cfg.vocab} -> {cfg.param_count()/1e6:.1f}M params")
+
+mesh = make_host_mesh()
+policy = Policy(mesh=mesh, fsdp=True)
+source = SyntheticTokenSource(DataConfig(
+    global_batch=args.batch, seq_len=args.seq, vocab=cfg.vocab))
+
+tc = T.TrainConfig(opt=adamw.AdamWConfig(
+    lr=1e-3, warmup_steps=30, total_steps=args.steps))
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+opt_state = adamw.init_state(tc.opt, params)
+step_fn = T.jit_train_step(cfg, tc, policy,
+                           jax.eval_shape(lambda: params),
+                           jax.eval_shape(lambda: source(0)))
+
+state = {"params": params, "opt": opt_state}
+start = 0
+if ckpt.latest_step(args.ckpt_dir) is not None:
+    state, extra = ckpt.restore(args.ckpt_dir, state)
+    start = SyntheticTokenSource.resume_step(extra["data"])
+    print(f"resuming from step {start}")
+
+losses = []
+t0 = time.time()
+
+
+def one_step(i: int) -> None:
+    batch = jax.tree.map(jnp.asarray, source(i))
+    with mesh:
+        p, o, met = step_fn(state["params"], state["opt"], batch)
+    state["params"], state["opt"] = p, o
+    losses.append(float(met["loss"]))
+    if i % 20 == 0:
+        dt = (time.time() - t0) / max(len(losses), 1)
+        print(f"step {i:4d} loss {losses[-1]:7.4f} ({dt*1e3:.0f} ms/step)")
+
+
+run_with_recovery(
+    one_step, start_step=start, total_steps=args.steps,
+    cfg=FaultConfig(checkpoint_every=100),
+    save_fn=lambda i: ckpt.save(args.ckpt_dir, i, state,
+                                extra={"data": source.checkpoint_state(i)}),
+    restore_fn=lambda: start)
+
+first = float(np.mean(losses[:10])) if len(losses) >= 10 else losses[0]
+final = float(np.mean(losses[-10:]))
+print(f"\ntrained {len(losses)} steps: loss {first:.3f} -> {final:.3f}")
+assert final < first, "loss did not decrease"
+print("loss decreased: OK")

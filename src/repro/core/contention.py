@@ -1,0 +1,76 @@
+"""Cross-PU contention models (paper §3.2.2, "Memory contention modeling").
+
+Two empirically grounded models:
+
+* **Intra-model parallel** — when branches co-execute on different PUs, each
+  operator's cost is scaled by a measured slowdown factor
+  ``SF(P_run, P_interfere)``.  The paper's measurements: the NPU is most
+  sensitive (1.17x with CPU active, 1.09x with GPU active); CPU and GPU show
+  negligible interference.
+
+* **Multi-model concurrent** — co-scheduled operators from different models
+  on the *same* PU are profiled under barrier-synchronised simultaneous
+  execution.  The default derived model serialises same-PU co-execution
+  (each op's measured concurrent latency ~= sum of solo latencies, which is
+  what time-sharing a single command queue yields) and applies a
+  memory-bandwidth contention factor across PUs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+from .costmodel import DEFAULT_SF
+
+# Multi-model cross-PU memory-bandwidth contention (two active PUs hammering
+# the shared DRAM).  Slightly stronger than the intra-model SF because whole
+# models (not single branches) co-execute.
+DEFAULT_MM_SF: dict[tuple[str, str], float] = {
+    ("NPU", "CPU"): 1.22, ("NPU", "GPU"): 1.15,
+    ("CPU", "NPU"): 1.04, ("CPU", "GPU"): 1.08,
+    ("GPU", "NPU"): 1.04, ("GPU", "CPU"): 1.08,
+    ("CPU", "CPU"): 1.0, ("GPU", "GPU"): 1.0, ("NPU", "NPU"): 1.0,
+}
+
+
+@dataclasses.dataclass
+class ContentionModel:
+    """SF tables + derived co-execution costs."""
+
+    sf: Mapping[tuple[str, str], float] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_SF))
+    mm_sf: Mapping[tuple[str, str], float] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_MM_SF))
+
+    def slowdown(self, run: str, interfere: str) -> float:
+        return self.sf.get((run, interfere), 1.0)
+
+    def branch_factor(self, run_pu: str, other_pus: set[str]) -> float:
+        """Paper §3.3.2: max over PUs used by other concurrent branches."""
+        if not other_pus:
+            return 1.0
+        return max(self.slowdown(run_pu, p) for p in other_pus)
+
+    # -- multi-model co-execution -------------------------------------------
+    def co_exec(self, t_a: float, pu_a: str, t_b: float, pu_b: str
+                ) -> tuple[float, float]:
+        """Concurrent latencies of two ops from different models.
+
+        Same PU: the command queue serialises them -> each op's measured
+        wall-clock concurrent latency is the pair's makespan.  Different
+        PUs: each solo latency inflated by memory-bandwidth contention.
+        """
+        if pu_a == pu_b:
+            s = t_a + t_b
+            return s, s
+        return (t_a * self.mm_sf.get((pu_a, pu_b), 1.0),
+                t_b * self.mm_sf.get((pu_b, pu_a), 1.0))
+
+    def pair_step_cost(self, t_a: float, pu_a: str, t_b: float, pu_b: str) -> float:
+        """Aligned-mode step cost (paper §3.2.2): same-PU uses the average of
+        measured concurrent times; cross-PU uses the max of (contention-
+        adjusted) solo times."""
+        cc_a, cc_b = self.co_exec(t_a, pu_a, t_b, pu_b)
+        if pu_a == pu_b:
+            return 0.5 * (cc_a + cc_b)
+        return max(cc_a, cc_b)

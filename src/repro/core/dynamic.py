@@ -1,0 +1,205 @@
+"""Dynamic operator-level scheduling + intra-PU tile mapping.
+
+The paper's §6 Future Work, implemented:
+
+1. **Dynamic scheduling** — BIDENT's static schedule is optimal for the
+   profiled costs, but "thermal throttling reduces PU throughput,
+   concurrent system processes compete for memory bandwidth" (§6).
+   ``DynamicScheduler`` keeps the offline cost table, folds in a
+   lightweight runtime *condition* (per-PU throughput multipliers from
+   monitoring), and re-runs the shortest-path search from the next
+   unexecuted operator when conditions drift beyond a hysteresis
+   threshold.  Re-planning is the same O(N K^2) search — sub-millisecond
+   (§3.4) — so remapping never outweighs its own benefit for the
+   schedule sizes the paper targets.
+
+2. **Tile-level mapping** — the Intel NPU exposes 6 compute tiles; the
+   paper proposes assigning tiles by compute- vs memory-boundedness
+   (ops below the roofline ridge get fewer tiles, freeing the rest for
+   concurrent ops).  ``tile_split`` implements exactly that allocator
+   for a pair of co-scheduled operators on one tiled PU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+from .costmodel import CostEntry, CostTable, PUSpec
+from .op import FusedOp
+from .schedule import SeqSchedule, evaluate_sequential
+from .search import solve_sequential
+
+
+# ---------------------------------------------------------------------------
+# runtime conditions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RuntimeCondition:
+    """Per-PU throughput multipliers from runtime monitoring.
+
+    slowdown[pu] = 1.0 means nominal; 2.0 means ops on that PU currently
+    take twice their profiled time (thermal throttling, a co-resident
+    process, bandwidth pressure).  ``unavailable`` PUs are dropped from
+    the table entirely (the paper's compile-failure semantics applied at
+    runtime — e.g. a PU claimed by another tenant).
+    """
+
+    slowdown: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    unavailable: frozenset[str] = frozenset()
+
+    def factor(self, pu: str) -> float:
+        return float(self.slowdown.get(pu, 1.0))
+
+
+def adjusted_table(table: CostTable, cond: RuntimeCondition) -> CostTable:
+    """Cost table under the current runtime condition."""
+    out = CostTable(list(table.pus))
+    for (oi, pu), e in table._t.items():
+        if pu in cond.unavailable:
+            continue
+        f = cond.factor(pu)
+        out.set(oi, pu, CostEntry(kernel=e.kernel * f, dispatch=e.dispatch,
+                                  h2d=e.h2d, d2h=e.d2h, power=e.power))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dynamic scheduler
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RemapEvent:
+    at_op: int                    # chain position where remapping happened
+    reason: str
+    old_tail_cost: float          # predicted cost of keeping the old plan
+    new_tail_cost: float          # predicted cost of the re-planned tail
+
+
+class DynamicScheduler:
+    """Executes a chain op-by-op, re-planning the *tail* when runtime
+    conditions drift.
+
+    Hysteresis: re-plan only when the predicted tail improvement exceeds
+    ``replan_threshold`` (relative), so monitoring noise doesn't thrash
+    the schedule — the paper's requirement that remapping overhead "not
+    negate the latency benefit".
+    """
+
+    def __init__(self, chain: Sequence[int], ops: Sequence[FusedOp],
+                 table: CostTable, pus: Mapping[str, PUSpec],
+                 objective: str = "latency",
+                 replan_threshold: float = 0.05):
+        self.chain = list(chain)
+        self.ops = ops
+        self.base_table = table
+        self.pus = pus
+        self.objective = objective
+        self.threshold = replan_threshold
+        self.plan = solve_sequential(self.chain, ops, table, pus, objective)
+        self.events: list[RemapEvent] = []
+
+    def tail_cost(self, pos: int, assignment: Sequence[str],
+                  table: CostTable) -> float:
+        """Cost of executing chain[pos:] under ``assignment`` and ``table``."""
+        tail = self.chain[pos:]
+        asn = list(assignment[pos:])
+        # drop infeasible tail assignments (unavailable PU) -> +inf
+        for oi, pu in zip(tail, asn):
+            if not table.supported(oi, pu):
+                return float("inf")
+        lat, eng = evaluate_sequential(tail, asn, self.ops, table, self.pus)
+        return lat if self.objective == "latency" else eng
+
+    def on_condition(self, pos: int, cond: RuntimeCondition) -> SeqSchedule:
+        """Called between ops: re-plan chain[pos:] if conditions warrant."""
+        table = adjusted_table(self.base_table, cond)
+        keep = self.tail_cost(pos, self.plan.assignment, table)
+        tail = self.chain[pos:]
+        if not tail:
+            return self.plan
+        replanned = solve_sequential(tail, self.ops, table, self.pus,
+                                     self.objective)
+        new_cost = (replanned.latency if self.objective == "latency"
+                    else replanned.energy)
+        if keep == float("inf") or new_cost < keep * (1 - self.threshold):
+            self.events.append(RemapEvent(
+                at_op=pos,
+                reason="unavailable PU" if keep == float("inf")
+                else "condition drift",
+                old_tail_cost=keep, new_tail_cost=new_cost))
+            self.plan = SeqSchedule(
+                chain=self.chain,
+                assignment=list(self.plan.assignment[:pos])
+                + list(replanned.assignment),
+                latency=float("nan"), energy=float("nan"),
+                objective=self.objective)
+        return self.plan
+
+    def simulate(self, conditions: Mapping[int, RuntimeCondition]) -> float:
+        """Execute the whole chain, applying ``conditions[pos]`` when
+        reached; returns realised latency (ops run under the condition
+        active at their position)."""
+        cond = RuntimeCondition()
+        total = 0.0
+        for pos in range(len(self.chain)):
+            if pos in conditions:
+                cond = conditions[pos]
+                self.on_condition(pos, cond)
+            table = adjusted_table(self.base_table, cond)
+            oi = self.chain[pos]
+            pu = self.plan.assignment[pos]
+            e = table.require(oi, pu)
+            total += e.w
+            if pos + 1 < len(self.chain):
+                from .costmodel import transition_cost
+                total += transition_cost(
+                    self.pus, table, oi, pu, self.chain[pos + 1],
+                    self.plan.assignment[pos + 1]
+                    if table.supported(self.chain[pos + 1],
+                                       self.plan.assignment[pos + 1])
+                    else table.supported_pus(self.chain[pos + 1])[0])
+        return total
+
+
+# ---------------------------------------------------------------------------
+# intra-PU tile-level mapping (paper §6, second item)
+# ---------------------------------------------------------------------------
+
+
+def ridge_intensity(pu: PUSpec, dtype_bytes: int = 2) -> float:
+    """Roofline ridge point of a PU: FLOPs/byte where compute == memory."""
+    return pu.peak_gemm.get(dtype_bytes, pu.peak_gemm[2]) / pu.mem_bw
+
+
+def tile_split(op_a: FusedOp, op_b: FusedOp, pu: PUSpec,
+               n_tiles: int = 6) -> tuple[int, int, float]:
+    """Split a tiled PU between two data-independent operators.
+
+    Ops *below* the ridge point (memory-bound) gain little from extra
+    tiles (bandwidth is shared); compute-bound ops scale with tiles.
+    Returns (tiles_a, tiles_b, makespan) minimizing the pair makespan
+    over all integer splits, with:
+
+      t(op, k) = max(flops/(peak * k/n_tiles), bytes/mem_bw)
+
+    i.e. compute scales with the tile share, the shared memory system
+    does not — exactly the paper's proposed allocation rule.
+    """
+    def t(op: FusedOp, k: int) -> float:
+        if k == 0:
+            return float("inf")
+        eff = pu.kind_eff.get(op.kind, pu.kind_eff["other"])
+        peak = pu.peak_gemm.get(op.dtype_bytes, pu.peak_gemm[2]) * eff
+        t_compute = op.flops / (peak * k / n_tiles)
+        t_memory = op.bytes_moved / pu.mem_bw
+        return max(t_compute, t_memory)
+
+    best = None
+    for ka in range(1, n_tiles):
+        mk = max(t(op_a, ka), t(op_b, n_tiles - ka))
+        if best is None or mk < best[2]:
+            best = (ka, n_tiles - ka, mk)
+    return best

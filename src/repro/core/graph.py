@@ -1,0 +1,111 @@
+"""Execution-graph builder (Algorithm 1, Stage 2).
+
+Encodes the operator->PU mapping problem as a weighted directed graph:
+
+* node ``v_{i,j}`` = execute fused op ``O_i`` on PU ``P_j``; weight =
+  dispatch + kernel time of ``O_i`` on ``P_j`` (energy mode: ``w x p``).
+* edge ``v_{i,j} -> v_{i+1,k}``: 0 if ``j == k``; otherwise the profiled
+  PU-transition (H2D/D2H) cost.
+* virtual ``s`` / ``t`` nodes carry the initial H2D and final D2H costs.
+
+The graph is an explicit object (not just the DP recurrence) so that the
+shortest-path reduction in the paper is directly visible and testable:
+``search.dijkstra`` on this graph must equal ``search.sequential_dp``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Mapping, Sequence
+
+from .costmodel import CostTable, PUSpec, transition_cost
+from .op import FusedOp, OpGraph
+
+Objective = str  # "latency" | "energy"
+
+
+def node_weight(entry, objective: Objective) -> float:
+    if objective == "latency":
+        return entry.w
+    if objective == "energy":
+        return entry.w * entry.power
+    raise ValueError(f"unknown objective {objective!r}")
+
+
+@dataclasses.dataclass
+class ExecGraph:
+    """Explicit weighted digraph over (op, PU) states, plus s/t."""
+
+    # node ids: 0 = s, 1 = t, then 2 + i*K + j for (op i, pu j) among
+    # *supported* pairs (unsupported pairs get no node — paper §3.1).
+    n_ops: int
+    pus: list[str]
+    node_ids: dict[tuple[int, str], int]
+    node_w: dict[int, float]
+    adj: dict[int, list[tuple[int, float]]]  # u -> [(v, edge_weight)]
+    S: int = 0
+    T: int = 1
+
+    def nodes(self) -> int:
+        return 2 + len(self.node_ids)
+
+
+def build_sequential_graph(
+    chain: Sequence[int],
+    ops: Sequence[FusedOp],
+    table: CostTable,
+    pus: Mapping[str, PUSpec],
+    objective: Objective = "latency",
+) -> ExecGraph:
+    """Build the sequential execution graph for a chain of op indices.
+
+    ``chain`` lists op indices (into ``ops``) forming a linear dependency
+    chain O_1 -> ... -> O_N.
+    """
+    pu_names = list(table.pus)
+    node_ids: dict[tuple[int, str], int] = {}
+    node_w: dict[int, float] = {}
+    adj: dict[int, list[tuple[int, float]]] = {0: [], 1: []}
+
+    nid = 2
+    for pos, oi in enumerate(chain):
+        sup = table.supported_pus(oi)
+        if not sup:
+            raise ValueError(f"op {oi} ({ops[oi].name}) unsupported on all PUs")
+        for p in sup:
+            node_ids[(pos, p)] = nid
+            e = table.require(oi, p)
+            node_w[nid] = node_weight(e, objective)
+            adj[nid] = []
+            nid += 1
+
+    def energy_scale(pu: str) -> float:
+        # transition edges consume time on the interconnect/host; in energy
+        # mode we charge them at the destination PU's memory-bound power.
+        return pus[pu].power_memory if objective == "energy" else 1.0
+
+    # s -> first op nodes: H2D cost of O_1 on P_j (zero for CPU/host).
+    first = chain[0]
+    for p in table.supported_pus(first):
+        w = table.require(first, p).h2d * energy_scale(p)
+        adj[0].append((node_ids[(0, p)], w))
+
+    # consecutive ops, all PU pairs
+    for pos in range(len(chain) - 1):
+        oi, oj = chain[pos], chain[pos + 1]
+        for pj in table.supported_pus(oi):
+            u = node_ids[(pos, pj)]
+            for pk in table.supported_pus(oj):
+                v = node_ids[(pos + 1, pk)]
+                tc = transition_cost(pus, table, oi, pj, oj, pk)
+                adj[u].append((v, tc * energy_scale(pk)))
+
+    # last op nodes -> t: D2H cost of O_N on P_j
+    lastpos = len(chain) - 1
+    last = chain[lastpos]
+    for p in table.supported_pus(last):
+        u = node_ids[(lastpos, p)]
+        w = table.require(last, p).d2h * energy_scale(p)
+        adj[u].append((1, w))
+
+    return ExecGraph(n_ops=len(chain), pus=pu_names, node_ids=node_ids,
+                     node_w=node_w, adj=adj)

@@ -1,0 +1,143 @@
+"""Schedule objects + cost accounting.
+
+A ``Schedule`` is the static output of the search engine (paper §3.4: "The
+output schedule is a static mapping that is applied directly by the
+execution orchestrator").  ``evaluate_*`` re-derives latency and energy for
+a *fixed* assignment, so that e.g. the energy of a latency-optimised
+schedule can be compared against the energy-optimised one (paper Fig. 6).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+from .costmodel import CostTable, PUSpec, transition_cost
+from .op import FusedOp
+
+
+@dataclasses.dataclass
+class SeqSchedule:
+    """Sequential schedule: one PU per op along a chain."""
+
+    chain: list[int]               # op indices
+    assignment: list[str]          # PU per chain position
+    latency: float
+    energy: float
+    objective: str
+
+    def pu_of(self, op_idx: int) -> str:
+        return self.assignment[self.chain.index(op_idx)]
+
+
+@dataclasses.dataclass
+class BranchSchedule:
+    branch_ops: list[int]
+    assignment: list[str]
+    solo_latency: float            # before contention adjustment
+    adj_latency: float             # after SF adjustment
+    energy: float
+
+
+@dataclasses.dataclass
+class PhaseSchedule:
+    index: int
+    parallel: bool                 # whether branches co-execute
+    branches: list[BranchSchedule]
+    makespan: float
+    energy: float
+
+
+@dataclasses.dataclass
+class ParallelSchedule:
+    phases: list[PhaseSchedule]
+    latency: float
+    energy: float
+    objective: str
+
+    @property
+    def assignment(self) -> dict[int, str]:
+        out: dict[int, str] = {}
+        for ph in self.phases:
+            for br in ph.branches:
+                for o, p in zip(br.branch_ops, br.assignment):
+                    out[o] = p
+        return out
+
+    @property
+    def n_concurrent_phases(self) -> int:
+        return sum(1 for ph in self.phases if ph.parallel and len(ph.branches) > 1)
+
+
+@dataclasses.dataclass
+class ConcurrentStep:
+    """One step of a two-request concurrent schedule."""
+
+    ops: tuple[int | None, int | None]   # op index per request (None = idle)
+    pus: tuple[str | None, str | None]
+    cost: float
+
+
+@dataclasses.dataclass
+class ConcurrentSchedule:
+    steps: list[ConcurrentStep]
+    latency: float
+    energy: float
+    objective: str
+    mode: str  # "aligned" | "joint"
+
+    def assignment_of(self, request: int) -> list[tuple[int, str]]:
+        out = []
+        for st in self.steps:
+            if st.ops[request] is not None:
+                out.append((st.ops[request], st.pus[request]))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Fixed-assignment evaluation
+# ---------------------------------------------------------------------------
+
+
+def evaluate_sequential(
+    chain: Sequence[int],
+    assignment: Sequence[str],
+    ops: Sequence[FusedOp],
+    table: CostTable,
+    pus: Mapping[str, PUSpec],
+) -> tuple[float, float]:
+    """(latency, energy) of a fixed sequential assignment, including the
+    boundary H2D/D2H and inter-op transition costs of the execution graph."""
+    assert len(chain) == len(assignment)
+    lat = 0.0
+    eng = 0.0
+    first, last = chain[0], chain[-1]
+    e0 = table.require(first, assignment[0])
+    lat += e0.h2d
+    eng += e0.h2d * pus[assignment[0]].power_memory
+    for pos, (oi, p) in enumerate(zip(chain, assignment)):
+        e = table.require(oi, p)
+        lat += e.w
+        eng += e.w * e.power
+        if pos + 1 < len(chain):
+            oj, pk = chain[pos + 1], assignment[pos + 1]
+            tc = transition_cost(pus, table, oi, p, oj, pk)
+            lat += tc
+            eng += tc * pus[pk].power_memory
+    eN = table.require(last, assignment[-1])
+    lat += eN.d2h
+    eng += eN.d2h * pus[assignment[-1]].power_memory
+    return lat, eng
+
+
+def single_pu_cost(
+    chain: Sequence[int],
+    pu: str,
+    ops: Sequence[FusedOp],
+    table: CostTable,
+    pus: Mapping[str, PUSpec],
+) -> tuple[float, float] | None:
+    """(latency, energy) of monolithic execution on one PU; None if any op
+    is unsupported there (the paper's compile-failure case)."""
+    if any(not table.supported(oi, pu) for oi in chain):
+        return None
+    return evaluate_sequential(chain, [pu] * len(chain), ops, table, pus)

@@ -1,0 +1,382 @@
+"""Search engine (Algorithm 1, Stage 3).
+
+* ``dijkstra`` — textbook Dijkstra over the explicit execution graph
+  (node-weighted; node weights folded into incoming edges).
+* ``sequential_dp`` — the O(N K^2) topological-order recurrence (Eq. 1).
+  Tests assert both give identical costs.
+* ``solve_parallel`` — phase/branch partitioning + per-branch Dijkstra +
+  contention-adjusted makespans (§3.3.2).
+* ``solve_concurrent_aligned`` / ``solve_concurrent_joint`` — the two
+  multi-model modes (§3.2.2 / §3.3.3).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Mapping, Sequence
+
+from .contention import ContentionModel
+from .costmodel import CostTable, PUSpec, transition_cost
+from .graph import ExecGraph, build_sequential_graph, node_weight
+from .op import FusedOp, OpGraph
+from .schedule import (BranchSchedule, ConcurrentSchedule, ConcurrentStep,
+                       ParallelSchedule, PhaseSchedule, SeqSchedule,
+                       evaluate_sequential)
+
+# ---------------------------------------------------------------------------
+# Shortest path on the explicit graph
+# ---------------------------------------------------------------------------
+
+
+def dijkstra(g: ExecGraph) -> tuple[float, list[str]]:
+    """Shortest s->t path; returns (cost, PU assignment per chain position)."""
+    INF = float("inf")
+    dist: dict[int, float] = {g.S: 0.0}
+    prev: dict[int, int] = {}
+    heap: list[tuple[float, int]] = [(0.0, g.S)]
+    done: set[int] = set()
+    while heap:
+        d, u = heapq.heappop(heap)
+        if u in done:
+            continue
+        done.add(u)
+        if u == g.T:
+            break
+        for v, ew in g.adj.get(u, ()):  # edge weight + node weight of v
+            nd = d + ew + g.node_w.get(v, 0.0)
+            if nd < dist.get(v, INF):
+                dist[v] = nd
+                prev[v] = u
+                heapq.heappush(heap, (nd, v))
+    if g.T not in dist:
+        raise ValueError("no feasible path (some op unsupported everywhere?)")
+    # reconstruct
+    rev_ids = {v: k for k, v in g.node_ids.items()}
+    path: list[str] = []
+    cur = g.T
+    while cur != g.S:
+        cur = prev[cur]
+        if cur in rev_ids:
+            path.append(rev_ids[cur][1])
+    path.reverse()
+    return dist[g.T], path
+
+
+def sequential_dp(
+    chain: Sequence[int],
+    ops: Sequence[FusedOp],
+    table: CostTable,
+    pus: Mapping[str, PUSpec],
+    objective: str = "latency",
+) -> tuple[float, list[str]]:
+    """Eq. (1) dynamic program; identical optimum to ``dijkstra``."""
+    INF = float("inf")
+
+    def escale(pu: str) -> float:
+        return pus[pu].power_memory if objective == "energy" else 1.0
+
+    sup = [table.supported_pus(oi) for oi in chain]
+    # base case: cost(1, j) = H2D(O_1, P_j) + w(v_1j)
+    cost = {p: table.require(chain[0], p).h2d * escale(p)
+            + node_weight(table.require(chain[0], p), objective)
+            for p in sup[0]}
+    back: list[dict[str, str]] = []
+    for pos in range(1, len(chain)):
+        oi_prev, oi = chain[pos - 1], chain[pos]
+        ncost: dict[str, float] = {}
+        nback: dict[str, str] = {}
+        for pj in sup[pos]:
+            w = node_weight(table.require(oi, pj), objective)
+            best, barg = INF, None
+            for pk in sup[pos - 1]:
+                tc = transition_cost(pus, table, oi_prev, pk, oi, pj) * escale(pj)
+                c = cost[pk] + tc
+                if c < best:
+                    best, barg = c, pk
+            ncost[pj] = w + best
+            nback[pj] = barg
+        cost = ncost
+        back.append(nback)
+    # final D2H
+    lastpos = len(chain) - 1
+    best, bp = INF, None
+    for p in sup[lastpos]:
+        c = cost[p] + table.require(chain[lastpos], p).d2h * escale(p)
+        if c < best:
+            best, bp = c, p
+    # backtrack
+    assign = [bp]
+    for pos in range(len(chain) - 1, 0, -1):
+        bp = back[pos - 1][bp]
+        assign.append(bp)
+    assign.reverse()
+    return best, assign
+
+
+def solve_sequential(
+    chain: Sequence[int],
+    ops: Sequence[FusedOp],
+    table: CostTable,
+    pus: Mapping[str, PUSpec],
+    objective: str = "latency",
+    algorithm: str = "dijkstra",
+) -> SeqSchedule:
+    if algorithm == "dijkstra":
+        g = build_sequential_graph(chain, ops, table, pus, objective)
+        _, assign = dijkstra(g)
+    elif algorithm == "dp":
+        _, assign = sequential_dp(chain, ops, table, pus, objective)
+    else:
+        raise ValueError(algorithm)
+    lat, eng = evaluate_sequential(chain, assign, ops, table, pus)
+    return SeqSchedule(chain=list(chain), assignment=assign, latency=lat,
+                       energy=eng, objective=objective)
+
+
+# ---------------------------------------------------------------------------
+# Intra-model parallel search (§3.3.2)
+# ---------------------------------------------------------------------------
+
+
+def solve_parallel(
+    graph: OpGraph,
+    table: CostTable,
+    pus: Mapping[str, PUSpec],
+    contention: ContentionModel | None = None,
+    objective: str = "latency",
+) -> ParallelSchedule:
+    """Phase partition -> per-branch Dijkstra -> contention-adjusted makespan.
+
+    Per phase we also evaluate serialising all branches on the per-branch
+    optimal assignments and keep whichever is cheaper, so parallel
+    orchestration never regresses below the sequential schedule (paper
+    Table 3 reports parallel speedup >= sequential speedup everywhere).
+    """
+    contention = contention or ContentionModel()
+    phases_out: list[PhaseSchedule] = []
+    total_lat = 0.0
+    total_eng = 0.0
+    for phase in graph.phases():
+        brs: list[BranchSchedule] = []
+        for br in phase.branches:
+            s = solve_sequential(br.ops, graph.ops, table, pus, objective)
+            brs.append(BranchSchedule(
+                branch_ops=list(br.ops), assignment=s.assignment,
+                solo_latency=s.latency, adj_latency=s.latency, energy=s.energy))
+        if len(brs) > 1:
+            # contention adjustment: every op cost scaled by the max SF vs
+            # the PU set used by the *other* branches.
+            pu_sets = [set(b.assignment) for b in brs]
+            for bi, b in enumerate(brs):
+                others: set[str] = set().union(
+                    *(pu_sets[j] for j in range(len(brs)) if j != bi)) if len(brs) > 1 else set()
+                lat_adj = 0.0
+                eng_adj = 0.0
+                # re-walk the branch applying per-op SF; transitions unscaled
+                chain, assign = b.branch_ops, b.assignment
+                e0 = table.require(chain[0], assign[0])
+                lat_adj += e0.h2d
+                eng_adj += e0.h2d * pus[assign[0]].power_memory
+                for pos, (oi, p) in enumerate(zip(chain, assign)):
+                    e = table.require(oi, p)
+                    sf = contention.branch_factor(p, others)
+                    lat_adj += e.w * sf
+                    eng_adj += e.w * sf * e.power
+                    if pos + 1 < len(chain):
+                        tc = transition_cost(pus, table, oi, p,
+                                             chain[pos + 1], assign[pos + 1])
+                        lat_adj += tc
+                        eng_adj += tc * pus[assign[pos + 1]].power_memory
+                eN = table.require(chain[-1], assign[-1])
+                lat_adj += eN.d2h
+                eng_adj += eN.d2h * pus[assign[-1]].power_memory
+                b.adj_latency = lat_adj
+                b.energy = eng_adj
+            par_makespan = max(b.adj_latency for b in brs)
+            par_energy = sum(b.energy for b in brs)
+            seq_makespan = sum(b.solo_latency for b in brs)
+            # serialised energy: recompute without SF (solo energies)
+            seq_energy = 0.0
+            for b in brs:
+                _, e = evaluate_sequential(b.branch_ops, b.assignment,
+                                           graph.ops, table, pus)
+                seq_energy += e
+            key_par = par_makespan if objective == "latency" else par_energy
+            key_seq = seq_makespan if objective == "latency" else seq_energy
+            if key_par <= key_seq:
+                phases_out.append(PhaseSchedule(
+                    index=phase.index, parallel=True, branches=brs,
+                    makespan=par_makespan, energy=par_energy))
+                total_lat += par_makespan
+                total_eng += par_energy
+            else:
+                for b in brs:  # revert adjustment bookkeeping
+                    b.adj_latency = b.solo_latency
+                phases_out.append(PhaseSchedule(
+                    index=phase.index, parallel=False, branches=brs,
+                    makespan=seq_makespan, energy=seq_energy))
+                total_lat += seq_makespan
+                total_eng += seq_energy
+        else:
+            b = brs[0]
+            phases_out.append(PhaseSchedule(
+                index=phase.index, parallel=False, branches=brs,
+                makespan=b.solo_latency, energy=b.energy))
+            total_lat += b.solo_latency
+            total_eng += b.energy
+    return ParallelSchedule(phases=phases_out, latency=total_lat,
+                            energy=total_eng, objective=objective)
+
+
+# ---------------------------------------------------------------------------
+# Multi-model concurrent search (§3.2.2 / §3.3.3)
+# ---------------------------------------------------------------------------
+
+
+def _solo_w(table: CostTable, oi: int, pu: str) -> float:
+    return table.require(oi, pu).w
+
+
+def solve_concurrent_aligned(
+    chain0: Sequence[int], table0: CostTable,
+    chain1: Sequence[int], table1: CostTable,
+    pus: Mapping[str, PUSpec],
+    contention: ContentionModel | None = None,
+    objective: str = "latency",
+) -> ConcurrentSchedule:
+    """Aligned Dijkstra: both requests advance in lockstep (same-model pairs).
+
+    At each step the search selects a PU pair (d0, d1).  Same-PU step cost =
+    average of measured concurrent execution times; cross-PU = max of
+    (contention-adjusted) solo times.  Tails (unequal lengths) advance solo.
+    """
+    contention = contention or ContentionModel()
+    n = min(len(chain0), len(chain1))
+    steps: list[ConcurrentStep] = []
+    total = 0.0
+    energy = 0.0
+    for i in range(n):
+        o0, o1 = chain0[i], chain1[i]
+        best = None
+        for d0 in table0.supported_pus(o0):
+            t0 = _solo_w(table0, o0, d0)
+            p0 = table0.require(o0, d0).power
+            for d1 in table1.supported_pus(o1):
+                t1 = _solo_w(table1, o1, d1)
+                p1 = table1.require(o1, d1).power
+                step = contention.pair_step_cost(t0, d0, t1, d1)
+                cc0, cc1 = contention.co_exec(t0, d0, t1, d1)
+                # energy: each op runs for its concurrent duration at its
+                # PU's power (time-shared same-PU execution draws the PU's
+                # power once -> charge each op its solo share).
+                if d0 == d1:
+                    e = t0 * p0 + t1 * p1
+                else:
+                    e = cc0 * p0 + cc1 * p1
+                key = step if objective == "latency" else e
+                if best is None or key < best[0]:
+                    best = (key, step, e, d0, d1)
+        _, step_cost, step_energy, d0, d1 = best
+        steps.append(ConcurrentStep(ops=(o0, o1), pus=(d0, d1), cost=step_cost))
+        total += step_cost
+        energy += step_energy
+    # solo tail for the longer request
+    longer, table_l, idx = ((chain0, table0, 0) if len(chain0) > n
+                            else (chain1, table1, 1))
+    for i in range(n, len(longer)):
+        oi = longer[i]
+        cands = [(node_weight(table_l.require(oi, p), "latency"),
+                  table_l.require(oi, p).energy, p)
+                 for p in table_l.supported_pus(oi)]
+        key_i = 0 if objective == "latency" else 1
+        w, e, p = min(cands, key=lambda c: c[key_i])
+        ops = (oi, None) if idx == 0 else (None, oi)
+        pus_ = (p, None) if idx == 0 else (None, p)
+        steps.append(ConcurrentStep(ops=ops, pus=pus_, cost=w))
+        total += w
+        energy += e
+    return ConcurrentSchedule(steps=steps, latency=total, energy=energy,
+                              objective=objective, mode="aligned")
+
+
+def solve_concurrent_joint(
+    chain0: Sequence[int], table0: CostTable,
+    chain1: Sequence[int], table1: CostTable,
+    pus: Mapping[str, PUSpec],
+    contention: ContentionModel | None = None,
+    objective: str = "latency",
+) -> ConcurrentSchedule:
+    """Joint (i, j) Dijkstra: each request's progress tracked independently.
+
+    State (i, j) = completed op counts.  Transitions: advance both
+    (i+1, j+1), advance request 0 solo (i+1, j), or advance request 1 solo
+    (i, j+1) — allowing asymmetric completion with solo tails (paper
+    §3.2.2).
+    """
+    contention = contention or ContentionModel()
+    n0, n1 = len(chain0), len(chain1)
+    INF = float("inf")
+    dist: dict[tuple[int, int], float] = {(0, 0): 0.0}
+    prev: dict[tuple[int, int], tuple[tuple[int, int], ConcurrentStep, float]] = {}
+    heap: list[tuple[float, tuple[int, int]]] = [(0.0, (0, 0))]
+    done: set[tuple[int, int]] = set()
+
+    def step_options(i: int, j: int):
+        # (next_state, step, objective_key, energy)
+        if i < n0 and j < n1:
+            o0, o1 = chain0[i], chain1[j]
+            for d0 in table0.supported_pus(o0):
+                t0 = _solo_w(table0, o0, d0)
+                p0 = table0.require(o0, d0).power
+                for d1 in table1.supported_pus(o1):
+                    t1 = _solo_w(table1, o1, d1)
+                    p1 = table1.require(o1, d1).power
+                    step = contention.pair_step_cost(t0, d0, t1, d1)
+                    cc0, cc1 = contention.co_exec(t0, d0, t1, d1)
+                    e = (t0 * p0 + t1 * p1) if d0 == d1 else (cc0 * p0 + cc1 * p1)
+                    yield ((i + 1, j + 1),
+                           ConcurrentStep(ops=(o0, o1), pus=(d0, d1), cost=step),
+                           step if objective == "latency" else e, e)
+        if i < n0:
+            o0 = chain0[i]
+            for d0 in table0.supported_pus(o0):
+                ent = table0.require(o0, d0)
+                yield ((i + 1, j),
+                       ConcurrentStep(ops=(o0, None), pus=(d0, None), cost=ent.w),
+                       ent.w if objective == "latency" else ent.energy, ent.energy)
+        if j < n1:
+            o1 = chain1[j]
+            for d1 in table1.supported_pus(o1):
+                ent = table1.require(o1, d1)
+                yield ((i, j + 1),
+                       ConcurrentStep(ops=(None, o1), pus=(None, d1), cost=ent.w),
+                       ent.w if objective == "latency" else ent.energy, ent.energy)
+
+    target = (n0, n1)
+    while heap:
+        d, st = heapq.heappop(heap)
+        if st in done:
+            continue
+        done.add(st)
+        if st == target:
+            break
+        for nxt, step, key, e in step_options(*st):
+            nd = d + key
+            if nd < dist.get(nxt, INF):
+                dist[nxt] = nd
+                prev[nxt] = (st, step, e)
+                heapq.heappush(heap, (nd, nxt))
+    if target not in dist:
+        raise ValueError("joint search failed to reach target state")
+    # reconstruct
+    steps: list[ConcurrentStep] = []
+    energy = 0.0
+    cur = target
+    while cur != (0, 0):
+        st, step, e = prev[cur]
+        steps.append(step)
+        energy += e
+        cur = st
+    steps.reverse()
+    latency = sum(s.cost for s in steps)
+    return ConcurrentSchedule(steps=steps, latency=latency, energy=energy,
+                              objective=objective, mode="joint")

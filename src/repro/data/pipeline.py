@@ -1,0 +1,70 @@
+"""Deterministic synthetic token pipeline with per-host sharding and an
+exactly-resumable cursor.
+
+Real deployments swap ``SyntheticTokenSource`` for a tokenized corpus
+reader; everything downstream (sharding, cursor, checkpointing of the data
+position) is production behaviour:
+
+* determinism: batch ``i`` is a pure function of (seed, i) — restart-safe
+  and independent of worker count;
+* per-host sharding: each host materialises only its slice of the global
+  batch (``jax.process_index()`` striding), the standard multi-pod input
+  path;
+* resume: the cursor (= step index) lives in the checkpoint, so restart
+  continues the exact token stream.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass
+class DataConfig:
+    global_batch: int
+    seq_len: int
+    vocab: int
+    seed: int = 0
+    # stub-modality inputs (audio/vlm backbones): emit embeddings instead
+    embed_dim: int = 0
+    encdec: bool = False
+
+
+class SyntheticTokenSource:
+    """Batch i is fully determined by (seed, i)."""
+
+    def __init__(self, cfg: DataConfig, process_index: int | None = None,
+                 process_count: int | None = None):
+        self.cfg = cfg
+        self.pi = jax.process_index() if process_index is None else process_index
+        self.pc = jax.process_count() if process_count is None else process_count
+        if cfg.global_batch % self.pc:
+            raise ValueError("global batch must divide process count")
+        self.local_batch = cfg.global_batch // self.pc
+
+    def __call__(self, step: int) -> dict:
+        """Local shard of global batch ``step``."""
+        c = self.cfg
+        rng = np.random.default_rng(
+            np.random.SeedSequence([c.seed, step, self.pi]))
+        out: dict = {}
+        # a Markov-ish stream so the loss actually decreases in examples
+        toks = rng.integers(0, c.vocab, (self.local_batch, c.seq_len + 1),
+                            dtype=np.int32)
+        toks[:, 1::2] = (toks[:, 0:-1:2] * 31 + 7) % c.vocab  # learnable pairs
+        if c.embed_dim:
+            out["embeds"] = rng.standard_normal(
+                (self.local_batch, c.seq_len, c.embed_dim)).astype(np.float32) * 0.1
+        if c.encdec or not c.embed_dim:
+            out["tokens"] = toks[:, :-1]
+        out["labels"] = toks[:, 1:]
+        return out
+
+    def checkpoint_state(self, step: int) -> dict:
+        return {"step": step, "seed": self.cfg.seed}
+
+    @staticmethod
+    def resume_step(state: dict) -> int:
+        return int(state["step"])

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the compute hot-spots of the model zoo.
+
+The paper (BIDENT) optimizes *scheduling*, not kernels, but its three
+CPU-affine operator classes (Fig. 2) map to TPU compute hot-spots that we
+restructure MXU-natively (DESIGN.md §5):
+
+* ``flash_attention`` — blockwise causal GQA attention (GEMM class);
+* ``ssd_scan``        — chunked Mamba-2/mLSTM recurrence (CumSum class);
+* ``moe_gather``      — capacity-padded fused expert GLU (Gather class).
+
+Each kernel is ``pl.pallas_call`` + explicit BlockSpec VMEM tiling with a
+jit wrapper in ``ops.py`` and a pure-jnp oracle in ``ref.py``; interpret-
+mode sweep tests in ``tests/test_kernels.py`` assert kernel == oracle.
+"""
+from . import ops, ref  # noqa: F401
+from .ops import (expert_glu, flash_attention, moe_dispatch_combine,  # noqa
+                  ssd_scan)

@@ -1,0 +1,59 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On the TPU target these dispatch to the compiled kernels; on this CPU
+container they run in ``interpret=True`` mode (the kernel body executed
+in Python), which is how the sweep tests validate them against ``ref.py``.
+``default_interpret()`` picks automatically from the backend.
+"""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention as _flash_attention
+from .moe_gather import (dispatch_indices, expert_glu as _expert_glu,
+                         moe_dispatch_combine as _moe_dispatch_combine)
+from .ssd_scan import ssd_scan as _ssd_scan
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+
+
+def ssd_scan(c, b, v, log_a, *, initial_state=None, chunk: int = 256,
+             interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _ssd_scan(c, b, v, log_a, initial_state=initial_state,
+                     chunk=chunk, interpret=interpret)
+
+
+def expert_glu(x, w_up, w_down, *, block_m: int = 128, block_f: int = 256,
+               interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _expert_glu(x, w_up, w_down, block_m=block_m, block_f=block_f,
+                       interpret=interpret)
+
+
+def moe_dispatch_combine(x, gate_idx, gate_vals, w_up, w_down, *,
+                         capacity: int, block_m: int = 128,
+                         block_f: int = 256, interpret: bool | None = None):
+    if interpret is None:
+        interpret = default_interpret()
+    return _moe_dispatch_combine(x, gate_idx, gate_vals, w_up, w_down,
+                                 capacity=capacity, block_m=block_m,
+                                 block_f=block_f, interpret=interpret)
+
+
+__all__ = ["flash_attention", "ssd_scan", "expert_glu",
+           "moe_dispatch_combine", "dispatch_indices", "default_interpret"]

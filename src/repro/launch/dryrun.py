@@ -1,0 +1,235 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh ((16,16) single-pod / (2,16,16) multi-pod),
+  2. builds ShapeDtypeStruct stand-ins for params/optimizer/batch/cache,
+  3. jit-lowers the train/prefill/serve step with explicit in/out
+     shardings and compiles it,
+  4. records memory_analysis() (proves it fits), cost_analysis()
+     (FLOPs/bytes), and the collective-byte totals parsed from the
+     compiled HLO (all-gather/all-reduce/reduce-scatter/all-to-all/
+     collective-permute) for the roofline (EXPERIMENTS.md §Roofline).
+
+Results accumulate in a JSON file so the 40-cell sweep is resumable.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..configs import ALL_ARCHS, get_config
+from ..models import model as M
+from ..optim import adamw
+from ..serving import engine as E
+from ..sharding import Policy
+from ..train import trainer as T
+from .mesh import make_production_mesh
+from .roofline import collective_bytes_hlo, count_jaxpr
+from .specs import (HBM_BW, ICI_BW, PEAK_FLOPS, SHAPE_CELLS, ShapeCell,
+                    cell_applicable, input_specs, model_flops)
+
+def lower_cell(arch: str, shape: str, multi_pod: bool,
+               fsdp: bool = True, microbatches: int = 1,
+               overrides: dict | None = None,
+               sp: bool = False, serve_layout: str | None = None,
+               train_layout: str | None = None):
+    """Lower + compile one cell; returns the result record.
+
+    ``sp`` / ``serve_layout`` select the §Perf hillclimb layouts
+    (sharding.make_rules); the defaults are the paper-faithful baseline.
+    """
+    cfg = get_config(arch)
+    cell = SHAPE_CELLS[shape]
+    ok, why = cell_applicable(cfg, cell)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "sp": sp, "serve_layout": serve_layout,
+           "train_layout": train_layout}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    from ..sharding import make_rules
+    if serve_layout in ("1d", "2d"):
+        fsdp = False        # params stationary; no per-step FSDP gathers
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    policy = Policy(mesh=mesh, fsdp=fsdp, overrides=overrides or {},
+                    rules=make_rules(sp=sp, serve_layout=serve_layout,
+                                     train_layout=train_layout))
+    n_chips = int(np.prod(list(mesh.shape.values())))
+    params_shapes = M.param_shapes(cfg)
+    specs = input_specs(cfg, cell)
+    t0 = time.time()
+
+    if cell.kind == "train":
+        # bf16 optimizer state for the giant configs (DESIGN.md §6)
+        state_dtype = ("bfloat16" if cfg.param_count() > 5e10 else "float32")
+        tc = T.TrainConfig(microbatches=microbatches,
+                           opt=adamw.AdamWConfig(state_dtype=state_dtype))
+        opt_shapes = jax.eval_shape(
+            lambda p: adamw.init_state(tc.opt, p), params_shapes)
+        step = T.jit_train_step(cfg, tc, policy, params_shapes,
+                                specs["batch"])
+        raw = T.make_train_step(cfg, tc, policy)
+        with mesh:
+            jxp = jax.make_jaxpr(raw)(params_shapes, opt_shapes, specs["batch"])
+            lowered = step.lower(params_shapes, opt_shapes, specs["batch"])
+    elif cell.kind == "prefill":
+        step = E.jit_prefill(cfg, policy, params_shapes, specs["batch"],
+                             max_len=specs["max_len"])
+        with mesh:
+            jxp = jax.make_jaxpr(
+                lambda p, b: M.prefill(cfg, p, b, max_len=specs["max_len"],
+                                       shd=policy))(params_shapes, specs["batch"])
+            lowered = step.lower(params_shapes, specs["batch"])
+    else:  # decode
+        step = E.jit_decode_step(cfg, policy, params_shapes, specs["cache"],
+                                 specs["batch"])
+        with mesh:
+            jxp = jax.make_jaxpr(
+                lambda p, c, b: M.decode_step(cfg, p, c, b, policy))(
+                params_shapes, specs["cache"], specs["batch"])
+            lowered = step.lower(params_shapes, specs["cache"],
+                                 specs["batch"])
+    jcost = count_jaxpr(jxp)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes_hlo(hlo)
+
+    # XLA cost_analysis counts while bodies ONCE (see roofline.py), so the
+    # authoritative FLOP/byte totals come from the jaxpr counter (global,
+    # scan-multiplied); per-chip = /n_chips under even sharding.  The HLO
+    # numbers are kept as diagnostics.
+    flops = jcost["flops"] / n_chips
+    bytes_acc = jcost["bytes"] / n_chips
+    hlo_flops_once = float(cost.get("flops", 0.0))
+    coll_total = sum(coll.values())
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_acc / HBM_BW
+    t_coll = coll_total / ICI_BW
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, cell)
+    mf_per_chip = mf / n_chips
+
+    rec.update(
+        status="ok",
+        n_chips=n_chips,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        bytes_per_device=int(getattr(mem, "temp_size_in_bytes", 0)
+                             + getattr(mem, "argument_size_in_bytes", 0)
+                             + getattr(mem, "output_size_in_bytes", 0)),
+        temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+        arg_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+        out_bytes=int(getattr(mem, "output_size_in_bytes", 0)),
+        gen_code_bytes=int(getattr(mem, "generated_code_size_in_bytes", 0)),
+        flops_per_chip=flops,
+        bytes_per_chip=bytes_acc,
+        hlo_flops_body_once=hlo_flops_once,
+        collective_bytes_per_chip=coll_total,
+        collectives=coll,
+        roofline={
+            "compute_s": t_compute,
+            "memory_s": t_memory,
+            "collective_s": t_coll,
+            "dominant": dominant,
+        },
+        model_flops_total=mf,
+        model_flops_per_chip=mf_per_chip,
+        useful_flop_ratio=(mf_per_chip / flops) if flops else None,
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--fsdp", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence-parallel residual activations (train)")
+    ap.add_argument("--serve-layout", default=None,
+                    choices=["legacy", "1d", "2d"],
+                    help="decode-path layout (perf hillclimb)")
+    ap.add_argument("--train-layout", default=None, choices=["tp", "dp"],
+                    help="train-path layout (perf hillclimb)")
+    ap.add_argument("--out", default="dryrun_results.json")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute cells already in the results file")
+    args = ap.parse_args()
+
+    results = {}
+    if os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+
+    archs = ALL_ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPE_CELLS) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                key = f"{arch}|{shape}|{'2x16x16' if mp else '16x16'}"
+                if key in results and results[key].get("status") in ("ok", "skipped") \
+                        and not args.force:
+                    print(f"[cached] {key}")
+                    continue
+                print(f"[lower+compile] {key} ...", flush=True)
+                try:
+                    rec = lower_cell(arch, shape, mp, fsdp=bool(args.fsdp),
+                                     microbatches=args.microbatches,
+                                     sp=args.sp,
+                                     serve_layout=args.serve_layout,
+                                     train_layout=args.train_layout)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if mp else "16x16",
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                results[key] = rec
+                with open(args.out, "w") as f:
+                    json.dump(results, f, indent=1)
+                if rec["status"] == "ok":
+                    r = rec["roofline"]
+                    print(f"  ok: {rec['compile_s']}s compile, "
+                          f"{rec['bytes_per_device']/2**30:.2f} GiB/dev, "
+                          f"dominant={r['dominant']} "
+                          f"(c={r['compute_s']*1e3:.2f}ms m={r['memory_s']*1e3:.2f}ms "
+                          f"coll={r['collective_s']*1e3:.2f}ms)", flush=True)
+                else:
+                    print(f"  {rec['status']}: {rec.get('reason', rec.get('error'))}",
+                          flush=True)
+
+    n_ok = sum(1 for r in results.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in results.values() if r["status"] == "skipped")
+    n_err = sum(1 for r in results.values() if r["status"] == "error")
+    print(f"\n== dry-run summary: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"(of {len(results)} cells) ==")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,287 @@
+"""Roofline term extraction that survives scan-over-layers.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE (verified
+in tests), so any scanned-layers model under-reports FLOPs/bytes by ~L and
+collective bytes likewise.  Two fixes:
+
+* ``count_jaxpr``   — walks the step function's jaxpr, multiplying scan
+  bodies by their trip counts.  FLOPs are exact (dot_general/conv algebra);
+  bytes use a fusion model: anchor ops (dot/conv/gather/scatter/reduce/
+  carried state) count input+output traffic, elementwise/layout ops count
+  as fused (0) — a deliberate approximation documented in EXPERIMENTS.md.
+  Totals are GLOBAL (pre-partitioning); per-chip = /n_chips assuming even
+  sharding.
+
+* ``collective_bytes_hlo`` — parses the compiled HLO *per computation*,
+  multiplies collectives inside while bodies by the trip count recovered
+  from the loop condition's comparison constant.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# jaxpr flop/byte counter
+# ---------------------------------------------------------------------------
+
+_ELTWISE_FLOPS_ONLY = True
+
+
+def _aval_bytes(aval) -> float:
+    shape = getattr(aval, "shape", ())
+    dt = getattr(aval, "dtype", None)
+    if dt is None:
+        return 0.0
+    return float(int(np.prod(shape)) if shape else 1) * np.dtype(dt).itemsize
+
+
+def _aval_size(aval) -> float:
+    shape = getattr(aval, "shape", ())
+    return float(int(np.prod(shape))) if shape else 1.0
+
+
+def _dot_flops(eqn) -> float:
+    # 2 * prod(out_shape) * contraction size
+    out = eqn.outvars[0].aval
+    dims = eqn.params["dimension_numbers"]
+    (lc, rc), _ = dims
+    lhs = eqn.invars[0].aval
+    k = 1
+    for d in lc:
+        k *= lhs.shape[d]
+    return 2.0 * _aval_size(out) * k
+
+
+def _conv_flops(eqn) -> float:
+    out = eqn.outvars[0].aval
+    rhs = eqn.invars[1].aval
+    # per output element: 2 * (kernel spatial x in-channels/groups)
+    per = 2.0 * float(np.prod(rhs.shape[:-1])) if rhs.shape else 2.0
+    # rhs layout varies; use total kernel size / out_channels
+    per = 2.0 * float(np.prod(rhs.shape)) / max(out.shape[-1], 1)
+    return _aval_size(out) * per
+
+
+ANCHORS = {"dot_general", "conv_general_dilated", "gather", "scatter",
+           "scatter-add", "scatter_add", "dynamic_slice",
+           "dynamic_update_slice", "reduce_sum", "reduce_max", "reduce_min",
+           "sort", "top_k", "fft", "cumsum", "cumlogsumexp", "argmax",
+           "argmin", "iota"}
+
+
+def count_jaxpr(jaxpr) -> dict[str, float]:
+    """Returns {'flops': ..., 'bytes': ...} with scan trip multiplication."""
+    return _count(jaxpr.jaxpr if hasattr(jaxpr, "jaxpr") else jaxpr)
+
+
+def _count(jx) -> dict[str, float]:
+    flops = 0.0
+    byts = 0.0
+    for eqn in jx.eqns:
+        name = eqn.primitive.name
+        sub = None
+        mult = 1.0
+        if name == "scan":
+            sub = eqn.params["jaxpr"]
+            mult = float(eqn.params.get("length", 1))
+        elif name == "while":
+            sub = eqn.params["body_jaxpr"]
+            mult = 1.0  # unknown statically; models use scan
+        elif name == "cond":
+            branches = eqn.params["branches"]
+            costs = [_count(b.jaxpr) for b in branches]
+            flops += max(c["flops"] for c in costs)
+            byts += max(c["bytes"] for c in costs)
+            continue
+        elif name in ("pjit", "closed_call", "remat", "remat2", "checkpoint",
+                      "custom_jvp_call", "custom_vjp_call",
+                      "custom_vjp_call_jaxpr", "custom_jvp_call_jaxpr"):
+            sub = eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr") \
+                or eqn.params.get("fun_jaxpr")
+            mult = 1.0
+        if sub is not None:
+            c = _count(sub.jaxpr if hasattr(sub, "jaxpr") else sub)
+            flops += mult * c["flops"]
+            byts += mult * c["bytes"]
+            continue
+        out_avals = [v.aval for v in eqn.outvars if hasattr(v, "aval")]
+        in_avals = [v.aval for v in eqn.invars if hasattr(v, "aval")]
+        if name == "dot_general":
+            flops += _dot_flops(eqn)
+            byts += sum(map(_aval_bytes, in_avals)) + sum(map(_aval_bytes, out_avals))
+        elif name == "conv_general_dilated":
+            flops += _conv_flops(eqn)
+            byts += sum(map(_aval_bytes, in_avals)) + sum(map(_aval_bytes, out_avals))
+        elif name in ANCHORS:
+            flops += sum(map(_aval_size, out_avals))
+            byts += sum(map(_aval_bytes, in_avals)) + sum(map(_aval_bytes, out_avals))
+        else:
+            # elementwise / layout: fused — FLOPs counted, bytes fused away
+            flops += sum(map(_aval_size, out_avals))
+    return {"flops": flops, "bytes": byts}
+
+
+# ---------------------------------------------------------------------------
+# while-aware collective parser over compiled HLO text
+# ---------------------------------------------------------------------------
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(
+    r"(bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|u64|pred|c64|c128|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(.*\{\s*$")
+_WHILE_RE = re.compile(r"while\(.*?\).*?condition=(%?[\w\.\-_]+).*?body=(%?[\w\.\-_]+)")
+_CONST_CMP = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    depth = 0
+    for line in hlo.splitlines():
+        s = line.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(s.strip())
+            if m:
+                cur = m.group(1).lstrip("%")
+                comps[cur] = []
+                depth = 1
+            continue
+        depth += s.count("{") - s.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(s)
+    return comps
+
+
+def _line_shape_bytes(line: str) -> float:
+    shapes = _SHAPE_RE.findall(line)
+    if not shapes:
+        return 0.0
+    sizes = []
+    for dt, dims in shapes:
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        sizes.append(n * _DTYPE_BYTES.get(dt, 4))
+    return float(max(sizes))
+
+
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 2
+
+
+def _wire_factor(op: str, line: str) -> float:
+    """Per-chip wire bytes as a multiple of the op's printed (output)
+    shape, for a ring implementation over a group of size n:
+
+      all-reduce      2(n-1)/n x tensor     (reduce-scatter + all-gather)
+      all-gather      (n-1)/n  x output     (output printed full)
+      reduce-scatter  (n-1)    x output     (output printed as the shard)
+      all-to-all      (n-1)/n  x tensor
+      collective-permute  1    x tensor
+    """
+    n = _group_size(line)
+    if op == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if op == "all-gather":
+        return (n - 1) / n
+    if op == "reduce-scatter":
+        return float(n - 1)
+    if op == "all-to-all":
+        return (n - 1) / n
+    return 1.0
+
+
+def collective_bytes_hlo(hlo: str) -> dict[str, float]:
+    comps = _split_computations(hlo)
+
+    # trip count of a while: the comparison constant in its condition
+    def trip_count(cond_name: str) -> float:
+        lines = comps.get(cond_name, [])
+        for ln in lines:
+            if "compare" in ln:
+                m = _CONST_CMP.search(ln)
+                if m:
+                    return float(m.group(1))
+        # fall back: largest constant in the condition computation
+        best = 1.0
+        for ln in lines:
+            for m in _CONST_CMP.finditer(ln):
+                best = max(best, float(m.group(1)))
+        return best
+
+    memo: dict[str, dict[str, float]] = {}
+
+    def comp_cost(name: str) -> dict[str, float]:
+        if name in memo:
+            return memo[name]
+        memo[name] = {k: 0.0 for k in COLLECTIVE_OPS}  # cycle guard
+        total = {k: 0.0 for k in COLLECTIVE_OPS}
+        for ln in comps.get(name, []):
+            s = ln.strip()
+            m = _WHILE_RE.search(s)
+            if m and " while(" in s.replace("= while(", " while("):
+                cond, body = m.group(1).lstrip("%"), m.group(2).lstrip("%")
+                t = trip_count(cond)
+                sub = comp_cost(body)
+                for k in COLLECTIVE_OPS:
+                    total[k] += t * sub[k]
+                continue
+            mm = re.search(r"=\s*(?:\([^)]*\)|\S+)\s+(\S+)\(", s)
+            if not mm:
+                continue
+            op = mm.group(1)
+            for c in COLLECTIVE_OPS:
+                if op == c or op.startswith(c + "-start") or op.startswith(c + "."):
+                    total[c] += _line_shape_bytes(s) * _wire_factor(c, s)
+                    break
+            else:
+                # fusions/calls into other computations: calls=%name
+                cm = re.search(r"(?:calls|to_apply)=(%?[\w\.\-_]+)", s)
+                if cm:
+                    sub = comp_cost(cm.group(1).lstrip("%"))
+                    for k in COLLECTIVE_OPS:
+                        total[k] += sub[k]
+        memo[name] = total
+        return total
+
+    # entry computation: the one named like ENTRY or main
+    entry = None
+    for ln in hlo.splitlines():
+        if ln.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+(%?[\w\.\-_]+)", ln)
+            if m:
+                entry = m.group(1).lstrip("%")
+            break
+    if entry is None or entry not in comps:
+        # aggregate everything once as fallback
+        total = {k: 0.0 for k in COLLECTIVE_OPS}
+        for name in comps:
+            c = comp_cost(name)
+            for k in COLLECTIVE_OPS:
+                total[k] += c[k]
+        return total
+    return comp_cost(entry)

@@ -1,0 +1,80 @@
+"""Top-k gradient compression with error feedback (DESIGN.md §6).
+
+At 1000+-node scale, gradient synchronization over DCN between pods is
+the cross-pod bottleneck; magnitude top-k sparsification with an error-
+feedback accumulator (Stich et al., "Sparsified SGD with Memory") cuts
+the synchronized bytes by 1/k_frac while provably preserving
+convergence:
+
+    e_t   <- e_{t-1} + g_t          (accumulate into the residual)
+    s_t   <- topk_mask(e_t)         (what gets synchronized)
+    e_t   <- e_t - s_t              (what stays local)
+
+The compressed tensor here is materialised densely (mask * values) —
+the wire format on a real pod is (indices, values); the *math* (what
+the optimizer sees, what the residual carries) is exactly the deployed
+algorithm, which is what the correctness tests pin down.
+
+Off by default; enable via ``TrainConfig(compress=CompressionConfig(...))``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    k_frac: float = 0.1          # fraction of entries synchronized
+    min_size: int = 4096         # leaves smaller than this pass through
+
+
+def init_residual(params) -> Any:
+    """Error-feedback accumulators, one per parameter leaf (fp32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _topk_mask(x: jax.Array, k_frac: float) -> jax.Array:
+    """Boolean mask keeping the k largest-magnitude entries of ``x``."""
+    n = x.size
+    k = max(int(n * k_frac), 1)
+    flat = jnp.abs(x.reshape(-1))
+    # threshold = k-th largest magnitude; ties keep >= threshold (may pass
+    # marginally more than k entries — harmless for error feedback)
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return (jnp.abs(x) >= thresh) & (thresh > 0)
+
+
+def compress(cfg: CompressionConfig, grads, residual):
+    """(synchronized_grads, new_residual).
+
+    Leaves below ``min_size`` are synchronized exactly (their bytes are
+    negligible and biasing tiny norm/bias vectors hurts).
+    """
+    def one(g, e):
+        g32 = g.astype(jnp.float32)
+        if g.size < cfg.min_size or cfg.k_frac >= 1.0:
+            return g32, jnp.zeros_like(e)
+        acc = e + g32
+        mask = _topk_mask(acc, cfg.k_frac)
+        sent = jnp.where(mask, acc, 0.0)
+        return sent, acc - sent
+
+    out = jax.tree.map(one, grads, residual)
+    sent = jax.tree.map(lambda t: t[0], out,
+                        is_leaf=lambda t: isinstance(t, tuple))
+    new_res = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+    return sent, new_res
+
+
+def compression_ratio(cfg: CompressionConfig, params) -> float:
+    """Fraction of gradient bytes actually synchronized."""
+    total = kept = 0
+    for p in jax.tree.leaves(params):
+        total += p.size
+        kept += p.size if p.size < cfg.min_size else int(p.size * cfg.k_frac)
+    return kept / max(total, 1)

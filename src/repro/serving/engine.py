@@ -1,0 +1,129 @@
+"""Batched serving engine: prefill + decode with sharded KV/state caches.
+
+``jit_decode_step`` / ``jit_prefill`` are what the dry-run lowers for the
+``decode_*`` / ``prefill_*`` shape cells.  The engine's ``generate`` drives
+real batched requests for the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import model as M
+from ..sharding import Policy
+from ..train.trainer import batch_pspecs, param_shardings
+
+# cache leaf name -> logical axes for its *last* dims (leading stack dims
+# padded with None).  kv-head and state-head dims shard over the model
+# axis (guarded by divisibility), batch over data(+pod).
+_CACHE_AXES: dict[str, tuple] = {
+    "k": ("batch", "kv_len", "heads", None),
+    "v": ("batch", "kv_len", "heads", None),
+    "xk": ("batch", "kv_len", "heads", None),
+    "xv": ("batch", "kv_len", "heads", None),
+    "c_kv": ("batch", "kv_len", None),
+    "k_pe": ("batch", "kv_len", None),
+    "ssm": ("batch", "heads", None, None),
+    "conv": ("batch", None, "ff"),
+    "mlstm": ("batch", "heads", None, None),
+    "slstm": ("batch", "heads", None),
+    "len": (),
+}
+
+
+def cache_pspecs(policy: Policy, cache_tree) -> Any:
+    def spec(path, leaf):
+        name = None
+        for p in reversed(path):
+            if hasattr(p, "key"):
+                name = str(p.key)
+                break
+        axes = _CACHE_AXES.get(name, ())
+        ndim = len(leaf.shape)
+        ax = axes[-ndim:] if len(axes) > ndim else axes
+        ax = (None,) * (ndim - len(ax)) + tuple(ax)
+        return policy.param_spec(leaf.shape, ax)
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def cache_shardings(policy: Policy, cache_tree) -> Any:
+    mesh = policy.mesh
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        cache_pspecs(policy, cache_tree))
+
+
+def jit_decode_step(cfg, policy: Policy, params_shapes, cache_shapes,
+                    batch_shapes):
+    """serve_step: one new token against an existing cache."""
+    mesh = policy.mesh
+    pshard = param_shardings(policy, params_shapes)
+    cshard = cache_shardings(policy, cache_shapes)
+    bshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          batch_pspecs(policy, batch_shapes))
+    B = _batch_of(batch_shapes)
+    lshard = NamedSharding(
+        mesh, policy.guarded_spec((B, 1, cfg.vocab), "batch", None, "vocab"))
+
+    def step(params, cache, batch):
+        return M.decode_step(cfg, params, cache, batch, policy)
+
+    return jax.jit(step, in_shardings=(pshard, cshard, bshard),
+                   out_shardings=(lshard, cshard), donate_argnums=(1,))
+
+
+def jit_prefill(cfg, policy: Policy, params_shapes, batch_shapes,
+                max_len: int):
+    mesh = policy.mesh
+    pshard = param_shardings(policy, params_shapes)
+    bshard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          batch_pspecs(policy, batch_shapes))
+    cache_shapes = jax.eval_shape(
+        lambda: M.init_cache(cfg, _batch_of(batch_shapes), max_len))
+    cshard = cache_shardings(policy, cache_shapes)
+    B = _batch_of(batch_shapes)
+    lshard = NamedSharding(
+        mesh, policy.guarded_spec((B, 1, cfg.vocab), "batch", None, "vocab"))
+
+    def pre(params, batch):
+        return M.prefill(cfg, params, batch, max_len=max_len, shd=policy)
+
+    return jax.jit(pre, in_shardings=(pshard, bshard),
+                   out_shardings=(lshard, cshard))
+
+
+def _batch_of(batch_shapes) -> int:
+    leaf = jax.tree.leaves(batch_shapes)[0]
+    return leaf.shape[0]
+
+
+# ---------------------------------------------------------------------------
+# simple engine for the examples (greedy decode, CPU-friendly)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Engine:
+    cfg: Any
+    params: Any
+    policy: Policy = dataclasses.field(default_factory=Policy)
+
+    def generate(self, prompt_tokens, max_new: int = 16,
+                 max_len: int | None = None):
+        """Greedy batched generation.  prompt_tokens: (B, T) int32."""
+        B, T = prompt_tokens.shape
+        max_len = max_len or (T + max_new)
+        logits, cache = M.prefill(self.cfg, self.params,
+                                  {"tokens": prompt_tokens},
+                                  max_len=max_len, shd=self.policy)
+        outs = []
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        step = jax.jit(lambda p, c, b: M.decode_step(self.cfg, p, c, b,
+                                                     self.policy))
+        for _ in range(max_new):
+            outs.append(tok)
+            logits, cache = step(self.params, cache, {"tokens": tok})
+            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return jnp.concatenate(outs, axis=1)

@@ -1,0 +1,255 @@
+"""Logical-axis sharding policy.
+
+Model code annotates tensors with *logical* axis names; the policy maps
+them to mesh axes.  ``Policy.constrain`` is a no-op without a mesh, so the
+same model code runs single-device smoke tests and 512-chip dry-runs.
+
+The default rules implement DP(+pod) x TP with optional FSDP (ZeRO-3-style
+parameter sharding over the data axis) and EP (experts over the model
+axis).  The BIDENT autoshard pass (``repro.core.autoshard``) emits
+*overrides* to these rules — that is how the paper's per-operator PU
+assignment becomes a per-operator sharding assignment on TPU.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (None = replicated). A tuple value shards one
+# logical axis over several mesh axes.
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),     # pure DP composes pod x data
+    "seq": None,                  # sequence replicated by default (SP opts in)
+    "seq_shard": ("pod", "data"), # sequence-parallel alternative for act.s
+    "seq_act": None,              # residual-stream seq axis: "model" = Megatron-SP
+    "embed": None,
+    "heads": "model",
+    "kv_heads": None,             # kv heads replicated (GQA kv < TP degree)
+    "head_dim": None,
+    "ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "kv_len": None,               # KV-cache seq axis (serving layouts shard it)
+    "decode_q_heads": "model",    # q heads in the decode attention region
+    "attn_o_feat": "model",       # flattened attn output features (pre-wo)
+    "mla_o_heads": "model",       # MLA latent attn output heads (pre-w_uv)
+    "kv_heads_p": None,           # wk/wv output features (serve layouts shard)
+    "state": None,
+    # parameter FSDP axis: weights' non-TP dim sharded over data
+    "fsdp": "data",
+}
+
+
+def make_rules(*, sp: bool = False, serve_layout: str | None = None,
+               train_layout: str | None = None) -> dict[str, object]:
+    """Rule presets found by the §Perf hillclimb (EXPERIMENTS.md).
+
+    sp: Megatron-style sequence parallelism — residual-stream activations
+        (the ``seq_act`` sites between attention/MLP regions) shard their
+        seq dim over the model axis, turning TP activation all-reduces
+        into reduce-scatter/all-gather pairs and cutting normalization /
+        elementwise memory traffic by the TP degree.
+
+    train_layout: "dp" folds the model axis into batch (pure DP+FSDP) —
+        the right call for <~8B models where TP only buys activation
+        all-reduces (§Perf iteration T2).
+
+    serve_layout: decode-path layouts:
+      * "1d"  — small models (fit TP-replicated): batch over data, KV-cache
+        seq over model; params TP over model, replicated over data (no
+        per-step FSDP gathers).
+      * "2d"  — big models (>=~70B): batch replicated, KV-cache seq over
+        (data x model) = full 256-way, weights stationary 2D-sharded
+        (d_in over data via FSDP + d_out over model).  Per-step collective
+        traffic is O(activations), never O(params) or O(cache).
+    """
+    rules = dict(DEFAULT_RULES)
+    if sp:
+        rules["seq_act"] = "model"
+    if train_layout == "dp":
+        # pure data parallelism for small models (<~8B on 256 chips): the
+        # model axis folds into batch; no TP -> no per-layer activation
+        # all-reduces; gradient sync (O(params)) is the only collective.
+        # batch folds over (data x model); the pod axis joins through
+        # FSDP + the hierarchical gradient all-reduce (global batch =
+        # n_chips/pod per pod keeps divisibility on the 2-pod mesh)
+        rules["batch"] = ("data", "model")
+        rules["heads"] = None
+        rules["ff"] = None
+        rules["vocab"] = None
+        rules["attn_o_feat"] = None
+        rules["kv_heads_p"] = None
+        rules["fsdp"] = ("pod", "data", "model")   # ZeRO-3 over all chips
+    elif train_layout not in (None, "tp"):
+        raise ValueError(train_layout)
+    if serve_layout == "1d":
+        rules["kv_len"] = "model"
+        rules["kv_heads_p"] = "model"
+    elif serve_layout == "2d":
+        # weight-stationary 2D: params shard statically over BOTH mesh
+        # axes through their logical dims (never re-gathered per step);
+        # KV cache seq shards 256-way; batch replicates (decode
+        # activations are tiny).  Per-step collective traffic becomes
+        # O(activations) instead of O(params + cache).
+        rules["batch"] = None
+        rules["kv_len"] = ("data", "model")
+        rules["ff"] = ("data", "model")
+        rules["vocab"] = ("data", "model")
+        rules["experts"] = ("data", "model")
+        rules["kv_heads_p"] = ("data", "model")
+        # q is tiny at decode: replicate it so GSPMD contracts against the
+        # seq-sharded cache locally instead of gathering the cache
+        rules["decode_q_heads"] = None
+        # flattened attn output shards 2D to match wo's stationary 2D
+        # layout (otherwise GSPMD re-gathers wo every layer)
+        rules["attn_o_feat"] = ("data", "model")
+    elif serve_layout not in (None, "legacy"):
+        raise ValueError(serve_layout)
+    return rules
+
+
+
+
+def _fit_axis(mesh, dim: int, ax):
+    """Largest suffix of the axis tuple whose size divides ``dim``.
+
+    ("data","model") degrades to ("model",) then to None instead of
+    jumping straight to replicated — e.g. qwen2-vl's d_ff=29568 divides
+    the 16-way model axis but not the 256-way (data x model) product.
+    """
+    if ax is None:
+        return None
+    axes = ax if isinstance(ax, tuple) else (ax,)
+    for i in range(len(axes)):
+        cand = axes[i:]
+        size = 1
+        for m in cand:
+            size *= mesh.shape[m] if mesh else 1
+        if size > 1 and dim % size == 0:
+            return cand if len(cand) > 1 else cand[0]
+    return None
+
+def _dedup_axes(axes: list) -> list:
+    """A mesh axis may appear at most once per PartitionSpec: later dims
+    that re-request an already-claimed axis fall back to replicated (the
+    first claim wins).  Layout presets can therefore map several logical
+    axes to the same mesh axis and let per-tensor structure decide."""
+    used: set = set()
+    out = []
+    for ax in axes:
+        keys = ax if isinstance(ax, tuple) else (ax,)
+        if ax is None or not (used & set(keys)):
+            out.append(ax)
+            used.update(k for k in keys if k is not None)
+        else:
+            out.append(None)
+    return out
+
+@dataclasses.dataclass
+class Policy:
+    """Maps logical axis names to mesh axes and applies constraints."""
+
+    mesh: Mesh | None = None
+    rules: Mapping[str, object] = dataclasses.field(
+        default_factory=lambda: dict(DEFAULT_RULES))
+    fsdp: bool = False
+    # per-tensor-name overrides emitted by the autoshard pass:
+    # name -> tuple of logical axes (replaces the annotation at that site)
+    overrides: Mapping[str, tuple] = dataclasses.field(default_factory=dict)
+
+    def _axis(self, logical: str | None):
+        if logical is None:
+            return None
+        ax = self.rules.get(logical, None)
+        if ax is None:
+            return None
+        if isinstance(ax, tuple):
+            # drop mesh axes that don't exist (e.g. "pod" on single-pod mesh)
+            if self.mesh is not None:
+                ax = tuple(a for a in ax if a in self.mesh.axis_names)
+                if not ax:
+                    return None
+                return ax if len(ax) > 1 else ax[0]
+            return ax
+        if self.mesh is not None and ax not in self.mesh.axis_names:
+            return None
+        return ax
+
+    def spec(self, *logical_axes: str | None) -> P:
+        return P(*(self._axis(a) for a in logical_axes))
+
+    def named(self, *logical_axes: str | None) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical_axes))
+
+    def constrain(self, x, *logical_axes: str | None, name: str | None = None):
+        """with_sharding_constraint under the policy; no-op without a mesh.
+
+        ``name`` keys into autoshard overrides: when the BIDENT search has
+        assigned this site a different sharding "PU", the override wins.
+        """
+        if self.mesh is None:
+            return x
+        if name is not None and name in self.overrides:
+            logical_axes = self.overrides[name]
+        # pad/trim to rank
+        axes = list(logical_axes)
+        if len(axes) < x.ndim:
+            axes += [None] * (x.ndim - len(axes))
+        axes = axes[: x.ndim]
+        # never request a sharding that doesn't divide the dim; tuple
+        # axes degrade to their largest dividing suffix
+        fixed = [_fit_axis(self.mesh, dim, self._axis(a))
+                 for dim, a in zip(x.shape, axes)]
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*_dedup_axes(fixed))))
+
+    def guarded_spec(self, shape: Sequence[int], *logical_axes: str | None) -> P:
+        """PartitionSpec with the divisibility guard (no FSDP pass):
+        a dim whose size the mapped mesh axes don't divide stays
+        replicated instead of erroring at jit boundary."""
+        axes = list(logical_axes)
+        if len(axes) < len(shape):
+            axes += [None] * (len(shape) - len(axes))
+        fixed = [_fit_axis(self.mesh, dim, self._axis(a))
+                 for dim, a in zip(shape, axes)]
+        return P(*_dedup_axes(fixed))
+
+    # -- parameter specs -----------------------------------------------------
+    def param_spec(self, shape: Sequence[int], logical_axes: Sequence[str | None]) -> P:
+        """PartitionSpec for a parameter; applies FSDP to the first
+        unsharded (and divisible) dim when ``fsdp`` is on.  The sentinel
+        logical axis ``"nofsdp"`` keeps a dim replicated AND opts it out of
+        the FSDP pass (e.g. the embedding's d_model dim: FSDP there would
+        turn the logits matmul into a partial-sum all-reduce of the full
+        (batch, seq, vocab) tensor across the data axis)."""
+        axes = [self._axis(a) for a in logical_axes]
+        if self.fsdp and self.mesh is not None:
+            data_ax = self._axis("fsdp")
+            # flatten tuple entries: ('pod','data') uses the data axis too
+            used: set = set()
+            for a in axes:
+                used.update(a if isinstance(a, tuple) else (a,))
+            if data_ax is not None and data_ax not in used and not (
+                    isinstance(data_ax, tuple) and used & set(data_ax)):
+                dsize = 1
+                for m in (data_ax if isinstance(data_ax, tuple)
+                          else (data_ax,)):
+                    dsize *= self.mesh.shape[m]
+                for i, (dim, a) in enumerate(zip(shape, axes)):
+                    if (a is None and dim % dsize == 0
+                            and logical_axes[i] != "nofsdp"):
+                        axes[i] = data_ax
+                        break
+        # divisibility guard; tuple axes degrade to a dividing suffix
+        fixed = [_fit_axis(self.mesh, dim, ax)
+                 for dim, ax in zip(shape, axes)]
+        return P(*_dedup_axes(fixed))
+
+
+NO_POLICY = Policy(mesh=None)

@@ -1,0 +1,166 @@
+"""Training step factory: sharded loss/grad/update with grad accumulation.
+
+``make_train_step`` returns the jitted function the dry-run lowers for the
+``train_4k`` cells.  Parameter PartitionSpecs come from per-name logical
+axis rules + the policy's FSDP pass; optimizer states inherit the param
+specs (ZeRO-style).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models import model as M
+from ..optim import adamw
+from ..sharding import Policy
+
+# logical axes for the *last* dims of each named parameter; leading stack
+# dims are padded with None.  'heads'/'ff'/'experts'/'vocab' all map to the
+# model axis under the default rules; FSDP then claims one leftover dim.
+_PARAM_AXES: dict[str, tuple] = {
+    "embed": ("vocab", "nofsdp"),
+    "lm_head": ("nofsdp", "vocab"),
+    "wq": (None, "heads"),
+    "wk": (None, "kv_heads_p"),
+    "wv": (None, "kv_heads_p"),
+    "wo": ("ff", None),
+    "wi": (None, "ff"),
+    "w_up": ("experts", None, None),
+    "w_down": ("experts", None, None),
+    "router": (None, None),
+    "wq_a": (None, None),
+    "wq_b": (None, "heads"),
+    "wkv_a": (None, None),
+    "wkv_b": (None, "heads"),
+    "in_proj": (None, "ff"),
+    "out_proj": ("ff", None),
+    "up": (None, "ff"),
+    "down": ("ff", None),
+    "w_in": (None, "ff"),
+    "proj": (None, None),
+}
+
+
+def logical_axes_for(path, shape) -> tuple:
+    name = None
+    for p in reversed(path):
+        if hasattr(p, "key"):
+            name = str(p.key)
+            break
+    axes = _PARAM_AXES.get(name, ())
+    ndim = len(shape)
+    if len(axes) > ndim:
+        axes = axes[-ndim:]
+    return (None,) * (ndim - len(axes)) + tuple(axes)
+
+
+def param_pspecs(policy: Policy, params_tree) -> Any:
+    """Pytree of PartitionSpec matching params (works on ShapeDtypeStructs)."""
+    def spec(path, leaf):
+        axes = logical_axes_for(path, leaf.shape)
+        return policy.param_spec(leaf.shape, axes)
+    return jax.tree_util.tree_map_with_path(spec, params_tree)
+
+
+def param_shardings(policy: Policy, params_tree) -> Any:
+    mesh = policy.mesh
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(policy, params_tree))
+
+
+def batch_pspecs(policy: Policy, batch_tree) -> Any:
+    def spec(path, leaf):
+        # guarded: a batch dim the data axes don't divide (e.g. the
+        # long_500k cell's global_batch=1) stays replicated
+        return policy.guarded_spec(leaf.shape, "batch")
+    return jax.tree_util.tree_map_with_path(spec, batch_tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1           # gradient accumulation steps
+    opt: adamw.AdamWConfig = dataclasses.field(default_factory=adamw.AdamWConfig)
+    # top-k gradient compression with error feedback (optim.compress);
+    # None = exact synchronization
+    compress: "object" = None
+
+
+def make_train_step(cfg, tc: TrainConfig, policy: Policy):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).  With ``tc.microbatches > 1`` the batch's leading dim is split
+    and gradients accumulate in fp32 through a scan (memory/compute knob
+    used by the perf hillclimb)."""
+
+    def loss(p, b):
+        return M.loss_fn(cfg, p, b, policy)
+
+    def grads_of(params, batch):
+        if tc.microbatches <= 1:
+            (l, met), g = jax.value_and_grad(loss, has_aux=True)(params, batch)
+            return l, met, g
+        n = tc.microbatches
+
+        def split_mb(x):
+            return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+        mbs = jax.tree.map(split_mb, batch)
+
+        def one(carry, mb):
+            acc, lsum = carry
+            (l, met), g = jax.value_and_grad(loss, has_aux=True)(params, mb)
+            acc = jax.tree.map(lambda a, x: a + x.astype(jnp.float32), acc, g)
+            return (acc, lsum + l), met
+        acc0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+        (g, lsum), mets = jax.lax.scan(one, (acc0, 0.0), mbs)
+        g = jax.tree.map(lambda x: x / n, g)
+        met = jax.tree.map(lambda x: x[-1], mets)
+        return lsum / n, met, g
+
+    if tc.compress is not None:
+        from ..optim import compress as C
+
+        def train_step(params, state, batch):
+            opt_state, residual = state["opt"], state["residual"]
+            l, met, g = grads_of(params, batch)
+            g, residual = C.compress(tc.compress, g, residual)
+            params, opt_state, om = adamw.apply_updates(tc.opt, params, g,
+                                                        opt_state)
+            met = dict(met)
+            met.update(om)
+            met["loss"] = l
+            return params, {"opt": opt_state, "residual": residual}, met
+
+        return train_step
+
+    def train_step(params, opt_state, batch):
+        l, met, g = grads_of(params, batch)
+        params, opt_state, om = adamw.apply_updates(tc.opt, params, g, opt_state)
+        met = dict(met)
+        met.update(om)
+        met["loss"] = l
+        return params, opt_state, met
+
+    return train_step
+
+
+def jit_train_step(cfg, tc: TrainConfig, policy: Policy, params_shapes,
+                   batch_shapes):
+    """jit with explicit in/out shardings (what the dry-run lowers)."""
+    step = make_train_step(cfg, tc, policy)
+    mesh = policy.mesh
+    pspec = param_shardings(policy, params_shapes)
+    ospec = {"mu": pspec, "nu": pspec,
+             "step": NamedSharding(mesh, P())}
+    bspec = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                         batch_pspecs(policy, batch_shapes))
+    mspec = NamedSharding(mesh, P())
+    return jax.jit(
+        step,
+        in_shardings=(pspec, ospec, bspec),
+        out_shardings=(pspec, ospec, mspec),
+        donate_argnums=(0, 1),
+    )

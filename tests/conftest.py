@@ -1,0 +1,14 @@
+"""Test path setup: make ``repro`` (src/) and ``benchmarks`` importable
+regardless of how pytest is invoked.
+
+NOTE: no XLA_FLAGS here on purpose — smoke tests and benches must see the
+single real CPU device; only launch/dryrun.py forces 512 host devices
+(and does so before any other import, in its own process).
+"""
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)

@@ -1,0 +1,71 @@
+"""Every benchmark module's paper-claim checks must pass, and the
+paper-zoo graphs must be structurally sound."""
+import pytest
+
+from repro.core.paperzoo import ZOO_NAMES, zoo
+
+
+def test_zoo_has_19_configs():
+    z = zoo()
+    assert len(z) == 19
+    assert set(z) == set(ZOO_NAMES)
+
+
+def test_zoo_graphs_acyclic_and_sized():
+    # fused-op counts in the ballpark of the paper's Table 1
+    expect = {"ResNet-50 FP16": (50, 90), "ViT-B/16 FP16": (100, 200),
+              "LLaMA-7B(1L) FP16": (10, 16), "BitNet FP16": (30, 42),
+              "Mamba-370M FP16": (40, 70), "Hyena FP16": (380, 520),
+              "KAN FP16": (15, 30), "SNN-VGG9 FP16": (80, 100),
+              "LAVISH FP16": (10, 20), "pi0.5": (4000, 5000)}
+    for name, g in zoo().items():
+        g.topo_order()   # raises on cycles
+        if name in expect:
+            lo, hi = expect[name]
+            assert lo <= len(g) <= hi, (name, len(g))
+
+
+def test_kan_unsupported_on_npu():
+    z = zoo()
+    from repro.core import EdgeSoCCostModel
+    table = EdgeSoCCostModel().build_table(z["KAN FP16"])
+    for i in range(len(z["KAN FP16"])):
+        assert "NPU" not in table.supported_pus(i)
+
+
+def test_pi05_no_gpu_on_prefix_stage():
+    z = zoo()
+    g = z["pi0.5"]
+    from repro.core import EdgeSoCCostModel
+    table = EdgeSoCCostModel().build_table(g)
+    prefix_ops = [i for i, op in enumerate(g.ops)
+                  if op.name.startswith(("pre.", "dn"))]
+    assert prefix_ops
+    assert all("GPU" not in table.supported_pus(i) for i in prefix_ops)
+
+
+@pytest.mark.parametrize("module", [
+    "fig2_op_affinity", "fig3_matmul_sweep", "fig4_parallel_pairs",
+    "table2_sequential", "fig6_energy", "table3_parallel",
+])
+def test_benchmark_claims(module):
+    import importlib
+    mod = importlib.import_module(f"benchmarks.{module}")
+    out = mod.run(verbose=False)
+    failed = [c for c, ok in out["checks"].items() if not ok]
+    assert not failed, failed
+
+
+@pytest.mark.slow
+def test_fig8_concurrent_claims():
+    from benchmarks import fig8_concurrent
+    out = fig8_concurrent.run(verbose=False)
+    failed = [c for c, ok in out["checks"].items() if not ok]
+    assert not failed, failed
+
+
+def test_tpu_autoshard_claims():
+    from benchmarks import tpu_autoshard
+    out = tpu_autoshard.run(verbose=False)
+    failed = [c for c, ok in out["checks"].items() if not ok]
+    assert not failed, failed

@@ -1,0 +1,162 @@
+"""Checkpoint atomicity/roundtrip/elastic-reshard, fault manager, and
+data-pipeline determinism tests."""
+import glob
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.data.pipeline import DataConfig, SyntheticTokenSource
+from repro.fault.manager import (FaultConfig, HeartbeatTracker,
+                                 RecoverableError, StragglerDetector,
+                                 run_with_recovery)
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (8, 16)),
+            "b": {"w": jnp.arange(12, dtype=jnp.int32).reshape(3, 4),
+                  "s": jnp.float32(3.5)}}
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t, extra={"data": {"step": 7, "seed": 0}})
+    restored, extra = ckpt.restore(str(tmp_path), jax.eval_shape(lambda: t))
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert extra["data"]["step"] == 7
+
+
+def test_latest_and_gc(tmp_path):
+    t = _tree()
+    for s in (10, 20, 30, 40, 50):
+        ckpt.save(str(tmp_path), s, t, keep_last=2)
+    assert ckpt.latest_step(str(tmp_path)) == 50
+    kept = sorted(glob.glob(os.path.join(str(tmp_path), "step_*")))
+    assert len(kept) == 2
+
+
+def test_atomic_no_partial(tmp_path):
+    """A .tmp directory left by a crash is never picked up as latest."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 10, t)
+    os.makedirs(os.path.join(str(tmp_path), "step_00000099.tmp"))
+    assert ckpt.latest_step(str(tmp_path)) == 10
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Save under one mesh, restore under a different device layout: the
+    checkpoint is stored logically unsharded, so restore just re-shards."""
+    from repro.launch.mesh import make_host_mesh
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    t = _tree()
+    mesh = make_host_mesh()
+    sharded = jax.device_put(t, NamedSharding(mesh, P()))
+    ckpt.save(str(tmp_path), 3, sharded)
+    # restore into a differently-specified target (fresh mesh)
+    mesh2 = make_host_mesh(model_axis=1)
+    target = jax.eval_shape(lambda: t)
+    restored, _ = ckpt.restore(str(tmp_path), target)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# fault manager
+# ---------------------------------------------------------------------------
+
+
+def test_recovery_restarts_from_checkpoint():
+    state = {"ckpt": 0, "fails": 0}
+    executed = []
+
+    def step(i):
+        if i == 5 and state["fails"] < 2:
+            state["fails"] += 1
+            raise RecoverableError("injected")
+        executed.append(i)
+
+    def save(i):
+        state["ckpt"] = i
+
+    stats = run_with_recovery(
+        step, start_step=0, total_steps=10,
+        cfg=FaultConfig(checkpoint_every=2, max_restarts=5),
+        save_fn=save, restore_fn=lambda: state["ckpt"])
+    assert stats.restarts == 2
+    assert executed[-1] == 9
+    # steps from the restored checkpoint re-execute (exactly-resumable)
+    assert executed.count(4) == 3
+
+
+def test_recovery_gives_up_after_max_restarts():
+    def step(i):
+        raise RecoverableError("always")
+    with pytest.raises(RecoverableError):
+        run_with_recovery(step, start_step=0, total_steps=3,
+                          cfg=FaultConfig(max_restarts=2, checkpoint_every=1),
+                          save_fn=lambda i: None, restore_fn=lambda: 0)
+
+
+def test_heartbeat_failure_detection():
+    clock = {"t": 0.0}
+    hb = HeartbeatTracker(FaultConfig(failure_timeout=10.0), n_hosts=3,
+                          clock=lambda: clock["t"])
+    clock["t"] = 15.0
+    hb.beat(0)
+    hb.beat(1)
+    clock["t"] = 20.0        # host 2 silent since t=0 -> dead (>10s)
+    assert hb.dead_hosts() == [2]
+    hb.beat(2)
+    assert hb.dead_hosts() == []
+
+
+def test_straggler_detection():
+    det = StragglerDetector(FaultConfig(straggler_factor=1.5,
+                                        straggler_window=8), n_hosts=4)
+    for _ in range(8):
+        for h in range(3):
+            det.record(h, 1.0)
+        det.record(3, 2.0)       # host 3 is 2x the median
+    assert det.stragglers() == [3]
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+
+def test_data_deterministic():
+    cfg = DataConfig(global_batch=8, seq_len=16, vocab=100, seed=3)
+    s1 = SyntheticTokenSource(cfg, process_index=0, process_count=1)
+    s2 = SyntheticTokenSource(cfg, process_index=0, process_count=1)
+    for i in (0, 5, 11):
+        a, b = s1(i), s2(i)
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        np.testing.assert_array_equal(a["labels"], b["labels"])
+
+
+def test_data_per_host_sharding_partitions_batch():
+    cfg = DataConfig(global_batch=8, seq_len=16, vocab=100, seed=3)
+    shards = [SyntheticTokenSource(cfg, process_index=p, process_count=4)(2)
+              for p in range(4)]
+    assert all(s["tokens"].shape == (2, 16) for s in shards)
+    # different hosts see different data
+    assert not np.array_equal(shards[0]["tokens"], shards[1]["tokens"])
+
+
+def test_data_resume_cursor():
+    cfg = DataConfig(global_batch=4, seq_len=8, vocab=64)
+    src = SyntheticTokenSource(cfg, process_index=0, process_count=1)
+    state = src.checkpoint_state(17)
+    assert SyntheticTokenSource.resume_step(state) == 17
+    np.testing.assert_array_equal(src(17)["tokens"], src(17)["tokens"])

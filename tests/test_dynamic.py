@@ -1,0 +1,118 @@
+"""Dynamic scheduling + tile-level mapping (the paper's §6 future work)."""
+import jax
+import pytest
+
+from repro.core import (EDGE_PUS, AnalyticProfiler, FusedOp, OpGraph,
+                        solve_sequential)
+from repro.core.costmodel import GPU, make_conv2d, make_cumsum, make_matmul
+from repro.core.dynamic import (DynamicScheduler, RuntimeCondition,
+                                adjusted_table, ridge_intensity, tile_split)
+
+
+def _chain(n=8):
+    ops = []
+    for i in range(n):
+        ops.append(make_matmul(512, name=f"mm{i}") if i % 2 == 0
+                   else make_cumsum(4096, 128))
+    g = OpGraph(ops)
+    table = AnalyticProfiler().profile(g)
+    return g, table
+
+
+def test_adjusted_table_scales_and_drops():
+    g, table = _chain(4)
+    cond = RuntimeCondition(slowdown={"GPU": 2.0}, unavailable=frozenset({"NPU"}))
+    adj = adjusted_table(table, cond)
+    assert adj.require(0, "GPU").kernel == pytest.approx(
+        2.0 * table.require(0, "GPU").kernel)
+    assert adj.require(0, "CPU").kernel == pytest.approx(
+        table.require(0, "CPU").kernel)
+    assert not adj.supported(0, "NPU")
+
+
+def test_remap_on_throttling_beats_static():
+    """When the GPU throttles 4x mid-run, the dynamic scheduler reroutes
+    the tail and realises a lower latency than sticking to the static
+    plan."""
+    g, table = _chain(10)
+    chain = g.topo_order()
+    throttle = {5: RuntimeCondition(slowdown={"GPU": 4.0})}
+
+    dyn = DynamicScheduler(chain, g.ops, table, EDGE_PUS)
+    realised_dynamic = dyn.simulate(throttle)
+    assert dyn.events, "expected a remap event"
+
+    static = DynamicScheduler(chain, g.ops, table, EDGE_PUS,
+                              replan_threshold=1e9)   # never re-plan
+    realised_static = static.simulate(throttle)
+    assert not static.events
+    assert realised_dynamic < realised_static * 0.95
+
+
+def test_remap_on_pu_loss():
+    """A PU going unavailable forces rerouting (runtime analog of the
+    paper's compile-failure semantics)."""
+    g, table = _chain(6)
+    chain = g.topo_order()
+    dyn = DynamicScheduler(chain, g.ops, table, EDGE_PUS)
+    dyn.simulate({2: RuntimeCondition(unavailable=frozenset({"GPU"}))})
+    assert any(e.reason == "unavailable PU" for e in dyn.events)
+    assert all(p != "GPU" for p in dyn.plan.assignment[2:])
+
+
+def test_hysteresis_suppresses_noise():
+    """A 1% drift must not trigger re-planning (threshold 5%)."""
+    g, table = _chain(6)
+    chain = g.topo_order()
+    dyn = DynamicScheduler(chain, g.ops, table, EDGE_PUS)
+    dyn.simulate({3: RuntimeCondition(slowdown={"GPU": 1.01})})
+    assert not dyn.events
+
+
+# ---------------------------------------------------------------------------
+# tile-level mapping
+# ---------------------------------------------------------------------------
+
+
+def test_tile_split_favours_compute_bound_op():
+    """A compute-bound GEMM paired with a memory-bound elementwise op:
+    the GEMM gets most tiles (the paper's roofline allocation rule)."""
+    gemm = make_matmul(2048)                    # far above the ridge
+    elt = FusedOp(name="add", kind="add", in_shapes=((1 << 22,),),
+                  out_shape=(1 << 22,))        # memory-bound
+    ka, kb, mk = tile_split(gemm, elt, GPU, n_tiles=6)
+    assert ka >= 4 and ka + kb == 6
+    assert mk < float("inf")
+
+
+def test_tile_split_balanced_for_equal_ops():
+    a, b = make_matmul(1024), make_matmul(1024)
+    ka, kb, _ = tile_split(a, b, GPU, n_tiles=6)
+    assert ka == kb == 3
+
+
+def test_ridge_point_orders_pus():
+    """NPU (dense MAC arrays) has a higher ridge than CPU: it needs more
+    arithmetic intensity to leave the memory-bound regime."""
+    from repro.core.costmodel import CPU, NPU
+    assert ridge_intensity(NPU, 1) > ridge_intensity(CPU, 1)
+
+
+def test_tile_split_makespan_beats_serial():
+    """Co-executing with the optimal split beats running both ops on all
+    tiles back-to-back when the memory-bound op is long enough to hide
+    behind the compute-bound one (a short memory-bound op is better run
+    serially — giving up tiles costs the GEMM more; tile_split still
+    returns the best achievable co-schedule)."""
+    gemm = make_matmul(2048)
+    elt = FusedOp(name="mul", kind="mul", in_shapes=((1 << 27,),),
+                  out_shape=(1 << 27,))
+    ka, kb, mk = tile_split(gemm, elt, GPU, n_tiles=6)
+
+    def t_full(op):
+        eff = GPU.kind_eff.get(op.kind, GPU.kind_eff["other"])
+        peak = GPU.peak_gemm.get(op.dtype_bytes, GPU.peak_gemm[2]) * eff
+        return max(op.flops / peak, op.bytes_moved / GPU.mem_bw)
+
+    serial = t_full(gemm) + t_full(elt)
+    assert mk < serial

@@ -1,0 +1,94 @@
+"""Executor equivalence + jaxpr fused-op extraction tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EdgeSoCCostModel, FusedOp, OpGraph, ScheduleExecutor,
+                        chain_graph, solve_parallel, solve_sequential,
+                        trace_fused_ops)
+from repro.core.costmodel import EDGE_PUS
+
+
+def _payload_chain(rng, n=6):
+    """A chain of real computations: each op consumes the previous output."""
+    ops = []
+    for i in range(n):
+        if i % 3 == 0:
+            w = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+            fn = (lambda w: lambda x=None: jnp.ones((4, 16)) @ w)(w) if i == 0 \
+                else (lambda w: lambda x: x @ w)(w)
+            op = FusedOp(name=f"mm{i}", kind="matmul",
+                         in_shapes=((4, 16), (16, 16)), out_shape=(4, 16), fn=fn)
+        elif i % 3 == 1:
+            op = FusedOp(name=f"act{i}", kind="act", in_shapes=((4, 16),),
+                         out_shape=(4, 16), fn=lambda x: jax.nn.silu(x))
+        else:
+            op = FusedOp(name=f"norm{i}", kind="norm", in_shapes=((4, 16),),
+                         out_shape=(4, 16),
+                         fn=lambda x: x / (jnp.linalg.norm(x) + 1.0))
+        ops.append(op)
+    return chain_graph(ops)
+
+
+def test_executor_sequential_schedule_matches_monolithic():
+    rng = np.random.default_rng(0)
+    g = _payload_chain(rng)
+    table = EdgeSoCCostModel().build_table(g)
+    sched = solve_sequential(list(range(len(g))), g.ops, table, EDGE_PUS)
+    ex = ScheduleExecutor(list(EDGE_PUS))
+    mono = ex.run_monolithic(g)
+    orch = ex.run_scheduled(g, {i: p for i, p in enumerate(sched.assignment)})
+    assert ex.outputs_close(mono, orch)
+
+
+def test_executor_parallel_branches():
+    """Fork/join graph with real payloads; parallel schedule == monolithic."""
+    w1 = jnp.arange(16.0).reshape(4, 4) / 10.0
+    ops = [
+        FusedOp("src", "matmul", ((4, 4), (4, 4)), (4, 4),
+                fn=lambda: jnp.eye(4) @ w1),
+        FusedOp("a1", "act", ((4, 4),), (4, 4), fn=jnp.tanh),
+        FusedOp("a2", "act", ((4, 4),), (4, 4), fn=jnp.sin),
+        FusedOp("join", "add", ((4, 4), (4, 4)), (4, 4),
+                fn=lambda x, y: x + y),
+    ]
+    g = OpGraph(ops, edges=[(0, 1), (0, 2), (1, 3), (2, 3)])
+    table = EdgeSoCCostModel().build_table(g)
+    par = solve_parallel(g, table, EDGE_PUS)
+    ex = ScheduleExecutor(list(EDGE_PUS))
+    mono = ex.run_monolithic(g)
+    orch = ex.run_scheduled(g, par.assignment)
+    assert ex.outputs_close(mono, orch)
+    np.testing.assert_allclose(np.asarray(orch[3]),
+                               np.tanh(np.asarray(w1)) + np.sin(np.asarray(w1)),
+                               rtol=1e-6)
+
+
+def test_trace_fused_ops_mlp():
+    """A 3-matmul MLP must extract 3 fused matmul ops (norm/act fused in)."""
+    def mlp(x, w1, w2, w3):
+        h = jax.nn.silu(x @ w1)
+        h = h * jax.nn.sigmoid(h @ w2)
+        return h @ w3
+
+    x = jnp.ones((2, 8))
+    w = [jnp.ones((8, 8))] * 3
+    g = trace_fused_ops(mlp, x, *w)
+    kinds = [o.kind for o in g.ops]
+    assert kinds.count("matmul") == 3
+    assert g.is_chain()
+    # fused elementwise FLOPs must have been attributed
+    assert any(o.flops > 2 * 2 * 8 * 8 for o in g.ops if o.kind == "matmul")
+
+
+def test_trace_fused_ops_scan():
+    def f(x):
+        def step(c, xi):
+            c = 0.5 * c + xi
+            return c, c
+        _, ys = jax.lax.scan(step, jnp.zeros(x.shape[1:]), x)
+        return ys.sum()
+
+    g = trace_fused_ops(f, jnp.ones((16, 4)))
+    assert any(o.kind == "scan" for o in g.ops)

@@ -1,0 +1,121 @@
+"""Integration: Pallas kernels dispatched from the model's inference
+paths (cfg.use_kernels) match the jnp reference path; gradient
+compression with error feedback preserves training."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.optim import adamw
+from repro.optim.compress import (CompressionConfig, compress,
+                                  compression_ratio, init_residual)
+from repro.sharding import Policy
+from repro.train import trainer as T
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch equivalence (interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "zamba2-2.7b", "xlstm-125m"])
+def test_prefill_kernels_match_reference(arch):
+    cfg = get_config(arch).reduced()
+    cfg_k = dataclasses.replace(cfg, use_kernels=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, T = 2, 64
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, T),
+                                          0, cfg.vocab)}
+    logits_ref, cache_ref = M.prefill(cfg, params, batch, max_len=T + 8)
+    logits_k, cache_k = M.prefill(cfg_k, params, batch, max_len=T + 8)
+    np.testing.assert_allclose(np.asarray(logits_k), np.asarray(logits_ref),
+                               atol=2e-4, rtol=2e-4)
+    for a, b in zip(jax.tree.leaves(cache_ref), jax.tree.leaves(cache_k)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=2e-4, rtol=2e-4)
+
+
+def test_kernel_prefill_then_reference_decode(arch="zamba2-2.7b"):
+    """A cache produced by the kernel path must be consumable by decode."""
+    cfg = dataclasses.replace(get_config(arch).reduced(), use_kernels=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16),
+                                          0, cfg.vocab)}
+    logits, cache = M.prefill(cfg, params, batch, max_len=24)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = M.decode_step(cfg, params, cache, {"tokens": tok})
+    assert logits2.shape == (2, 1, cfg.vocab)
+    assert not bool(jnp.isnan(logits2).any())
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_config("llama3.2-1b"), name="tiny", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=2, d_head=32, d_ff=512, vocab=512,
+        dtype="float32", remat=False, q_chunk=32, kv_chunk=32)
+
+
+def test_compress_identity_at_full_k():
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (128, 64))}
+    grads = {"w": jax.random.normal(jax.random.PRNGKey(1), (128, 64))}
+    res = init_residual(params)
+    sent, new_res = compress(CompressionConfig(k_frac=1.0), grads, res)
+    np.testing.assert_allclose(sent["w"], grads["w"], rtol=1e-6)
+    assert float(jnp.abs(new_res["w"]).max()) == 0.0
+
+
+def test_compress_error_feedback_conserves_mass():
+    """sent + residual' == grad + residual (nothing is lost, only delayed)."""
+    g = {"w": jax.random.normal(jax.random.PRNGKey(2), (256, 32))}
+    e = {"w": jax.random.normal(jax.random.PRNGKey(3), (256, 32)) * 0.1}
+    sent, e2 = compress(CompressionConfig(k_frac=0.1), g, e)
+    np.testing.assert_allclose(np.asarray(sent["w"] + e2["w"]),
+                               np.asarray(g["w"] + e["w"]), atol=1e-6)
+    # sparsity: ~10% entries synchronized
+    frac = float((sent["w"] != 0).mean())
+    assert 0.05 <= frac <= 0.2
+
+
+def test_compress_small_leaves_pass_through():
+    g = {"bias": jnp.ones((16,))}
+    sent, res = compress(CompressionConfig(k_frac=0.01, min_size=4096),
+                         g, init_residual(g))
+    np.testing.assert_allclose(sent["bias"], g["bias"])
+
+
+def test_compressed_training_converges():
+    """Loss decreases under 10% top-k compression with error feedback."""
+    from repro.data.pipeline import DataConfig, SyntheticTokenSource
+    cfg = _tiny_cfg()
+    src = SyntheticTokenSource(
+        DataConfig(global_batch=32, seq_len=32, vocab=cfg.vocab),
+        process_index=0, process_count=1)
+    tc = T.TrainConfig(
+        opt=adamw.AdamWConfig(lr=2e-3, warmup_steps=10, total_steps=200),
+        compress=CompressionConfig(k_frac=0.1))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    state = {"opt": adamw.init_state(tc.opt, params),
+             "residual": init_residual(params)}
+    step = jax.jit(T.make_train_step(cfg, tc, Policy()))
+    losses = []
+    for i in range(80):
+        b = jax.tree.map(jnp.asarray, src(i))
+        params, state, met = step(params, state, b)
+        losses.append(float(met["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses[::20]
+
+
+def test_compression_ratio_accounting():
+    params = {"big": jnp.zeros((1024, 1024)), "small": jnp.zeros((64,))}
+    r = compression_ratio(CompressionConfig(k_frac=0.1), params)
+    assert 0.09 < r < 0.11

@@ -1,0 +1,123 @@
+"""Hypothesis property tests on the search engine's invariants.
+
+(The seeded randomized versions live in test_core_search.py; these drive
+the same invariants through hypothesis' shrinking search.)
+"""
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (CostEntry, CostTable, EDGE_PUS, dijkstra,
+                        sequential_dp, solve_concurrent_joint,
+                        solve_sequential)
+from repro.core.graph import build_sequential_graph
+from repro.core.op import FusedOp, OpGraph
+from repro.core.schedule import evaluate_sequential
+
+PUS = ("CPU", "GPU", "NPU")
+
+
+def _random_table(draw, n_ops: int):
+    """A random cost table; some (op, PU) entries dropped (unsupported)."""
+    table = CostTable(list(PUS))
+    ops = []
+    for i in range(n_ops):
+        ops.append(FusedOp(name=f"o{i}", kind="other", out_shape=(4,)))
+        sup = draw(st.lists(st.sampled_from(PUS), min_size=1, max_size=3,
+                            unique=True))
+        for pu in sup:
+            table.set(i, pu, CostEntry(
+                kernel=draw(st.floats(1e-6, 1e-3)),
+                dispatch=draw(st.floats(0, 1e-5)),
+                h2d=draw(st.floats(0, 1e-4)),
+                d2h=draw(st.floats(0, 1e-4)),
+                power=draw(st.floats(5.0, 30.0))))
+    return ops, table
+
+
+def _brute_force(chain, ops, table, objective):
+    best = None
+    sup = [table.supported_pus(o) for o in chain]
+    for assign in itertools.product(*sup):
+        lat, eng = evaluate_sequential(chain, list(assign), ops, table,
+                                       EDGE_PUS)
+        v = lat if objective == "latency" else eng
+        if best is None or v < best:
+            best = v
+    return best
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_search_is_optimal_vs_bruteforce(data):
+    n = data.draw(st.integers(2, 6))
+    ops, table = _random_table(data.draw, n)
+    chain = list(range(n))
+    for objective in ("latency", "energy"):
+        s = solve_sequential(chain, ops, table, EDGE_PUS, objective)
+        bf = _brute_force(chain, ops, table, objective)
+        got = s.latency if objective == "latency" else s.energy
+        assert got <= bf * (1 + 1e-9) + 1e-15
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_dijkstra_equals_dp(data):
+    n = data.draw(st.integers(2, 8))
+    ops, table = _random_table(data.draw, n)
+    chain = list(range(n))
+    g = build_sequential_graph(chain, ops, table, EDGE_PUS, "latency")
+    cost_d, _ = dijkstra(g)
+    cost_dp, _ = sequential_dp(chain, ops, table, EDGE_PUS, "latency")
+    assert cost_d == pytest.approx(cost_dp, rel=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.data())
+def test_joint_no_worse_than_serial(data):
+    na = data.draw(st.integers(1, 4))
+    nb = data.draw(st.integers(1, 4))
+    ops_a, table_a = _random_table(data.draw, na)
+    ops_b, table_b = _random_table(data.draw, nb)
+    ca, cb = list(range(na)), list(range(nb))
+    sa = solve_sequential(ca, ops_a, table_a, EDGE_PUS)
+    sb = solve_sequential(cb, ops_b, table_b, EDGE_PUS)
+    joint = solve_concurrent_joint(ca, table_a, cb, table_b, EDGE_PUS)
+    # joint can always fall back to pure serial interleaving of per-op
+    # minima; node costs exclude h2d/d2h boundaries, so compare against
+    # the sum of per-op best node weights (the serial upper bound the
+    # joint search relaxes from)
+    serial_nodes = (
+        sum(min(table_a.require(o, p).w for p in table_a.supported_pus(o))
+            for o in ca)
+        + sum(min(table_b.require(o, p).w for p in table_b.supported_pus(o))
+              for o in cb))
+    assert joint.latency <= serial_nodes * (1 + 1e-9) + 1e-15
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(2, 30),
+    max_segments=st.integers(1, 10),
+)
+def test_segment_table_conserves_cost(n, max_segments):
+    """Coarsening must conserve the total single-PU cost exactly."""
+    from benchmarks.common import segment_table
+    import numpy as np
+    rng = np.random.default_rng(n * 131 + max_segments)
+    table = CostTable(list(PUS))
+    ops = []
+    for i in range(n):
+        ops.append(FusedOp(name=f"o{i}", kind="other", out_shape=(4,)))
+        for pu in PUS:
+            table.set(i, pu, CostEntry(
+                kernel=float(rng.uniform(1e-6, 1e-3)), dispatch=0.0,
+                h2d=0.0, d2h=0.0, power=float(rng.uniform(5, 30))))
+    g = OpGraph(ops, edges=None)
+    chain, stable = segment_table(g, table, max_segments)
+    assert len(chain) <= max(max_segments, 1) + 1
+    for pu in PUS:
+        total_full = sum(table.require(i, pu).w for i in range(n))
+        total_seg = sum(stable.require(s, pu).w for s in chain)
+        assert total_seg == pytest.approx(total_full, rel=1e-9)
