@@ -14,8 +14,14 @@ PUS = ("CPU", "GPU", "NPU")
 
 
 def geomean(xs: Sequence[float]) -> float:
-    xs = [x for x in xs if x > 0]
-    return math.exp(sum(math.log(x) for x in xs) / len(xs)) if xs else 0.0
+    if not xs:
+        raise ValueError("geomean of an empty sequence")
+    bad = [x for x in xs if x <= 0]
+    if bad:
+        raise ValueError(
+            f"geomean requires positive values; got {len(bad)} non-positive "
+            f"entries (e.g. {bad[0]!r})")
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
 
 
 def best_single(chain, ops, table, pus=EDGE_PUS, objective: str = "latency"):
@@ -26,6 +32,14 @@ def best_single(chain, ops, table, pus=EDGE_PUS, objective: str = "latency"):
         c = single_pu_cost(chain, pu, ops, table, pus)
         vals[pu] = None if c is None else c[idx]
     feas = {k: v for k, v in vals.items() if v is not None}
+    if not feas:
+        blockers = {
+            pu: [f"op {oi} ({ops[oi].name})" for oi in chain
+                 if not table.supported(oi, pu)][:3]
+            for pu in table.pus}
+        raise ValueError(
+            "no single PU supports every op of the chain "
+            f"(len={len(chain)}); first unsupported ops per PU: {blockers}")
     b = min(feas, key=feas.get)
     return b, feas[b], vals
 
@@ -63,10 +77,14 @@ def segment_table(graph: OpGraph, table: CostTable,
     Consecutive ops merge into one segment whose per-PU cost is the sum of
     member costs (intra-segment transitions are zero: one PU per segment).
     A segment supports a PU iff every member does — so e.g. KAN segments
-    stay NPU-less.  This hierarchical coarsening keeps the joint (i, j)
-    Dijkstra tractable for the paper's 190-pair sweep (pi0.5 alone has
-    ~4,600 ops); the scheduling granularity loss is the documented
-    approximation.
+    stay NPU-less.
+
+    Historical note: this coarsening was *required* by the seed's pure-
+    Python joint (i, j) Dijkstra to keep the 190-pair sweep tractable.
+    Since the dense-table A* joint solver landed, ``fig8_concurrent`` runs
+    at full operator resolution by default and this helper is an opt-in
+    fallback (``--max-segments``) kept for comparison runs and for
+    scheduler micro-benchmarks at fixed granularity.
     """
     chain = graph.topo_order()
     n = len(chain)

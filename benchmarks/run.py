@@ -7,9 +7,9 @@ from __future__ import annotations
 import sys
 import time
 
-from . import (fig2_op_affinity, fig3_matmul_sweep, fig4_parallel_pairs,
-               fig6_energy, fig8_concurrent, table2_sequential,
-               table3_parallel, tpu_autoshard)
+from . import (bench_sched, fig2_op_affinity, fig3_matmul_sweep,
+               fig4_parallel_pairs, fig6_energy, fig8_concurrent,
+               table2_sequential, table3_parallel, tpu_autoshard)
 
 MODULES = [
     ("Fig. 2 operator affinity", fig2_op_affinity),
@@ -18,7 +18,9 @@ MODULES = [
     ("Table 2 sequential orchestration", table2_sequential),
     ("Fig. 6 energy objectives", fig6_energy),
     ("Table 3 intra-model parallel", table3_parallel),
-    ("Fig. 8 multi-model concurrent (190 pairs)", fig8_concurrent),
+    ("Fig. 8 multi-model concurrent (190 pairs, full resolution)",
+     fig8_concurrent),
+    ("Scheduler micro-benchmark (BENCH_sched.json)", bench_sched),
     ("TPU autoshard (beyond-paper)", tpu_autoshard),
 ]
 

@@ -5,29 +5,39 @@ the EdgeSoC CPU/GPU/NPU models (faithful reproduction) and the TPU
 sharding-strategy roofline (``repro.core.autoshard``, the beyond-paper
 system).
 """
-from .contention import ContentionModel, DEFAULT_MM_SF
+from .contention import (ContentionModel, DEFAULT_MM_SF, PairCostCache,
+                         uses_default_coexec)
 from .costmodel import (CPU, GPU, NPU, EDGE_PUS, DEFAULT_SF, CostEntry,
-                        CostTable, EdgeSoCCostModel, PUSpec, transition_cost)
+                        CostTable, DenseCostTable, EdgeSoCCostModel, PUSpec,
+                        transition_cost)
 from .executor import ScheduleExecutor
-from .graph import ExecGraph, build_sequential_graph
+from .graph import (DenseChain, ExecGraph, build_dense_chain,
+                    build_sequential_graph)
 from .op import Branch, FusedOp, OpGraph, Phase, chain_graph
 from .profiler import (AnalyticProfiler, MeasuredProfiler, measure_callable,
                        trace_fused_ops)
 from .schedule import (ConcurrentSchedule, ParallelSchedule, SeqSchedule,
                        evaluate_sequential, single_pu_cost)
-from .search import (dijkstra, sequential_dp, solve_concurrent_aligned,
-                     solve_concurrent_joint, solve_parallel, solve_sequential)
+from .search import (dijkstra, sequential_dp, sequential_dp_reference,
+                     solve_concurrent_aligned,
+                     solve_concurrent_aligned_reference,
+                     solve_concurrent_joint, solve_concurrent_joint_reference,
+                     solve_parallel, solve_sequential)
 from . import autoshard, modelgraph, paperzoo  # noqa: F401  (TPU mode + graphs)
 
 __all__ = [
-    "ContentionModel", "DEFAULT_MM_SF", "CPU", "GPU", "NPU", "EDGE_PUS",
-    "DEFAULT_SF", "CostEntry", "CostTable", "EdgeSoCCostModel", "PUSpec",
-    "transition_cost", "ScheduleExecutor", "ExecGraph",
-    "build_sequential_graph", "Branch", "FusedOp", "OpGraph", "Phase",
+    "ContentionModel", "DEFAULT_MM_SF", "PairCostCache",
+    "uses_default_coexec", "CPU", "GPU", "NPU", "EDGE_PUS",
+    "DEFAULT_SF", "CostEntry", "CostTable", "DenseCostTable",
+    "EdgeSoCCostModel", "PUSpec",
+    "transition_cost", "ScheduleExecutor", "DenseChain", "ExecGraph",
+    "build_dense_chain", "build_sequential_graph", "Branch", "FusedOp",
+    "OpGraph", "Phase",
     "chain_graph", "AnalyticProfiler", "MeasuredProfiler",
     "measure_callable", "trace_fused_ops", "ConcurrentSchedule",
     "ParallelSchedule", "SeqSchedule", "evaluate_sequential",
-    "single_pu_cost", "dijkstra", "sequential_dp",
-    "solve_concurrent_aligned", "solve_concurrent_joint", "solve_parallel",
-    "solve_sequential",
+    "single_pu_cost", "dijkstra", "sequential_dp", "sequential_dp_reference",
+    "solve_concurrent_aligned", "solve_concurrent_aligned_reference",
+    "solve_concurrent_joint", "solve_concurrent_joint_reference",
+    "solve_parallel", "solve_sequential",
 ]

@@ -20,7 +20,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping
 
-from .costmodel import DEFAULT_SF
+import numpy as np
+
+from .costmodel import DEFAULT_SF, DenseCostTable
 
 # Multi-model cross-PU memory-bandwidth contention (two active PUs hammering
 # the shared DRAM).  Slightly stronger than the intra-model SF because whole
@@ -74,3 +76,113 @@ class ContentionModel:
         if pu_a == pu_b:
             return 0.5 * (cc_a + cc_b)
         return max(cc_a, cc_b)
+
+    def min_factor(self) -> float:
+        """Smallest factor any co-executed op's solo time can be scaled by.
+
+        Used to keep the A* lower-bound heuristic admissible even for
+        custom ``mm_sf`` tables with entries < 1 (same-PU co-execution
+        always costs at least each op's solo time, cross-PU costs at
+        least ``solo * mm_sf``)."""
+        return min(1.0, *self.mm_sf.values()) if self.mm_sf else 1.0
+
+
+def uses_default_coexec(cm: ContentionModel) -> bool:
+    """True iff ``cm`` inherits the base co-execution cost laws, so the
+    vectorized pair-cost matrices below reproduce its behaviour exactly.
+    Subclasses overriding ``co_exec``/``pair_step_cost`` fall back to the
+    scalar reference solvers."""
+    return (type(cm).co_exec is ContentionModel.co_exec
+            and type(cm).pair_step_cost is ContentionModel.pair_step_cost)
+
+
+class PairCostCache:
+    """Batched ``(K0, K1)`` pair-cost / pair-energy matrices per signature.
+
+    For two co-scheduled ops (one per model) the step cost and energy over
+    all PU pairs depend only on the ops' per-PU (w, power, support)
+    vectors — their *signatures* (``DenseCostTable.sig``).  The model zoo
+    repeats layer shapes heavily, so reducing once per signature pair
+    turns the per-state K0*K1 Python loop of the reference solvers into a
+    single batched NumPy evaluation shared across thousands of (i, j)
+    states.
+
+    Matrix semantics replicate ``ContentionModel`` bit-for-bit:
+
+    * cost:   same PU -> ``t0 + t1`` (serialised queue); cross-PU ->
+      ``max(t0*SF(a,b), t1*SF(b,a))``.
+    * energy: same PU -> ``t0*p0 + t1*p1``; cross-PU ->
+      ``cc0*p0 + cc1*p1``.
+
+    Unsupported slots are ``inf`` in both, so flat ``argmin`` picks the
+    same first-minimum the scalar ``for d0 ... for d1`` loops pick.
+    """
+
+    # peak elements per 4-D temporary in edge_tables (~16 MB of float64):
+    # measured/profiled tables can have near-unique per-op signatures, so
+    # the (S0, S1, K0, K1) block is built in row chunks to bound memory.
+    _CHUNK_ELEMS = 2_000_000
+
+    def __init__(self, cm: ContentionModel, dense0: DenseCostTable,
+                 dense1: DenseCostTable):
+        self.cm = cm
+        self.d0 = dense0
+        self.d1 = dense1
+        p0, p1 = dense0.pus, dense1.pus
+        self.sf_a = np.array([[cm.mm_sf.get((a, b), 1.0) for b in p1]
+                              for a in p0])
+        self.sf_b = np.array([[cm.mm_sf.get((b, a), 1.0) for b in p1]
+                              for a in p0])
+        self.same = np.array([[a == b for b in p1] for a in p0])
+
+    def edge_tables(self, objective: str
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Co-advance edges for *all* signature pairs, reduced in batches.
+
+        Every PU pair of a co-advance leads to the same successor state,
+        so the search only needs the minimum-key pair per signature pair;
+        its latency / energy / identity are kept for reconstruction.
+        Returns ``(key, step_cost, energy, flat_argmin)``, each
+        ``(n_sig0, n_sig1)``.  The flat row-major argmin reproduces the
+        scalar solvers' first-minimum ``for d0 ... for d1`` tie-break.
+        """
+        r0, r1 = self.d0.sig_row, self.d1.sig_row
+        t0s, p0s, m0s = self.d0.w[r0], self.d0.power[r0], self.d0.mask[r0]
+        t1, p1, m1 = self.d1.w[r1], self.d1.power[r1], self.d1.mask[r1]
+        s0, s1 = len(r0), len(r1)
+        k0, k1 = t0s.shape[1], t1.shape[1]
+        pk = np.empty((s0, s1))
+        ps = np.empty((s0, s1))
+        pe = np.empty((s0, s1))
+        pa = np.empty((s0, s1), dtype=np.int64)
+        a1 = t1[None, :, None, :]        # (1, S1, 1, K1)
+        with np.errstate(invalid="ignore"):  # inf * 0 at unsupported slots
+            e1 = a1 * p1[None, :, None, :]
+        bad1 = ~m1[None, :, None, :]
+        same = self.same[None, None, :, :]
+        chunk = max(1, self._CHUNK_ELEMS // max(1, s1 * k0 * k1))
+        for lo in range(0, s0, chunk):
+            hi = min(lo + chunk, s0)
+            a0 = t0s[lo:hi, None, :, None]       # (C, 1, K0, 1)
+            with np.errstate(invalid="ignore"):  # inf * 0 at unsupported
+                cc0 = a0 * self.sf_a[None, None, :, :]
+                cc1 = a1 * self.sf_b[None, None, :, :]
+                cost = np.maximum(cc0, cc1)
+                energy = (cc0 * p0s[lo:hi, None, :, None]
+                          + cc1 * p1[None, :, None, :])
+                cost = np.where(same, a0 + a1, cost)
+                energy = np.where(
+                    same, a0 * p0s[lo:hi, None, :, None] + e1, energy)
+            bad = ~m0s[lo:hi, None, :, None] | bad1
+            cost[bad] = np.inf
+            energy[bad] = np.inf
+            cost = cost.reshape(hi - lo, s1, k0 * k1)
+            energy = energy.reshape(hi - lo, s1, k0 * k1)
+            key = cost if objective == "latency" else energy
+            arg = key.argmin(axis=2)
+            sel = arg[:, :, None]
+            pa[lo:hi] = arg
+            pk[lo:hi] = np.take_along_axis(key, sel, axis=2)[:, :, 0]
+            ps[lo:hi] = np.take_along_axis(cost, sel, axis=2)[:, :, 0]
+            pe[lo:hi] = np.take_along_axis(energy, sel, axis=2)[:, :, 0]
+        return pk, ps, pe, pa

@@ -78,11 +78,127 @@ class CostTable:
     def supported_pus(self, op_idx: int) -> list[str]:
         return [p for p in self.pus if (op_idx, p) in self._t]
 
+    def items(self):
+        """Iterate ((op_idx, pu), entry) over all populated cells."""
+        return self._t.items()
+
     def require(self, op_idx: int, pu: str) -> CostEntry:
         e = self.get(op_idx, pu)
         if e is None:
             raise KeyError(f"op {op_idx} unsupported on {pu}")
         return e
+
+
+# ---------------------------------------------------------------------------
+# Dense (vectorized) cost-table view
+# ---------------------------------------------------------------------------
+
+
+class DenseCostTable:
+    """Vectorized ``(N, K)`` view of a ``CostTable`` along an op chain.
+
+    Built once per chain and shared by the vectorized DP / A* solvers.
+    Row ``i`` is chain position ``i`` (op index ``chain[i]``); column ``k``
+    is ``table.pus[k]``.  Unsupported (op, PU) slots hold ``inf`` in the
+    cost arrays (``w``, ``energy``) so that NumPy ``min``/``argmin`` route
+    around them exactly like the sparse search routes around missing
+    entries, and ``0`` in the auxiliary arrays (``power``, ``h2d``,
+    ``d2h``) so no ``inf * 0`` NaNs can arise in transition algebra.
+
+    ``sig`` assigns every row a signature id: rows with identical
+    (w, power, support) vectors share an id, which is what lets the
+    concurrent solvers memoize the ``(K0, K1)`` pair-cost matrices per
+    op-kind/PU signature instead of per chain position.
+    """
+
+    def __init__(self, pus: Sequence[str], chain: Sequence[int],
+                 mask: np.ndarray, w: np.ndarray, power: np.ndarray,
+                 h2d: np.ndarray, d2h: np.ndarray, acc: np.ndarray):
+        self.pus = list(pus)
+        self.chain = list(chain)
+        self.mask = mask            # (N, K) bool
+        self.w = w                  # (N, K); inf where unsupported
+        self.power = power          # (N, K); 0 where unsupported
+        self.h2d = h2d              # (N, K); 0 where unsupported
+        self.d2h = d2h              # (N, K); 0 where unsupported
+        self.acc = acc              # (K,) bool: PU is an accelerator
+        with np.errstate(invalid="ignore"):  # inf * 0 at unsupported slots
+            self.energy = w * power          # (N, K)
+        self.energy[~mask] = np.inf
+        self._sig: np.ndarray | None = None
+        self._sig_row: np.ndarray | None = None
+
+    def _build_sigs(self) -> None:
+        # pair-cost matrices depend only on (w, power, support); one
+        # vectorized unique over the stacked rows (id order is opaque)
+        stacked = np.concatenate(
+            [self.w, self.power, self.mask.astype(np.float64)], axis=1)
+        _, first, inv = np.unique(stacked, axis=0, return_index=True,
+                                  return_inverse=True)
+        self._sig = inv.reshape(-1).astype(np.int64)
+        self._sig_row = first.astype(np.int64)
+
+    @property
+    def sig(self) -> np.ndarray:
+        """(N,) signature id per row; equal-id rows have identical
+        (w, power, support) vectors.  Computed lazily — the sequential
+        solvers never need it."""
+        if self._sig is None:
+            self._build_sigs()
+        return self._sig
+
+    @property
+    def sig_row(self) -> np.ndarray:
+        """(n_sig,) a representative row index per signature id."""
+        if self._sig_row is None:
+            self._build_sigs()
+        return self._sig_row
+
+    @property
+    def n_sig(self) -> int:
+        return len(self.sig_row)
+
+    @property
+    def n(self) -> int:
+        return len(self.chain)
+
+    @property
+    def k(self) -> int:
+        return len(self.pus)
+
+    @classmethod
+    def from_chain(cls, chain: Sequence[int], table: CostTable,
+                   pus: Mapping[str, "PUSpec"]) -> "DenseCostTable":
+        n, k = len(chain), len(table.pus)
+        mask = np.zeros((n, k), dtype=bool)
+        w = np.full((n, k), np.inf)
+        power = np.zeros((n, k))
+        h2d = np.zeros((n, k))
+        d2h = np.zeros((n, k))
+        pos_of: dict[int, list[int]] = {}
+        for i, oi in enumerate(chain):
+            pos_of.setdefault(oi, []).append(i)
+        col = {pu: j for j, pu in enumerate(table.pus)}
+        # single pass over populated cells (vs N*K speculative lookups)
+        for (oi, pu), e in table.items():
+            rows = pos_of.get(oi)
+            if not rows:
+                continue
+            j = col[pu]
+            ww, pw, hh, dd = e.dispatch + e.kernel, e.power, e.h2d, e.d2h
+            for i in rows:
+                mask[i, j] = True
+                w[i, j] = ww
+                power[i, j] = pw
+                h2d[i, j] = hh
+                d2h[i, j] = dd
+        acc = np.array([pus[p].is_accelerator for p in table.pus], dtype=bool)
+        return cls(table.pus, chain, mask, w, power, h2d, d2h, acc)
+
+    def require_row(self, pos: int, what: str = "op") -> None:
+        if not self.mask[pos].any():
+            raise ValueError(
+                f"{what} {self.chain[pos]} unsupported on all PUs")
 
 
 # ---------------------------------------------------------------------------

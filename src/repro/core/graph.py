@@ -17,7 +17,9 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Mapping, Sequence
 
-from .costmodel import CostTable, PUSpec, transition_cost
+import numpy as np
+
+from .costmodel import CostTable, DenseCostTable, PUSpec, transition_cost
 from .op import FusedOp, OpGraph
 
 Objective = str  # "latency" | "energy"
@@ -109,3 +111,82 @@ def build_sequential_graph(
 
     return ExecGraph(n_ops=len(chain), pus=pu_names, node_ids=node_ids,
                      node_w=node_w, adj=adj)
+
+
+# ---------------------------------------------------------------------------
+# Dense (implicit) execution graph
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DenseChain:
+    """Array view of the sequential execution graph (no explicit nodes).
+
+    Same semantics as ``build_sequential_graph`` — node weights, the
+    s->first H2D edges, the last->t D2H edges, and the per-position
+    ``(K, K)`` transition matrices — but held as NumPy arrays so the DP
+    recurrence is one matrix op per chain position.  ``transition(pos)``
+    returns ``T[k, j]`` = cost of moving from (op ``pos-1``, PU ``k``) to
+    (op ``pos``, PU ``j``), energy-scaled exactly like the explicit graph's
+    edges.
+    """
+
+    dense: DenseCostTable
+    objective: Objective
+    esc: np.ndarray        # (K,) transition energy scale (1.0 in latency mode)
+    node_w: np.ndarray     # (N, K) node weights; inf where unsupported
+    entry_w: np.ndarray    # (K,) s -> (op 0, PU j) edge weights
+    exit_w: np.ndarray     # (K,) (op N-1, PU j) -> t edge weights
+    _trans: np.ndarray | None = None
+
+    def transitions(self) -> np.ndarray:
+        """All ``(N-1, K, K)`` transition matrices, built in one batched op.
+
+        ``transitions()[p][k][j]`` = cost of moving from (op ``p``, PU
+        ``k``) to (op ``p+1``, PU ``j``): same PU -> 0; otherwise the
+        accelerator-gated H2D of the next op plus D2H of the previous op,
+        energy-scaled by the destination PU exactly like the explicit
+        graph's edges.
+        """
+        if self._trans is None:
+            d = self.dense
+            h2d_next = np.where(d.acc, d.h2d, 0.0)[1:]       # (N-1, K)
+            d2h_prev = np.where(d.acc, d.d2h, 0.0)[:-1]      # (N-1, K)
+            t = ((h2d_next[:, None, :] + d2h_prev[:, :, None])
+                 * self.esc[None, None, :])
+            k = d.k
+            t[:, np.arange(k), np.arange(k)] = 0.0
+            self._trans = t
+        return self._trans
+
+    def transition(self, pos: int) -> np.ndarray:
+        """(K, K) transition-cost matrix into chain position ``pos``."""
+        return self.transitions()[pos - 1]
+
+
+def build_dense_chain(
+    chain: Sequence[int],
+    ops: Sequence[FusedOp],
+    table: CostTable,
+    pus: Mapping[str, PUSpec],
+    objective: Objective = "latency",
+    dense: DenseCostTable | None = None,
+) -> DenseChain:
+    """Dense equivalent of ``build_sequential_graph``."""
+    d = dense if dense is not None else DenseCostTable.from_chain(chain, table, pus)
+    for pos, oi in enumerate(chain):
+        if not d.mask[pos].any():
+            raise ValueError(f"op {oi} ({ops[oi].name}) unsupported on all PUs")
+    if objective == "latency":
+        esc = np.ones(d.k)
+        node_w = d.w
+    elif objective == "energy":
+        esc = np.array([pus[p].power_memory for p in d.pus])
+        node_w = d.energy
+    else:
+        raise ValueError(f"unknown objective {objective!r}")
+    # boundary edges are NOT accelerator-gated (matches the explicit graph)
+    entry_w = d.h2d[0] * esc
+    exit_w = d.d2h[-1] * esc
+    return DenseChain(dense=d, objective=objective, esc=esc, node_w=node_w,
+                      entry_w=entry_w, exit_w=exit_w)

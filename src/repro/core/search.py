@@ -2,21 +2,39 @@
 
 * ``dijkstra`` — textbook Dijkstra over the explicit execution graph
   (node-weighted; node weights folded into incoming edges).
-* ``sequential_dp`` — the O(N K^2) topological-order recurrence (Eq. 1).
-  Tests assert both give identical costs.
-* ``solve_parallel`` — phase/branch partitioning + per-branch Dijkstra +
-  contention-adjusted makespans (§3.3.2).
+* ``sequential_dp`` — the O(N K^2) topological-order recurrence (Eq. 1),
+  vectorized to one NumPy matrix op per chain position over the dense
+  ``(K, K)`` transition matrix (``graph.DenseChain``).  The scalar
+  reference (``sequential_dp_reference``) is kept; tests assert both give
+  bit-identical costs and assignments, and both equal ``dijkstra``.
+* ``solve_parallel`` — phase/branch partitioning + per-branch search +
+  contention-adjusted makespans (§3.3.2); the contention re-walk is a
+  gathered-array computation instead of a per-op Python loop.
 * ``solve_concurrent_aligned`` / ``solve_concurrent_joint`` — the two
-  multi-model modes (§3.2.2 / §3.3.3).
+  multi-model modes (§3.2.2 / §3.3.3).  The joint solver is A* over the
+  (i, j) progress grid: edge costs come from memoized ``(K0, K1)``
+  pair-cost matrices (``contention.PairCostCache``) reduced to one
+  min-edge per transition, and the admissible heuristic is the exact
+  cost-to-go computed by a vectorized backward DP over the grid
+  (``_cost_to_go``; the loose suffix-sum bound ``_suffix_heuristic`` is
+  kept for validation).  Priorities are quantized and f-ties break
+  toward deeper states, so exact-cost tie plateaus (ubiquitous in energy
+  mode) are traversed in O(path) instead of flooding the grid.  Scalar
+  reference implementations (``*_reference``) are retained and used
+  automatically for ``ContentionModel`` subclasses that override the
+  co-execution cost laws.
 """
 from __future__ import annotations
 
 import heapq
 from typing import Mapping, Sequence
 
-from .contention import ContentionModel
-from .costmodel import CostTable, PUSpec, transition_cost
-from .graph import ExecGraph, build_sequential_graph, node_weight
+import numpy as np
+
+from .contention import ContentionModel, PairCostCache, uses_default_coexec
+from .costmodel import CostTable, DenseCostTable, PUSpec, transition_cost
+from .graph import (DenseChain, ExecGraph, build_dense_chain,
+                    build_sequential_graph, node_weight)
 from .op import FusedOp, OpGraph
 from .schedule import (BranchSchedule, ConcurrentSchedule, ConcurrentStep,
                        ParallelSchedule, PhaseSchedule, SeqSchedule,
@@ -61,14 +79,100 @@ def dijkstra(g: ExecGraph) -> tuple[float, list[str]]:
     return dist[g.T], path
 
 
+# ---------------------------------------------------------------------------
+# Sequential DP (Eq. 1) — vectorized + scalar reference
+# ---------------------------------------------------------------------------
+
+
 def sequential_dp(
     chain: Sequence[int],
     ops: Sequence[FusedOp],
     table: CostTable,
     pus: Mapping[str, PUSpec],
     objective: str = "latency",
+    dense: DenseCostTable | None = None,
 ) -> tuple[float, list[str]]:
-    """Eq. (1) dynamic program; identical optimum to ``dijkstra``."""
+    """Eq. (1) dynamic program over the dense chain's batched transition
+    tensor: all ``(K, K)`` transition matrices and node weights are built
+    in one vectorized shot, then the recurrence runs one matrix op per
+    chain position (for small K — the edge SoC's 3 PUs — the per-position
+    minimisation runs as a tight loop over the precomputed arrays
+    instead, since NumPy's per-call overhead exceeds the K^2 arithmetic).
+
+    Bit-identical to ``sequential_dp_reference`` (same additions in the
+    same order, same first-minimum tie-break) and the same optimum as
+    ``dijkstra``.
+    """
+    dc = build_dense_chain(chain, ops, table, pus, objective, dense=dense)
+    n = len(chain)
+    k = dc.dense.k
+    pu_names = dc.dense.pus
+    if k >= 8:
+        cost = dc.entry_w + dc.node_w[0]             # (K,)
+        trans = dc.transitions()
+        back = np.empty((n - 1, k), dtype=np.int64) if n > 1 else None
+        for pos in range(1, n):
+            m = cost[:, None] + trans[pos - 1]       # (K, K): prev k -> next j
+            back[pos - 1] = np.argmin(m, axis=0)     # first minimum, PU order
+            cost = dc.node_w[pos] + np.min(m, axis=0)
+        total = cost + dc.exit_w
+        bp = int(np.argmin(total))
+        best = float(total[bp])
+        if not np.isfinite(best):
+            raise ValueError(
+                "no feasible path (some op unsupported everywhere?)")
+        idxs = [bp]
+        for pos in range(n - 1, 0, -1):
+            bp = int(back[pos - 1][bp])
+            idxs.append(bp)
+        idxs.reverse()
+        return best, [pu_names[i] for i in idxs]
+    # small-K path: same recurrence over the same batched arrays
+    INF = float("inf")
+    trans = dc.transitions().tolist()
+    nws = dc.node_w.tolist()
+    cost = (dc.entry_w + dc.node_w[0]).tolist()
+    rng = range(k)
+    back: list[list[int]] = []
+    for pos in range(1, n):
+        t = trans[pos - 1]
+        nw = nws[pos]
+        ncost = [0.0] * k
+        nback = [0] * k
+        for j in rng:
+            best, barg = INF, 0
+            for kk in rng:
+                c = cost[kk] + t[kk][j]
+                if c < best:
+                    best, barg = c, kk
+            ncost[j] = nw[j] + best
+            nback[j] = barg
+        cost = ncost
+        back.append(nback)
+    exit_w = dc.exit_w.tolist()
+    best, bp = INF, 0
+    for j in rng:
+        c = cost[j] + exit_w[j]
+        if c < best:
+            best, bp = c, j
+    if best == INF:
+        raise ValueError("no feasible path (some op unsupported everywhere?)")
+    idxs = [bp]
+    for pos in range(n - 1, 0, -1):
+        bp = back[pos - 1][bp]
+        idxs.append(bp)
+    idxs.reverse()
+    return best, [pu_names[i] for i in idxs]
+
+
+def sequential_dp_reference(
+    chain: Sequence[int],
+    ops: Sequence[FusedOp],
+    table: CostTable,
+    pus: Mapping[str, PUSpec],
+    objective: str = "latency",
+) -> tuple[float, list[str]]:
+    """Scalar Eq. (1) recurrence (pre-vectorization reference)."""
     INF = float("inf")
 
     def escale(pu: str) -> float:
@@ -118,13 +222,15 @@ def solve_sequential(
     table: CostTable,
     pus: Mapping[str, PUSpec],
     objective: str = "latency",
-    algorithm: str = "dijkstra",
+    algorithm: str = "dp",
 ) -> SeqSchedule:
     if algorithm == "dijkstra":
         g = build_sequential_graph(chain, ops, table, pus, objective)
         _, assign = dijkstra(g)
     elif algorithm == "dp":
         _, assign = sequential_dp(chain, ops, table, pus, objective)
+    elif algorithm == "dp_reference":
+        _, assign = sequential_dp_reference(chain, ops, table, pus, objective)
     else:
         raise ValueError(algorithm)
     lat, eng = evaluate_sequential(chain, assign, ops, table, pus)
@@ -137,6 +243,35 @@ def solve_sequential(
 # ---------------------------------------------------------------------------
 
 
+def _rewalk_branch(
+    chain: Sequence[int], assign: Sequence[str], table: CostTable,
+    pus: Mapping[str, PUSpec], contention: ContentionModel,
+    others: set[str],
+) -> tuple[float, float]:
+    """Contention-adjusted (latency, energy) of a fixed branch assignment:
+    every op cost scaled by the max SF vs the PU set used by the *other*
+    branches; transitions unscaled.  Only the assigned (op, PU) cells are
+    gathered — O(branch length), not O(model size)."""
+    ents = [table.require(oi, p) for oi, p in zip(chain, assign)]
+    wv = np.array([e.w for e in ents])
+    pv = np.array([e.power for e in ents])
+    h2dv = np.array([e.h2d for e in ents])
+    d2hv = np.array([e.d2h for e in ents])
+    accv = np.array([pus[p].is_accelerator for p in assign])
+    sf_of = {p: contention.branch_factor(p, others) for p in set(assign)}
+    sfv = np.array([sf_of[p] for p in assign])
+    pmv = np.array([pus[p].power_memory for p in assign])
+    # inter-op transitions (same PU -> 0; accelerator-gated H2D/D2H)
+    same = np.array([a == b for a, b in zip(assign[:-1], assign[1:])])
+    tcv = np.where(same, 0.0,
+                   np.where(accv[1:], h2dv[1:], 0.0)
+                   + np.where(accv[:-1], d2hv[:-1], 0.0))
+    lat = float(h2dv[0] + np.sum(wv * sfv) + np.sum(tcv) + d2hv[-1])
+    eng = float(h2dv[0] * pmv[0] + np.sum(wv * sfv * pv)
+                + np.sum(tcv * pmv[1:]) + d2hv[-1] * pmv[-1])
+    return lat, eng
+
+
 def solve_parallel(
     graph: OpGraph,
     table: CostTable,
@@ -144,7 +279,7 @@ def solve_parallel(
     contention: ContentionModel | None = None,
     objective: str = "latency",
 ) -> ParallelSchedule:
-    """Phase partition -> per-branch Dijkstra -> contention-adjusted makespan.
+    """Phase partition -> per-branch search -> contention-adjusted makespan.
 
     Per phase we also evaluate serialising all branches on the per-branch
     optimal assignments and keep whichever is cheaper, so parallel
@@ -163,34 +298,12 @@ def solve_parallel(
                 branch_ops=list(br.ops), assignment=s.assignment,
                 solo_latency=s.latency, adj_latency=s.latency, energy=s.energy))
         if len(brs) > 1:
-            # contention adjustment: every op cost scaled by the max SF vs
-            # the PU set used by the *other* branches.
             pu_sets = [set(b.assignment) for b in brs]
             for bi, b in enumerate(brs):
                 others: set[str] = set().union(
-                    *(pu_sets[j] for j in range(len(brs)) if j != bi)) if len(brs) > 1 else set()
-                lat_adj = 0.0
-                eng_adj = 0.0
-                # re-walk the branch applying per-op SF; transitions unscaled
-                chain, assign = b.branch_ops, b.assignment
-                e0 = table.require(chain[0], assign[0])
-                lat_adj += e0.h2d
-                eng_adj += e0.h2d * pus[assign[0]].power_memory
-                for pos, (oi, p) in enumerate(zip(chain, assign)):
-                    e = table.require(oi, p)
-                    sf = contention.branch_factor(p, others)
-                    lat_adj += e.w * sf
-                    eng_adj += e.w * sf * e.power
-                    if pos + 1 < len(chain):
-                        tc = transition_cost(pus, table, oi, p,
-                                             chain[pos + 1], assign[pos + 1])
-                        lat_adj += tc
-                        eng_adj += tc * pus[assign[pos + 1]].power_memory
-                eN = table.require(chain[-1], assign[-1])
-                lat_adj += eN.d2h
-                eng_adj += eN.d2h * pus[assign[-1]].power_memory
-                b.adj_latency = lat_adj
-                b.energy = eng_adj
+                    *(pu_sets[j] for j in range(len(brs)) if j != bi))
+                b.adj_latency, b.energy = _rewalk_branch(
+                    b.branch_ops, b.assignment, table, pus, contention, others)
             par_makespan = max(b.adj_latency for b in brs)
             par_energy = sum(b.energy for b in brs)
             seq_makespan = sum(b.solo_latency for b in brs)
@@ -236,19 +349,127 @@ def _solo_w(table: CostTable, oi: int, pu: str) -> float:
     return table.require(oi, pu).w
 
 
+def _solo_edges(d: DenseCostTable, objective: str
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Per-position solo-advance edges: (key, chosen PU idx, w, energy)."""
+    key = d.w if objective == "latency" else d.energy
+    arg = np.argmin(key, axis=1)                 # first minimum, PU order
+    rows = np.arange(d.n)
+    return key[rows, arg], arg, d.w[rows, arg], d.energy[rows, arg]
+
+
+def _suffix_heuristic(d: DenseCostTable, objective: str, scale: float
+                      ) -> np.ndarray:
+    """Admissible remaining-cost bound per progress index: suffix sums of
+    each op's best-PU solo cost, scaled by the contention model's minimum
+    co-execution factor.  (The loose-but-free bound; ``_cost_to_go``
+    tightens it to the exact relaxed optimum.)"""
+    m = np.min(d.w if objective == "latency" else d.energy, axis=1) * scale
+    suf = np.zeros(d.n + 1)
+    suf[:-1] = np.cumsum(m[::-1])[::-1]
+    return suf
+
+
+def _cost_to_go(pk: np.ndarray, sk0: np.ndarray, sk1: np.ndarray,
+                sig0: list[int], sig1_idx: np.ndarray) -> np.ndarray:
+    """Exact optimal cost-to-go over the (i, j) progress grid.
+
+    Backward DP, one vectorized row per chain-0 position: the within-row
+    dependency (solo chain-1 advances) is a suffix running-min after
+    rebasing by chain-1 solo prefix sums, so each row is O(n1) NumPy work.
+    This is the A* heuristic — exact up to accumulated FP rounding
+    (<= (n0 + n1) ulps), so A* expands only the optimal corridor instead
+    of flooding the grid.
+    """
+    n0, n1 = len(sig0), len(sig1_idx)
+    q1 = np.zeros(n1 + 1)
+    q1[:-1] = np.cumsum(sk1[::-1])[::-1]
+    ctg = np.empty((n0 + 1, n1 + 1))
+    ctg[n0] = q1
+    c2 = np.empty(n1 + 1)
+    for i in range(n0 - 1, -1, -1):
+        nxt = ctg[i + 1]
+        prow = pk[sig0[i]].take(sig1_idx)
+        np.minimum(prow + nxt[1:], sk0[i] + nxt[:-1], out=c2[:-1])
+        c2[-1] = sk0[i] + nxt[-1]
+        t = c2 - q1
+        rev = t[::-1]
+        np.minimum.accumulate(rev, out=rev)
+        np.add(q1, t, out=ctg[i])
+    return ctg
+
+
 def solve_concurrent_aligned(
     chain0: Sequence[int], table0: CostTable,
     chain1: Sequence[int], table1: CostTable,
     pus: Mapping[str, PUSpec],
     contention: ContentionModel | None = None,
     objective: str = "latency",
+    dense0: DenseCostTable | None = None,
+    dense1: DenseCostTable | None = None,
 ) -> ConcurrentSchedule:
     """Aligned Dijkstra: both requests advance in lockstep (same-model pairs).
 
     At each step the search selects a PU pair (d0, d1).  Same-PU step cost =
     average of measured concurrent execution times; cross-PU = max of
     (contention-adjusted) solo times.  Tails (unequal lengths) advance solo.
+    Per-step PU-pair minimisation runs on the memoized dense pair-cost
+    matrices; a custom contention model falls back to the scalar reference.
     """
+    contention = contention or ContentionModel()
+    if not uses_default_coexec(contention):
+        return solve_concurrent_aligned_reference(
+            chain0, table0, chain1, table1, pus, contention, objective)
+    d0 = dense0 if dense0 is not None else DenseCostTable.from_chain(
+        chain0, table0, pus)
+    d1 = dense1 if dense1 is not None else DenseCostTable.from_chain(
+        chain1, table1, pus)
+    cache = PairCostCache(contention, d0, d1)
+    k1 = d1.k
+    n = min(d0.n, d1.n)
+    steps: list[ConcurrentStep] = []
+    total = 0.0
+    energy = 0.0
+    sig0, sig1 = d0.sig.tolist(), d1.sig.tolist()
+    pk, ps, pe, pa = cache.edge_tables(objective)
+    pkl, psl, pel, pal = pk.tolist(), ps.tolist(), pe.tolist(), pa.tolist()
+    for i in range(n):
+        s0, s1 = sig0[i], sig1[i]
+        if pkl[s0][s1] == float("inf"):
+            d0.require_row(i)
+            d1.require_row(i)
+        p0i, p1i = divmod(pal[s0][s1], k1)
+        step_cost = psl[s0][s1]
+        steps.append(ConcurrentStep(ops=(chain0[i], chain1[i]),
+                                    pus=(d0.pus[p0i], d1.pus[p1i]),
+                                    cost=step_cost))
+        total += step_cost
+        energy += pel[s0][s1]
+    # solo tail for the longer request
+    dl, idx = (d0, 0) if d0.n > n else (d1, 1)
+    longer = chain0 if idx == 0 else chain1
+    _, sarg, sw, se = _solo_edges(dl, objective)
+    for i in range(n, dl.n):
+        dl.require_row(i)
+        p = dl.pus[int(sarg[i])]
+        w, e = float(sw[i]), float(se[i])
+        ops = (longer[i], None) if idx == 0 else (None, longer[i])
+        pus_ = (p, None) if idx == 0 else (None, p)
+        steps.append(ConcurrentStep(ops=ops, pus=pus_, cost=w))
+        total += w
+        energy += e
+    return ConcurrentSchedule(steps=steps, latency=total, energy=energy,
+                              objective=objective, mode="aligned")
+
+
+def solve_concurrent_aligned_reference(
+    chain0: Sequence[int], table0: CostTable,
+    chain1: Sequence[int], table1: CostTable,
+    pus: Mapping[str, PUSpec],
+    contention: ContentionModel | None = None,
+    objective: str = "latency",
+) -> ConcurrentSchedule:
+    """Scalar aligned-mode solver (pre-vectorization reference)."""
     contention = contention or ContentionModel()
     n = min(len(chain0), len(chain1))
     steps: list[ConcurrentStep] = []
@@ -304,14 +525,154 @@ def solve_concurrent_joint(
     pus: Mapping[str, PUSpec],
     contention: ContentionModel | None = None,
     objective: str = "latency",
+    algorithm: str = "auto",
+    dense0: DenseCostTable | None = None,
+    dense1: DenseCostTable | None = None,
 ) -> ConcurrentSchedule:
-    """Joint (i, j) Dijkstra: each request's progress tracked independently.
+    """Joint (i, j) search: each request's progress tracked independently.
 
     State (i, j) = completed op counts.  Transitions: advance both
     (i+1, j+1), advance request 0 solo (i+1, j), or advance request 1 solo
     (i, j+1) — allowing asymmetric completion with solo tails (paper
     §3.2.2).
+
+    Runs as A* on the dense progress grid: all PU options for a transition
+    share a successor, so each state has at most three precomputed
+    min-edges, and the consistent suffix-sum heuristic steers expansion
+    down the optimal corridor instead of flooding the grid like the
+    reference Dijkstra.  Identical cost/assignment semantics to
+    ``solve_concurrent_joint_reference``.
     """
+    contention = contention or ContentionModel()
+    if algorithm == "auto":
+        algorithm = "astar" if uses_default_coexec(contention) else "dijkstra"
+    if algorithm == "dijkstra":
+        return solve_concurrent_joint_reference(
+            chain0, table0, chain1, table1, pus, contention, objective)
+    if algorithm != "astar":
+        raise ValueError(algorithm)
+    if not uses_default_coexec(contention):
+        raise ValueError(
+            "algorithm='astar' requires the default co-execution cost laws; "
+            f"{type(contention).__name__} overrides them — use "
+            "algorithm='auto' or 'dijkstra'")
+
+    d0 = dense0 if dense0 is not None else DenseCostTable.from_chain(
+        chain0, table0, pus)
+    d1 = dense1 if dense1 is not None else DenseCostTable.from_chain(
+        chain1, table1, pus)
+    cache = PairCostCache(contention, d0, d1)
+    n0, n1 = d0.n, d1.n
+    k1 = d1.k
+    pk, ps, pe, pa = cache.edge_tables(objective)
+    sk0, sa0, sw0, se0 = _solo_edges(d0, objective)
+    sk1, sa1, sw1, se1 = _solo_edges(d1, objective)
+    if not (np.isfinite(sk0).all() and np.isfinite(sk1).all()):
+        # some op unsupported on every PU: no transition can advance it
+        raise ValueError("joint search failed to reach target state")
+
+    sig0, sig1 = d0.sig.tolist(), d1.sig.tolist()
+    sk0l, sk1l = sk0.tolist(), sk1.tolist()
+    pkl = pk.tolist()    # nested Python lists: cheaper hot-loop indexing
+    hs = _cost_to_go(pk, sk0, sk1, sig0, d1.sig).ravel()
+
+    # f is quantized before entering the heap and ties break toward
+    # *larger* g (deeper states).  Schedules whose true costs coincide
+    # (e.g. energy mode, where pairing two ops on their shared best PU
+    # costs exactly their solo sum) reach f values that differ only by
+    # accumulated FP rounding; without quantization that noise orders the
+    # plateau breadth-first and the search floods the whole grid.  The
+    # quantum sits ~100x above worst-case accumulated rounding and ~100x
+    # below any physically meaningful cost gap, and bounds the returned
+    # path's suboptimality by 2 quanta (~1e-11 relative) — tie-free
+    # instances still return the bitwise-exact reference optimum.
+    c00 = hs[0]
+    quantum = (c00 if c00 > 0 else 1.0) * (n0 + n1 + 64) * 1e-15
+    inv_q = 1.0 / quantum
+
+    n1p = n1 + 1
+    n_states = (n0 + 1) * n1p
+    dist = np.full(n_states, np.inf)
+    act = np.zeros(n_states, dtype=np.int8)  # 1 = pair, 2 = solo0, 3 = solo1
+    target = n_states - 1
+    dist[0] = 0.0
+    heap: list[tuple[int, float, int]] = [(int(c00 * inv_q), 0.0, 0)]
+    found = False
+    while heap:
+        fq, ng, s = heapq.heappop(heap)
+        g = -ng
+        if g > dist[s]:
+            continue
+        if s == target:
+            found = True
+            break
+        i, j = divmod(s, n1p)
+        if i < n0 and j < n1:
+            nd = g + pkl[sig0[i]][sig1[j]]
+            ns = s + n1p + 1
+            if nd < dist[ns]:
+                dist[ns] = nd
+                act[ns] = 1
+                heapq.heappush(heap, (int((nd + hs[ns]) * inv_q), -nd, ns))
+        if i < n0:
+            nd = g + sk0l[i]
+            ns = s + n1p
+            if nd < dist[ns]:
+                dist[ns] = nd
+                act[ns] = 2
+                heapq.heappush(heap, (int((nd + hs[ns]) * inv_q), -nd, ns))
+        if j < n1:
+            nd = g + sk1l[j]
+            ns = s + 1
+            if nd < dist[ns]:
+                dist[ns] = nd
+                act[ns] = 3
+                heapq.heappush(heap, (int((nd + hs[ns]) * inv_q), -nd, ns))
+    if not found:
+        raise ValueError("joint search failed to reach target state")
+    # reconstruct (energy accumulated target -> start, like the reference)
+    steps: list[ConcurrentStep] = []
+    energy = 0.0
+    i, j = n0, n1
+    while (i, j) != (0, 0):
+        a = int(act[i * n1p + j])
+        if a == 1:
+            i -= 1
+            j -= 1
+            p0i, p1i = divmod(int(pa[sig0[i], sig1[j]]), k1)
+            steps.append(ConcurrentStep(
+                ops=(chain0[i], chain1[j]),
+                pus=(d0.pus[p0i], d1.pus[p1i]),
+                cost=float(ps[sig0[i], sig1[j]])))
+            energy += float(pe[sig0[i], sig1[j]])
+        elif a == 2:
+            i -= 1
+            steps.append(ConcurrentStep(
+                ops=(chain0[i], None), pus=(d0.pus[int(sa0[i])], None),
+                cost=float(sw0[i])))
+            energy += float(se0[i])
+        elif a == 3:
+            j -= 1
+            steps.append(ConcurrentStep(
+                ops=(None, chain1[j]), pus=(None, d1.pus[int(sa1[j])]),
+                cost=float(sw1[j])))
+            energy += float(se1[j])
+        else:  # pragma: no cover - would mean a corrupt predecessor chain
+            raise RuntimeError(f"joint A*: no action recorded at ({i}, {j})")
+    steps.reverse()
+    latency = sum(s.cost for s in steps)
+    return ConcurrentSchedule(steps=steps, latency=latency, energy=energy,
+                              objective=objective, mode="joint")
+
+
+def solve_concurrent_joint_reference(
+    chain0: Sequence[int], table0: CostTable,
+    chain1: Sequence[int], table1: CostTable,
+    pus: Mapping[str, PUSpec],
+    contention: ContentionModel | None = None,
+    objective: str = "latency",
+) -> ConcurrentSchedule:
+    """Joint (i, j) Dijkstra over dict states (pre-A* reference)."""
     contention = contention or ContentionModel()
     n0, n1 = len(chain0), len(chain1)
     INF = float("inf")

@@ -2,7 +2,9 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import ALL_ARCHS, get_config
 from repro.core.autoshard import (STRATEGIES, AutoshardResult,

@@ -6,7 +6,9 @@ the same invariants through hypothesis' shrinking search.)
 import itertools
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (CostEntry, CostTable, EDGE_PUS, dijkstra,
                         sequential_dp, solve_concurrent_joint,
