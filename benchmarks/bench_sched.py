@@ -9,7 +9,10 @@ Times, across the model zoo:
 * ``solve_concurrent_joint`` — dense-table A* vs the reference dict-state
   Dijkstra at the seed's 48-segment granularity (the apples-to-apples
   speedup claim), plus A*-only timings at full operator resolution
-  (where the reference is intractable: the seed needed coarsening).
+  (where the reference is intractable: the seed needed coarsening);
+* ``solve_concurrent`` with M >= 3 requests — the exact M-dimensional
+  grid A* at coarsened granularity (its state count is recorded) and the
+  pairwise-merge fallback at full resolution.
 
 Writes ``BENCH_sched.json`` so subsequent PRs can diff the trajectory.
 ``--smoke`` runs a seconds-scale subset (used by CI).
@@ -17,10 +20,11 @@ Writes ``BENCH_sched.json`` so subsequent PRs can diff the trajectory.
 from __future__ import annotations
 
 import json
+import math
 import time
 
 from repro.core import (ContentionModel, EDGE_PUS, EdgeSoCCostModel,
-                        solve_concurrent_joint,
+                        Workload, solve_concurrent, solve_concurrent_joint,
                         solve_concurrent_joint_reference, solve_parallel,
                         solve_sequential)
 from repro.core.paperzoo import zoo
@@ -32,8 +36,13 @@ PAR_MODELS = ["ViT-B/16 FP16", "SNN-VGG9 FP16"]
 JOINT_PAIRS = [("ViT-B/16 FP16", "ResNet-50 FP16"),
                ("SNN-VGG9 FP16", "LAVISH FP16"),
                ("pi0.5", "Hyena FP16")]
+M_SETS = [("ViT-B/16 FP16", "ResNet-50 FP16", "SNN-VGG9 FP16"),
+          ("LLaMA-7B(1L) FP16", "Mamba-370M FP16", "KAN FP16",
+           "LAVISH FP16")]
 SMOKE_SEQ = ["ViT-B/16 FP16"]
 SMOKE_PAIRS = [("ViT-B/16 FP16", "ResNet-50 FP16")]
+SMOKE_M_SETS = [("LLaMA-7B(1L) FP16", "Mamba-370M FP16", "KAN FP16")]
+M_GRID_SEGMENTS = 32   # grid granularity: (32+1)^3 ~ 36k states
 
 
 def _best_of(fn, repeats: int) -> float:
@@ -54,15 +63,17 @@ def run(verbose: bool = True, smoke: bool = False,
     seq_models = SMOKE_SEQ if smoke else SEQ_MODELS
     joint_pairs = SMOKE_PAIRS if smoke else JOINT_PAIRS
     par_models = SMOKE_SEQ if smoke else PAR_MODELS
+    m_sets = SMOKE_M_SETS if smoke else M_SETS
 
     tables = {}
     for name in set(seq_models + par_models
-                    + [n for p in joint_pairs for n in p]):
+                    + [n for p in joint_pairs for n in p]
+                    + [n for s in m_sets for n in s]):
         g = z[name]
         tables[name] = (g, list(range(len(g))), model.build_table(g))
 
     out: dict = {"smoke": smoke, "sequential": {}, "parallel": {},
-                 "joint_48seg": {}, "joint_fullres": {}}
+                 "joint_48seg": {}, "joint_fullres": {}, "concurrent_m": {}}
 
     for name in seq_models:
         g, chain, table = tables[name]
@@ -106,6 +117,28 @@ def run(verbose: bool = True, smoke: bool = False,
                                                EDGE_PUS, cm),
                 repeats)}
 
+    for mset in m_sets:
+        # exact M-dim grid at coarsened granularity + pairwise fallback
+        # at full resolution (the two routes an M-model sweep exercises)
+        coarse, full = [], []
+        for name in mset:
+            g, chain, table = tables[name]
+            cc, ct = segment_table(g, table, M_GRID_SEGMENTS)
+            coarse.append(Workload.build(cc, ct, EDGE_PUS))
+            full.append(Workload.build(chain, table, EDGE_PUS, ops=g.ops))
+        n_states = math.prod(wl.n + 1 for wl in coarse)
+        row = {
+            "m": len(mset),
+            "grid_states": n_states,
+            "grid_%dseg_ms" % M_GRID_SEGMENTS: 1e3 * _best_of(
+                lambda: solve_concurrent(coarse, cm, algorithm="grid",
+                                         max_states=n_states), repeats),
+            "pairwise_fullres_ms": 1e3 * _best_of(
+                lambda: solve_concurrent(full, cm, algorithm="pairwise"),
+                repeats),
+        }
+        out["concurrent_m"][" x ".join(mset)] = row
+
     joint_speedup = geomean([r["speedup"]
                              for r in out["joint_48seg"].values()])
     out["joint_48seg_geomean_speedup"] = joint_speedup
@@ -131,6 +164,12 @@ def run(verbose: bool = True, smoke: bool = False,
         for pair, r in out["joint_fullres"].items():
             print(f"  joint@full {pair:30s} ({r['n0']}x{r['n1']} ops)"
                   f" A* {r['astar_ms']:8.2f}ms")
+        for mset, r in out["concurrent_m"].items():
+            print(f"  M={r['m']} {mset}")
+            print(f"       grid@{M_GRID_SEGMENTS}seg "
+                  f"({r['grid_states']} states) "
+                  f"{r['grid_%dseg_ms' % M_GRID_SEGMENTS]:8.2f}ms   "
+                  f"pairwise@full {r['pairwise_fullres_ms']:8.2f}ms")
         for c, ok in out["checks"].items():
             print(f"  [{'PASS' if ok else 'FAIL'}] {c}")
 

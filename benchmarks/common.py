@@ -5,7 +5,7 @@ import math
 import time
 from typing import Mapping, Sequence
 
-from repro.core import (CostTable, EdgeSoCCostModel, EDGE_PUS,
+from repro.core import (CostTable, EdgeSoCCostModel, EDGE_PUS, Workload,
                         single_pu_cost, solve_sequential)
 from repro.core.costmodel import CostEntry
 from repro.core.op import FusedOp, OpGraph
@@ -24,15 +24,16 @@ def geomean(xs: Sequence[float]) -> float:
     return math.exp(sum(math.log(x) for x in xs) / len(xs))
 
 
-def best_single(chain, ops, table, pus=EDGE_PUS, objective: str = "latency"):
-    """(best_pu, value, per_pu dict) of monolithic execution."""
-    idx = 0 if objective == "latency" else 1
-    vals = {}
-    for pu in table.pus:
-        c = single_pu_cost(chain, pu, ops, table, pus)
-        vals[pu] = None if c is None else c[idx]
-    feas = {k: v for k, v in vals.items() if v is not None}
-    if not feas:
+def best_single(chain, ops, table, pus=EDGE_PUS, objective: str = "latency",
+                workload: Workload | None = None):
+    """(best_pu, value, per_pu dict) of monolithic execution — a thin
+    wrapper over ``Workload.best_solo`` that adds per-PU blocker detail
+    to the infeasibility error."""
+    wl = workload if workload is not None else Workload.build(
+        chain, table, pus, ops=ops)
+    try:
+        return wl.best_solo(objective)
+    except ValueError:
         blockers = {
             pu: [f"op {oi} ({ops[oi].name})" for oi in chain
                  if not table.supported(oi, pu)][:3]
@@ -40,8 +41,6 @@ def best_single(chain, ops, table, pus=EDGE_PUS, objective: str = "latency"):
         raise ValueError(
             "no single PU supports every op of the chain "
             f"(len={len(chain)}); first unsupported ops per PU: {blockers}")
-    b = min(feas, key=feas.get)
-    return b, feas[b], vals
 
 
 def sequential_report(graph: OpGraph, model: EdgeSoCCostModel | None = None):
@@ -49,10 +48,15 @@ def sequential_report(graph: OpGraph, model: EdgeSoCCostModel | None = None):
     model = model or EdgeSoCCostModel()
     table = model.build_table(graph)
     chain = graph.topo_order()
-    b, bl, lat = best_single(chain, graph.ops, table)
-    sched_l = solve_sequential(chain, graph.ops, table, EDGE_PUS, "latency")
-    sched_e = solve_sequential(chain, graph.ops, table, EDGE_PUS, "energy")
-    _, be, _ = best_single(chain, graph.ops, table, objective="energy")
+    # one dense ingestion shared by the baselines and both solves
+    wl = Workload.build(chain, table, EDGE_PUS, ops=graph.ops)
+    b, bl, lat = best_single(chain, graph.ops, table, workload=wl)
+    sched_l = solve_sequential(chain, graph.ops, table, EDGE_PUS, "latency",
+                               workload=wl)
+    sched_e = solve_sequential(chain, graph.ops, table, EDGE_PUS, "energy",
+                               workload=wl)
+    _, be, _ = best_single(chain, graph.ops, table, objective="energy",
+                           workload=wl)
     return {
         "table": table, "chain": chain, "best": b,
         "single_lat": lat, "best_lat": bl, "best_energy": be,

@@ -11,6 +11,15 @@ from . import (bench_sched, fig2_op_affinity, fig3_matmul_sweep,
                fig4_parallel_pairs, fig6_energy, fig8_concurrent,
                table2_sequential, table3_parallel, tpu_autoshard)
 
+class _fig8_multi:
+    """Harness shim: the beyond-paper M-model extension of Fig. 8."""
+
+    @staticmethod
+    def run(verbose: bool = True) -> dict:
+        return fig8_concurrent.run_multi(verbose=verbose, n_models=3,
+                                         limit=15)
+
+
 MODULES = [
     ("Fig. 2 operator affinity", fig2_op_affinity),
     ("Fig. 3 MatMul size sweep", fig3_matmul_sweep),
@@ -20,6 +29,7 @@ MODULES = [
     ("Table 3 intra-model parallel", table3_parallel),
     ("Fig. 8 multi-model concurrent (190 pairs, full resolution)",
      fig8_concurrent),
+    ("Fig. 8 extension: 3-model concurrent sweep", _fig8_multi),
     ("Scheduler micro-benchmark (BENCH_sched.json)", bench_sched),
     ("TPU autoshard (beyond-paper)", tpu_autoshard),
 ]

@@ -35,6 +35,10 @@ print(f"dynamic plan: {dyn.plan.assignment}")
 for e in dyn.events:
     print(f"remap at op {e.at_op} ({e.reason}): tail "
           f"{e.old_tail_cost*1e3:.2f} -> {e.new_tail_cost*1e3:.2f} ms predicted")
+# the stitched plan carries real re-evaluated numbers (prefix at the
+# nominal profile, tail under the throttled condition) — no NaNs
+print(f"stitched plan: {dyn.plan.latency*1e3:.2f} ms / "
+      f"{dyn.plan.energy*1e3:.2f} mJ predicted")
 print(f"\nrealised latency: static {t_static*1e3:.2f} ms, "
       f"dynamic {t_dyn*1e3:.2f} ms ({t_static/t_dyn:.2f}x)")
 assert t_dyn < t_static

@@ -1,10 +1,13 @@
-"""Multi-model concurrent inference: the paper's Fig. 7(b) on real models.
+"""Multi-model concurrent inference: the paper's Fig. 7(b) on real models,
+extended from pairs to M concurrent requests.
 
-Two models' operator graphs are co-scheduled with the joint (i, j)
-Dijkstra; the schedule is then REALLY EXECUTED on the multi-lane
-orchestrator (one worker lane per PU), and outputs are verified against
-isolated execution.  Finally the predicted concurrent makespan is
-compared with homogeneous serial execution.
+Three models' operator graphs are co-scheduled with the M-request joint
+search (``solve_concurrent`` — exact grid A* here; pairs keep the 2-D
+A*); the schedule is then REALLY EXECUTED across the multi-lane
+orchestrator (one worker lane per PU, all models multiplexed onto the
+shared lanes), and each model's outputs are verified against isolated
+execution.  Finally the predicted concurrent makespan is compared with
+homogeneous serial execution.
 
 Run:  PYTHONPATH=src python examples/multi_model_concurrent.py
 """
@@ -12,9 +15,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import (EDGE_PUS, AnalyticProfiler, ContentionModel,
-                        FusedOp, OpGraph, ScheduleExecutor,
-                        solve_concurrent_joint)
-from repro.core.schedule import single_pu_cost
+                        FusedOp, OpGraph, ScheduleExecutor, Workload,
+                        solve_concurrent)
 
 key = jax.random.PRNGKey(0)
 
@@ -43,39 +45,53 @@ def scan_model(name: str, n_layers: int, width: int):
     return OpGraph(ops), jax.random.normal(key, (1, width, width))
 
 
-g_a, x_a = gemm_model("A", 8, 512)
-g_b, x_b = scan_model("B", 8, 512)
+def conv_model(name: str, n_layers: int, width: int):
+    """A conv-heavy request (NPU-affine — ResNet/SNN class)."""
+    ops = []
+    for i in range(n_layers):
+        w = jax.random.normal(jax.random.fold_in(key, 100 + i),
+                              (width, width)) * (1.0 / width) ** 0.5
+        ops.append(FusedOp(
+            name=f"{name}.cv{i}", kind="conv2d",
+            in_shapes=((1, 32, 24, 24), (32, 32, 3, 3)),
+            out_shape=(1, 32, 24, 24),
+            fn=(lambda wi: lambda a: jnp.tanh(a @ wi))(w)))
+    return OpGraph(ops), jax.random.normal(key, (1, width, width))
+
+
+models = [gemm_model("A", 8, 512), scan_model("B", 8, 512),
+          conv_model("C", 6, 512)]
 prof = AnalyticProfiler()
-t_a, t_b = prof.profile(g_a), prof.profile(g_b)
+workloads = []
+serial = 0.0
+for g, _ in models:
+    table = prof.profile(g)
+    wl = Workload.build(g.topo_order(), table, EDGE_PUS, ops=g.ops)
+    workloads.append(wl)
+    serial += wl.best_solo()[1]   # best single PU, back to back
 
-# serial baseline: each model on its own best single PU, back to back
-chain_a, chain_b = g_a.topo_order(), g_b.topo_order()
-bl_a = min(v for v in (single_pu_cost(chain_a, p, g_a.ops, t_a, EDGE_PUS)
-                       for p in EDGE_PUS) if v)[0]
-bl_b = min(v for v in (single_pu_cost(chain_b, p, g_b.ops, t_b, EDGE_PUS)
-                       for p in EDGE_PUS) if v)[0]
-
-sched = solve_concurrent_joint(chain_a, t_a, chain_b, t_b, EDGE_PUS,
-                               ContentionModel())
-print(f"serial best-single: {1e3*(bl_a+bl_b):.2f} ms "
-      f"(A {1e3*bl_a:.2f} + B {1e3*bl_b:.2f})")
-print(f"BIDENT concurrent:  {1e3*sched.latency:.2f} ms "
-      f"-> {(bl_a+bl_b)/sched.latency:.2f}x")
+sched = solve_concurrent(workloads, ContentionModel())
+print(f"serial best-single: {1e3*serial:.2f} ms")
+print(f"BIDENT {len(models)}-model concurrent ({sched.mode}): "
+      f"{1e3*sched.latency:.2f} ms -> {serial/sched.latency:.2f}x")
 
 # show the first few co-scheduled steps (Fig. 7(b) style)
-print("\nfirst 6 concurrent steps (opA@PU || opB@PU):")
+print("\nfirst 6 concurrent steps:")
 for st in sched.steps[:6]:
-    a = (f"{g_a.ops[st.ops[0]].name}@{st.pus[0]}" if st.ops[0] is not None
-         else "--idle--")
-    b = (f"{g_b.ops[st.ops[1]].name}@{st.pus[1]}" if st.ops[1] is not None
-         else "--idle--")
-    print(f"  {a:20s} || {b:20s} ({st.cost*1e6:7.1f} us)")
+    cols = []
+    for r, (g, _) in enumerate(models):
+        cols.append(f"{g.ops[st.ops[r]].name}@{st.pus[r]}"
+                    if st.ops[r] is not None else "--idle--")
+    print("  " + " || ".join(f"{c:16s}" for c in cols)
+          + f" ({st.cost*1e6:7.1f} us)")
 
-# really execute both schedules on the lane executor and verify outputs
+# really execute the M-model schedule across the shared PU lanes and
+# verify every model's outputs against isolated execution
 ex = ScheduleExecutor(list(EDGE_PUS))
-for g, x, req in ((g_a, x_a, 0), (g_b, x_b, 1)):
-    assign = dict(sched.assignment_of(req))
-    mono = ex.run_monolithic(g, {0: (x,)})
-    orch = ex.run_scheduled(g, assign, {0: (x,)})
-    assert ScheduleExecutor.outputs_close(mono, orch)
-print("\nboth models' orchestrated outputs == monolithic: OK")
+graphs = [g for g, _ in models]
+inputs = [{0: (x,)} for _, x in models]
+conc = ex.run_concurrent(graphs, sched, inputs)
+for g, x, got in zip(graphs, inputs, conc):
+    mono = ex.run_monolithic(g, x)
+    assert ScheduleExecutor.outputs_close(mono, got)
+print(f"\nall {len(models)} models' orchestrated outputs == isolated: OK")

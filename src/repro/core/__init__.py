@@ -6,7 +6,7 @@ sharding-strategy roofline (``repro.core.autoshard``, the beyond-paper
 system).
 """
 from .contention import (ContentionModel, DEFAULT_MM_SF, PairCostCache,
-                         uses_default_coexec)
+                         uses_default_coexec, uses_default_group)
 from .costmodel import (CPU, GPU, NPU, EDGE_PUS, DEFAULT_SF, CostEntry,
                         CostTable, DenseCostTable, EdgeSoCCostModel, PUSpec,
                         transition_cost)
@@ -16,28 +16,33 @@ from .graph import (DenseChain, ExecGraph, build_dense_chain,
 from .op import Branch, FusedOp, OpGraph, Phase, chain_graph
 from .profiler import (AnalyticProfiler, MeasuredProfiler, measure_callable,
                        trace_fused_ops)
-from .schedule import (ConcurrentSchedule, ParallelSchedule, SeqSchedule,
-                       evaluate_sequential, single_pu_cost)
-from .search import (dijkstra, sequential_dp, sequential_dp_reference,
-                     solve_concurrent_aligned,
+from .schedule import (ConcurrentSchedule, ConcurrentStep, ParallelSchedule,
+                       SeqSchedule, evaluate_sequential,
+                       evaluate_sequential_reference, single_pu_cost)
+from .search import (ConcurrentCaches, dijkstra, sequential_dp,
+                     sequential_dp_reference,
+                     solve_concurrent, solve_concurrent_aligned,
                      solve_concurrent_aligned_reference,
                      solve_concurrent_joint, solve_concurrent_joint_reference,
                      solve_parallel, solve_sequential)
+from .workload import Workload
 from . import autoshard, modelgraph, paperzoo  # noqa: F401  (TPU mode + graphs)
 
 __all__ = [
     "ContentionModel", "DEFAULT_MM_SF", "PairCostCache",
-    "uses_default_coexec", "CPU", "GPU", "NPU", "EDGE_PUS",
-    "DEFAULT_SF", "CostEntry", "CostTable", "DenseCostTable",
-    "EdgeSoCCostModel", "PUSpec",
+    "uses_default_coexec", "uses_default_group", "CPU", "GPU", "NPU",
+    "EDGE_PUS", "DEFAULT_SF", "CostEntry", "CostTable", "DenseCostTable",
+    "EdgeSoCCostModel", "PUSpec", "Workload",
     "transition_cost", "ScheduleExecutor", "DenseChain", "ExecGraph",
     "build_dense_chain", "build_sequential_graph", "Branch", "FusedOp",
     "OpGraph", "Phase",
     "chain_graph", "AnalyticProfiler", "MeasuredProfiler",
     "measure_callable", "trace_fused_ops", "ConcurrentSchedule",
-    "ParallelSchedule", "SeqSchedule", "evaluate_sequential",
+    "ConcurrentStep", "ParallelSchedule", "SeqSchedule",
+    "evaluate_sequential", "evaluate_sequential_reference",
     "single_pu_cost", "dijkstra", "sequential_dp", "sequential_dp_reference",
-    "solve_concurrent_aligned", "solve_concurrent_aligned_reference",
+    "ConcurrentCaches", "solve_concurrent", "solve_concurrent_aligned",
+    "solve_concurrent_aligned_reference",
     "solve_concurrent_joint", "solve_concurrent_joint_reference",
     "solve_parallel", "solve_sequential",
 ]

@@ -18,7 +18,7 @@ Two empirically grounded models:
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping
+from typing import Mapping, Sequence
 
 import numpy as np
 
@@ -77,6 +77,44 @@ class ContentionModel:
             return 0.5 * (cc_a + cc_b)
         return max(cc_a, cc_b)
 
+    # -- M-ary co-execution (generalizes the pair laws above) ---------------
+    def _group_factors(self, pus_: Sequence[str]) -> dict[str, float]:
+        """Per-active-PU bandwidth-contention factor: max SF against the
+        *other* distinct PUs active in the step (1.0 when alone)."""
+        active = set(pus_)
+        return {q: max((self.mm_sf.get((q, p), 1.0)
+                        for p in active if p != q), default=1.0)
+                for q in active}
+
+    def group_step_cost(self, ts: Sequence[float],
+                        pus_: Sequence[str]) -> float:
+        """Makespan of M co-scheduled ops (one per request).
+
+        Ops sharing a PU serialise on its command queue (queue time = sum
+        of solo times); each queue is inflated by the memory-bandwidth
+        contention factor against the other active PUs; the step cost is
+        the slowest queue.  For M = 2 this reduces exactly to
+        ``pair_step_cost``: same-PU -> ``t_a + t_b``, cross-PU ->
+        ``max(t_a*SF(a,b), t_b*SF(b,a))``.
+        """
+        f = self._group_factors(pus_)
+        cost = 0.0
+        for q, fq in f.items():
+            tq = sum(t for t, p in zip(ts, pus_) if p == q)
+            cost = max(cost, tq * fq)
+        return cost
+
+    def group_energy(self, ts: Sequence[float], powers: Sequence[float],
+                     pus_: Sequence[str]) -> float:
+        """Energy of M co-scheduled ops: each op runs for its concurrent
+        duration at its PU's power.  Time-shared same-PU execution draws
+        the PU's power once, so each op is charged its solo share scaled
+        only by the cross-PU contention factor — for M = 2 this is the
+        pair energy law bit-for-bit (same-PU ``t_a*p_a + t_b*p_b``,
+        cross-PU ``cc_a*p_a + cc_b*p_b``)."""
+        f = self._group_factors(pus_)
+        return sum(t * f[p] * pw for t, p, pw in zip(ts, pus_, powers))
+
     def min_factor(self) -> float:
         """Smallest factor any co-executed op's solo time can be scaled by.
 
@@ -94,6 +132,19 @@ def uses_default_coexec(cm: ContentionModel) -> bool:
     scalar reference solvers."""
     return (type(cm).co_exec is ContentionModel.co_exec
             and type(cm).pair_step_cost is ContentionModel.pair_step_cost)
+
+
+def uses_default_group(cm: ContentionModel) -> bool:
+    """True iff ``cm`` inherits the base M-ary group laws AND the pair
+    laws they generalize.  The M-dimensional grid search prices group
+    advances with ``group_step_cost``/``group_energy``; a model that
+    overrides the pair laws but not the group laws would be priced
+    inconsistently, so such models route to the pairwise-merge fallback
+    (which honours custom pair laws through the reference solvers)."""
+    return (uses_default_coexec(cm)
+            and type(cm).group_step_cost is ContentionModel.group_step_cost
+            and type(cm).group_energy is ContentionModel.group_energy
+            and type(cm)._group_factors is ContentionModel._group_factors)
 
 
 class PairCostCache:
@@ -134,6 +185,8 @@ class PairCostCache:
         self.sf_b = np.array([[cm.mm_sf.get((b, a), 1.0) for b in p1]
                               for a in p0])
         self.same = np.array([[a == b for b in p1] for a in p0])
+        self._memo: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray,
+                                    np.ndarray]] = {}
 
     def edge_tables(self, objective: str
                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
@@ -145,16 +198,25 @@ class PairCostCache:
         Returns ``(key, step_cost, energy, flat_argmin)``, each
         ``(n_sig0, n_sig1)``.  The flat row-major argmin reproduces the
         scalar solvers' first-minimum ``for d0 ... for d1`` tie-break.
+
+        The 4-D cost/energy reductions are objective-independent, so the
+        first call builds **both** objectives' tables in one chunked pass
+        and memoizes them — a shared cache threaded through a pair's
+        latency- and energy-objective solves pays the 4-D setup once.
         """
+        if objective not in self._memo:
+            self._build()
+        return self._memo[objective]
+
+    def _build(self) -> None:
         r0, r1 = self.d0.sig_row, self.d1.sig_row
         t0s, p0s, m0s = self.d0.w[r0], self.d0.power[r0], self.d0.mask[r0]
         t1, p1, m1 = self.d1.w[r1], self.d1.power[r1], self.d1.mask[r1]
         s0, s1 = len(r0), len(r1)
         k0, k1 = t0s.shape[1], t1.shape[1]
-        pk = np.empty((s0, s1))
-        ps = np.empty((s0, s1))
-        pe = np.empty((s0, s1))
-        pa = np.empty((s0, s1), dtype=np.int64)
+        out = {obj: tuple(np.empty((s0, s1)) for _ in range(3))
+               + (np.empty((s0, s1), dtype=np.int64),)
+               for obj in ("latency", "energy")}
         a1 = t1[None, :, None, :]        # (1, S1, 1, K1)
         with np.errstate(invalid="ignore"):  # inf * 0 at unsupported slots
             e1 = a1 * p1[None, :, None, :]
@@ -178,11 +240,13 @@ class PairCostCache:
             energy[bad] = np.inf
             cost = cost.reshape(hi - lo, s1, k0 * k1)
             energy = energy.reshape(hi - lo, s1, k0 * k1)
-            key = cost if objective == "latency" else energy
-            arg = key.argmin(axis=2)
-            sel = arg[:, :, None]
-            pa[lo:hi] = arg
-            pk[lo:hi] = np.take_along_axis(key, sel, axis=2)[:, :, 0]
-            ps[lo:hi] = np.take_along_axis(cost, sel, axis=2)[:, :, 0]
-            pe[lo:hi] = np.take_along_axis(energy, sel, axis=2)[:, :, 0]
-        return pk, ps, pe, pa
+            for obj in ("latency", "energy"):
+                key = cost if obj == "latency" else energy
+                pk, ps, pe, pa = out[obj]
+                arg = key.argmin(axis=2)
+                sel = arg[:, :, None]
+                pa[lo:hi] = arg
+                pk[lo:hi] = np.take_along_axis(key, sel, axis=2)[:, :, 0]
+                ps[lo:hi] = np.take_along_axis(cost, sel, axis=2)[:, :, 0]
+                pe[lo:hi] = np.take_along_axis(energy, sel, axis=2)[:, :, 0]
+        self._memo.update(out)

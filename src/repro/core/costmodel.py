@@ -113,7 +113,8 @@ class DenseCostTable:
 
     def __init__(self, pus: Sequence[str], chain: Sequence[int],
                  mask: np.ndarray, w: np.ndarray, power: np.ndarray,
-                 h2d: np.ndarray, d2h: np.ndarray, acc: np.ndarray):
+                 h2d: np.ndarray, d2h: np.ndarray, acc: np.ndarray,
+                 dispatch: np.ndarray | None = None):
         self.pus = list(pus)
         self.chain = list(chain)
         self.mask = mask            # (N, K) bool
@@ -122,6 +123,11 @@ class DenseCostTable:
         self.h2d = h2d              # (N, K); 0 where unsupported
         self.d2h = d2h              # (N, K); 0 where unsupported
         self.acc = acc              # (K,) bool: PU is an accelerator
+        # (N, K) dispatch share of w; 0 where unsupported.  Kept separate
+        # so runtime conditions can scale the *kernel* share (w - dispatch)
+        # without rebuilding the table (see workload.Workload.under_condition).
+        self.dispatch = (dispatch if dispatch is not None
+                         else np.zeros_like(power))
         with np.errstate(invalid="ignore"):  # inf * 0 at unsupported slots
             self.energy = w * power          # (N, K)
         self.energy[~mask] = np.inf
@@ -175,6 +181,7 @@ class DenseCostTable:
         power = np.zeros((n, k))
         h2d = np.zeros((n, k))
         d2h = np.zeros((n, k))
+        disp = np.zeros((n, k))
         pos_of: dict[int, list[int]] = {}
         for i, oi in enumerate(chain):
             pos_of.setdefault(oi, []).append(i)
@@ -192,8 +199,10 @@ class DenseCostTable:
                 power[i, j] = pw
                 h2d[i, j] = hh
                 d2h[i, j] = dd
+                disp[i, j] = e.dispatch
         acc = np.array([pus[p].is_accelerator for p in table.pus], dtype=bool)
-        return cls(table.pus, chain, mask, w, power, h2d, d2h, acc)
+        return cls(table.pus, chain, mask, w, power, h2d, d2h, acc,
+                   dispatch=disp)
 
     def require_row(self, pos: int, what: str = "op") -> None:
         if not self.mask[pos].any():

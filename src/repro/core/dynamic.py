@@ -24,10 +24,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Mapping, Sequence
 
+import numpy as np
+
 from .costmodel import CostEntry, CostTable, PUSpec
 from .op import FusedOp
-from .schedule import SeqSchedule, evaluate_sequential
+from .schedule import SeqSchedule
 from .search import solve_sequential
+from .workload import Workload
 
 
 # ---------------------------------------------------------------------------
@@ -53,10 +56,18 @@ class RuntimeCondition:
         return float(self.slowdown.get(pu, 1.0))
 
 
+class InfeasibleScheduleError(ValueError):
+    """No PU can run some op under the active runtime condition."""
+
+
 def adjusted_table(table: CostTable, cond: RuntimeCondition) -> CostTable:
-    """Cost table under the current runtime condition."""
+    """Scalar cost table under a runtime condition.
+
+    Oracle/compat helper only: the ``DynamicScheduler`` hot path applies
+    conditions as per-PU column scalings on the dense ``Workload`` view
+    (``Workload.under_condition``) and never rebuilds a dict table."""
     out = CostTable(list(table.pus))
-    for (oi, pu), e in table._t.items():
+    for (oi, pu), e in table.items():
         if pu in cond.unavailable:
             continue
         f = cond.factor(pu)
@@ -86,42 +97,71 @@ class DynamicScheduler:
     ``replan_threshold`` (relative), so monitoring noise doesn't thrash
     the schedule — the paper's requirement that remapping overhead "not
     negate the latency benefit".
+
+    Runs entirely on the dense ``Workload`` layer: a runtime condition is
+    applied as per-PU column scalings on the ``(N, K)`` views
+    (``Workload.under_condition``) — O(K) column rescales instead of the
+    old per-``on_condition`` dict-table rebuild — and tail evaluation /
+    re-planning consume row-sliced views of the same arrays.
     """
 
     def __init__(self, chain: Sequence[int], ops: Sequence[FusedOp],
                  table: CostTable, pus: Mapping[str, PUSpec],
                  objective: str = "latency",
-                 replan_threshold: float = 0.05):
+                 replan_threshold: float = 0.05,
+                 workload: Workload | None = None):
         self.chain = list(chain)
         self.ops = ops
         self.base_table = table
         self.pus = pus
         self.objective = objective
         self.threshold = replan_threshold
-        self.plan = solve_sequential(self.chain, ops, table, pus, objective)
+        self.workload = workload if workload is not None else Workload.build(
+            chain, table, pus, ops=ops)
+        self.plan = solve_sequential(self.chain, ops, table, pus, objective,
+                                     workload=self.workload)
         self.events: list[RemapEvent] = []
 
+    def _adjusted(self, cond: RuntimeCondition) -> Workload:
+        return self.workload.under_condition(cond.slowdown, cond.unavailable)
+
     def tail_cost(self, pos: int, assignment: Sequence[str],
-                  table: CostTable) -> float:
-        """Cost of executing chain[pos:] under ``assignment`` and ``table``."""
-        tail = self.chain[pos:]
-        asn = list(assignment[pos:])
-        # drop infeasible tail assignments (unavailable PU) -> +inf
-        for oi, pu in zip(tail, asn):
-            if not table.supported(oi, pu):
-                return float("inf")
-        lat, eng = evaluate_sequential(tail, asn, self.ops, table, self.pus)
+                  wl: Workload) -> float:
+        """Cost of executing chain[pos:] under ``assignment`` and the
+        (condition-adjusted) workload ``wl``; +inf when the kept
+        assignment is infeasible (e.g. an unavailable PU)."""
+        if pos >= len(self.chain):
+            return 0.0
+        lat, eng = wl.tail(pos).evaluate(list(assignment[pos:]),
+                                         allow_infeasible=True)
         return lat if self.objective == "latency" else eng
 
-    def on_condition(self, pos: int, cond: RuntimeCondition) -> SeqSchedule:
-        """Called between ops: re-plan chain[pos:] if conditions warrant."""
-        table = adjusted_table(self.base_table, cond)
-        keep = self.tail_cost(pos, self.plan.assignment, table)
+    def on_condition(self, pos: int, cond: RuntimeCondition,
+                     wl_adj: Workload | None = None) -> SeqSchedule:
+        """Called between ops: re-plan chain[pos:] if conditions warrant.
+
+        A re-planned schedule carries *real* latency/energy: the stitched
+        assignment is re-evaluated on a spliced workload — the
+        already-executed prefix priced at the nominal profile, the new
+        tail under the current condition — so downstream consumers never
+        see NaN placeholders.  Pass ``wl_adj`` to reuse an
+        already-adjusted workload for ``cond``.
+        """
+        if wl_adj is None:
+            wl_adj = self._adjusted(cond)
+        keep = self.tail_cost(pos, self.plan.assignment, wl_adj)
         tail = self.chain[pos:]
         if not tail:
             return self.plan
-        replanned = solve_sequential(tail, self.ops, table, self.pus,
-                                     self.objective)
+        tail_wl = wl_adj.tail(pos)
+        try:
+            replanned = solve_sequential(tail, self.ops, None, self.pus,
+                                         self.objective, workload=tail_wl)
+        except ValueError as err:
+            raise InfeasibleScheduleError(
+                f"re-planning chain[{pos}:] is infeasible under the active "
+                f"runtime condition (slowdown={dict(cond.slowdown)}, "
+                f"unavailable={sorted(cond.unavailable)}): {err}") from err
         new_cost = (replanned.latency if self.objective == "latency"
                     else replanned.energy)
         if keep == float("inf") or new_cost < keep * (1 - self.threshold):
@@ -130,37 +170,58 @@ class DynamicScheduler:
                 reason="unavailable PU" if keep == float("inf")
                 else "condition drift",
                 old_tail_cost=keep, new_tail_cost=new_cost))
+            stitched = (list(self.plan.assignment[:pos])
+                        + list(replanned.assignment))
+            lat, eng = self.workload.spliced(wl_adj, pos).evaluate(stitched)
             self.plan = SeqSchedule(
-                chain=self.chain,
-                assignment=list(self.plan.assignment[:pos])
-                + list(replanned.assignment),
-                latency=float("nan"), energy=float("nan"),
-                objective=self.objective)
+                chain=self.chain, assignment=stitched,
+                latency=lat, energy=eng, objective=self.objective)
         return self.plan
 
     def simulate(self, conditions: Mapping[int, RuntimeCondition]) -> float:
         """Execute the whole chain, applying ``conditions[pos]`` when
         reached; returns realised latency (ops run under the condition
-        active at their position)."""
+        active at their position).
+
+        Raises :class:`InfeasibleScheduleError` (not a bare
+        ``IndexError``) when an op has no supported PU under the active
+        condition.
+        """
         cond = RuntimeCondition()
+        wl = self.workload
+        d = wl.dense
         total = 0.0
         for pos in range(len(self.chain)):
             if pos in conditions:
                 cond = conditions[pos]
-                self.on_condition(pos, cond)
-            table = adjusted_table(self.base_table, cond)
-            oi = self.chain[pos]
+                wl = self._adjusted(cond)
+                self.on_condition(pos, cond, wl_adj=wl)
+                d = wl.dense
             pu = self.plan.assignment[pos]
-            e = table.require(oi, pu)
-            total += e.w
+            j = wl.col(pu)
+            if not d.mask[pos, j]:
+                raise InfeasibleScheduleError(
+                    f"{wl.op_name(pos)} at position {pos} cannot run on "
+                    f"{pu} under the active runtime condition "
+                    f"(slowdown={dict(cond.slowdown)}, "
+                    f"unavailable={sorted(cond.unavailable)})")
+            total += float(d.w[pos, j])
             if pos + 1 < len(self.chain):
-                from .costmodel import transition_cost
-                total += transition_cost(
-                    self.pus, table, oi, pu, self.chain[pos + 1],
-                    self.plan.assignment[pos + 1]
-                    if table.supported(self.chain[pos + 1],
-                                       self.plan.assignment[pos + 1])
-                    else table.supported_pus(self.chain[pos + 1])[0])
+                jn = wl.col(self.plan.assignment[pos + 1])
+                if not d.mask[pos + 1, jn]:
+                    sup = np.flatnonzero(d.mask[pos + 1])
+                    if len(sup) == 0:
+                        raise InfeasibleScheduleError(
+                            f"{wl.op_name(pos + 1)} at position {pos + 1} "
+                            f"has no supported PU under the active runtime "
+                            f"condition (slowdown={dict(cond.slowdown)}, "
+                            f"unavailable={sorted(cond.unavailable)}) — "
+                            "the schedule cannot make progress")
+                    jn = int(sup[0])
+                # transition: accelerator-gated H2D of next + D2H of prev
+                if jn != j:
+                    total += ((float(d.h2d[pos + 1, jn]) if d.acc[jn] else 0.0)
+                              + (float(d.d2h[pos, j]) if d.acc[j] else 0.0))
         return total
 
 

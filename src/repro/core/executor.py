@@ -92,6 +92,88 @@ class ScheduleExecutor:
         return results
 
     # ------------------------------------------------------------------
+    def run_concurrent(self, graphs: Sequence[OpGraph], schedule,
+                       external_inputs: Sequence[Mapping[int, tuple] | None]
+                       | None = None) -> list[dict[int, Any]]:
+        """Run an M-model ``ConcurrentSchedule`` across the PU lanes.
+
+        All M models' ops are multiplexed onto the *shared* lanes (one
+        FIFO worker per PU — the command-queue semantics the concurrent
+        cost laws assume): ops enqueue in schedule-step order, so two
+        co-scheduled ops land on their assigned lanes side by side and
+        same-PU co-scheduled ops serialise on one queue.  Dependencies
+        are per-model (requests are independent); each model's results
+        dict is returned in request order, for bitwise verification
+        against isolated ``run_monolithic`` runs.
+        """
+        m = len(graphs)
+        if schedule.n_requests != m:
+            raise ValueError(
+                f"schedule covers {schedule.n_requests} requests, "
+                f"got {m} graphs")
+        ext = list(external_inputs or [None] * m)
+        # lane queues in schedule-step order; validate coverage AND
+        # dependency order (a mis-ordered schedule would otherwise
+        # deadlock the lane workers instead of raising)
+        lane_queues: dict[str, list[tuple[int, int]]] = {p: [] for p in self.pus}
+        seen: list[set[int]] = [set() for _ in range(m)]
+        for st in schedule.steps:
+            for r, (oi, pu) in enumerate(zip(st.ops, st.pus)):
+                if oi is None:
+                    continue
+                missing_pred = [p for p in graphs[r].pred[oi]
+                                if p not in seen[r]]
+                if missing_pred:
+                    raise ValueError(
+                        f"schedule lists op {oi} of request {r} before its "
+                        f"predecessor(s) {missing_pred} — executing it "
+                        "would deadlock the lanes")
+                lane_queues[pu].append((r, oi))
+                seen[r].add(oi)
+        for r, g in enumerate(graphs):
+            if seen[r] != set(range(len(g.ops))):
+                missing = sorted(set(range(len(g.ops))) - seen[r])
+                raise ValueError(
+                    f"schedule does not cover request {r}: missing ops "
+                    f"{missing[:5]}{'...' if len(missing) > 5 else ''}")
+
+        results: list[dict[int, Any]] = [{} for _ in range(m)]
+        done_ev: dict[tuple[int, int], threading.Event] = {
+            (r, i): threading.Event()
+            for r, g in enumerate(graphs) for i in range(len(g.ops))}
+        errors: list[BaseException] = []
+
+        def exec_op(r: int, i: int) -> None:
+            g = graphs[r]
+            for p in g.pred[i]:
+                done_ev[(r, p)].wait()
+            op = g.ops[i]
+            if op.fn is None:
+                results[r][i] = None
+            else:
+                e = (ext[r] or {}).get(i, ())
+                dep_vals = tuple(results[r][p] for p in g.pred[i])
+                results[r][i] = op.fn(*(tuple(e) + dep_vals))
+            done_ev[(r, i)].set()
+
+        def lane_worker(pu: str) -> None:
+            try:
+                for r, i in lane_queues[pu]:
+                    exec_op(r, i)
+            except BaseException as e:  # pragma: no cover
+                errors.append(e)
+                for ev in done_ev.values():
+                    ev.set()
+
+        with ThreadPoolExecutor(max_workers=len(self.pus)) as pool:
+            futs = [pool.submit(lane_worker, p) for p in self.pus]
+            for f in futs:
+                f.result()
+        if errors:
+            raise errors[0]
+        return results
+
+    # ------------------------------------------------------------------
     @staticmethod
     def outputs_close(a: Mapping[int, Any], b: Mapping[int, Any],
                       rtol: float = 0.0, atol: float = 0.0) -> bool:

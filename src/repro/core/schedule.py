@@ -5,6 +5,10 @@ output schedule is a static mapping that is applied directly by the
 execution orchestrator").  ``evaluate_*`` re-derives latency and energy for
 a *fixed* assignment, so that e.g. the energy of a latency-optimised
 schedule can be compared against the energy-optimised one (paper Fig. 6).
+
+Evaluation runs on the dense ``Workload`` layer (one gather over the
+``(N, K)`` arrays); the scalar dict walk is retained as
+``evaluate_sequential_reference`` for the equivalence suite.
 """
 from __future__ import annotations
 
@@ -13,6 +17,7 @@ from typing import Mapping, Sequence
 
 from .costmodel import CostTable, PUSpec, transition_cost
 from .op import FusedOp
+from .workload import Workload
 
 
 @dataclasses.dataclass
@@ -70,10 +75,15 @@ class ParallelSchedule:
 
 @dataclasses.dataclass
 class ConcurrentStep:
-    """One step of a two-request concurrent schedule."""
+    """One step of an M-request concurrent schedule.
 
-    ops: tuple[int | None, int | None]   # op index per request (None = idle)
-    pus: tuple[str | None, str | None]
+    ``ops[r]`` / ``pus[r]`` give request ``r``'s op index and PU for this
+    step, or ``None`` when request ``r`` does not advance.  The original
+    two-request solvers emit 2-tuples; the M-ary solvers emit M-tuples.
+    """
+
+    ops: tuple[int | None, ...]   # op index per request (None = idle)
+    pus: tuple[str | None, ...]
     cost: float
 
 
@@ -83,7 +93,11 @@ class ConcurrentSchedule:
     latency: float
     energy: float
     objective: str
-    mode: str  # "aligned" | "joint"
+    mode: str  # "aligned" | "joint" | "joint-grid" | "pairwise"
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.steps[0].ops) if self.steps else 0
 
     def assignment_of(self, request: int) -> list[tuple[int, str]]:
         out = []
@@ -94,7 +108,7 @@ class ConcurrentSchedule:
 
 
 # ---------------------------------------------------------------------------
-# Fixed-assignment evaluation
+# Fixed-assignment evaluation (dense Workload layer)
 # ---------------------------------------------------------------------------
 
 
@@ -104,9 +118,28 @@ def evaluate_sequential(
     ops: Sequence[FusedOp],
     table: CostTable,
     pus: Mapping[str, PUSpec],
+    workload: Workload | None = None,
 ) -> tuple[float, float]:
     """(latency, energy) of a fixed sequential assignment, including the
-    boundary H2D/D2H and inter-op transition costs of the execution graph."""
+    boundary H2D/D2H and inter-op transition costs of the execution graph.
+
+    Runs as one dense gather on the ``Workload`` view; pass ``workload``
+    to reuse a prebuilt one (otherwise the scalar table is ingested once
+    per call)."""
+    wl = workload if workload is not None else Workload.build(
+        chain, table, pus, ops=ops)
+    return wl.evaluate(assignment)
+
+
+def evaluate_sequential_reference(
+    chain: Sequence[int],
+    assignment: Sequence[str],
+    ops: Sequence[FusedOp],
+    table: CostTable,
+    pus: Mapping[str, PUSpec],
+) -> tuple[float, float]:
+    """Scalar dict-walk evaluation (pre-Workload oracle, kept for the
+    equivalence regression suite)."""
     assert len(chain) == len(assignment)
     lat = 0.0
     eng = 0.0
@@ -135,9 +168,10 @@ def single_pu_cost(
     ops: Sequence[FusedOp],
     table: CostTable,
     pus: Mapping[str, PUSpec],
+    workload: Workload | None = None,
 ) -> tuple[float, float] | None:
     """(latency, energy) of monolithic execution on one PU; None if any op
     is unsupported there (the paper's compile-failure case)."""
-    if any(not table.supported(oi, pu) for oi in chain):
-        return None
-    return evaluate_sequential(chain, [pu] * len(chain), ops, table, pus)
+    wl = workload if workload is not None else Workload.build(
+        chain, table, pus, ops=ops)
+    return wl.single_pu(pu)

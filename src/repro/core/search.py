@@ -11,7 +11,7 @@
   contention-adjusted makespans (§3.3.2); the contention re-walk is a
   gathered-array computation instead of a per-op Python loop.
 * ``solve_concurrent_aligned`` / ``solve_concurrent_joint`` — the two
-  multi-model modes (§3.2.2 / §3.3.3).  The joint solver is A* over the
+  pair modes (§3.2.2 / §3.3.3).  The joint solver is A* over the
   (i, j) progress grid: edge costs come from memoized ``(K0, K1)``
   pair-cost matrices (``contention.PairCostCache``) reduced to one
   min-edge per transition, and the admissible heuristic is the exact
@@ -23,22 +23,36 @@
   reference implementations (``*_reference``) are retained and used
   automatically for ``ContentionModel`` subclasses that override the
   co-execution cost laws.
+* ``solve_concurrent`` — the M-request generalization over ``Workload``
+  views: M = 2 dispatches to the pair A* bit-for-bit; small M-dimensional
+  progress grids are searched exactly (``_solve_concurrent_grid``, the
+  same A* structure with memoized per-signature *group* edges priced by
+  ``ContentionModel.group_step_cost``/``group_energy``); larger products
+  fall back to the documented pairwise-merge schedule
+  (``_solve_concurrent_pairwise``).
+
+All solvers consume the dense ``Workload`` layer; the scalar dict
+``CostTable`` is ingested once at the boundary (``Workload.build``) and
+only the ``*_reference`` oracles walk it.
 """
 from __future__ import annotations
 
 import heapq
+import itertools
+import math
 from typing import Mapping, Sequence
 
 import numpy as np
 
-from .contention import ContentionModel, PairCostCache, uses_default_coexec
+from .contention import (ContentionModel, PairCostCache, uses_default_coexec,
+                         uses_default_group)
 from .costmodel import CostTable, DenseCostTable, PUSpec, transition_cost
 from .graph import (DenseChain, ExecGraph, build_dense_chain,
                     build_sequential_graph, node_weight)
 from .op import FusedOp, OpGraph
 from .schedule import (BranchSchedule, ConcurrentSchedule, ConcurrentStep,
-                       ParallelSchedule, PhaseSchedule, SeqSchedule,
-                       evaluate_sequential)
+                       ParallelSchedule, PhaseSchedule, SeqSchedule)
+from .workload import Workload
 
 # ---------------------------------------------------------------------------
 # Shortest path on the explicit graph
@@ -219,21 +233,39 @@ def sequential_dp_reference(
 def solve_sequential(
     chain: Sequence[int],
     ops: Sequence[FusedOp],
-    table: CostTable,
+    table: CostTable | None,
     pus: Mapping[str, PUSpec],
     objective: str = "latency",
     algorithm: str = "dp",
+    workload: Workload | None = None,
 ) -> SeqSchedule:
+    """Sequential solve on the dense ``Workload`` layer.
+
+    Pass ``workload`` to reuse a prebuilt dense view (``table`` may then
+    be ``None``); otherwise the scalar table is ingested once here.  The
+    ``dijkstra`` / ``dp_reference`` algorithms are the explicit-graph /
+    scalar oracles and still walk the dict table.
+    """
+    wl = workload if workload is not None else Workload.build(
+        chain, table, pus, ops=ops)
+    oracle_table = table if table is not None else wl.table
+    if algorithm in ("dijkstra", "dp_reference") and oracle_table is None:
+        raise ValueError(
+            f"algorithm={algorithm!r} walks the scalar oracle table, but "
+            "none is available (the workload is a derived dense view); "
+            "pass the table or use algorithm='dp'")
     if algorithm == "dijkstra":
-        g = build_sequential_graph(chain, ops, table, pus, objective)
+        g = build_sequential_graph(chain, ops, oracle_table, pus, objective)
         _, assign = dijkstra(g)
     elif algorithm == "dp":
-        _, assign = sequential_dp(chain, ops, table, pus, objective)
+        _, assign = sequential_dp(chain, ops, table, pus, objective,
+                                  dense=wl.dense)
     elif algorithm == "dp_reference":
-        _, assign = sequential_dp_reference(chain, ops, table, pus, objective)
+        _, assign = sequential_dp_reference(chain, ops, oracle_table, pus,
+                                            objective)
     else:
         raise ValueError(algorithm)
-    lat, eng = evaluate_sequential(chain, assign, ops, table, pus)
+    lat, eng = wl.evaluate(assign)
     return SeqSchedule(chain=list(chain), assignment=assign, latency=lat,
                        energy=eng, objective=objective)
 
@@ -244,25 +276,26 @@ def solve_sequential(
 
 
 def _rewalk_branch(
-    chain: Sequence[int], assign: Sequence[str], table: CostTable,
-    pus: Mapping[str, PUSpec], contention: ContentionModel,
+    wl: Workload, assign: Sequence[str], contention: ContentionModel,
     others: set[str],
 ) -> tuple[float, float]:
     """Contention-adjusted (latency, energy) of a fixed branch assignment:
     every op cost scaled by the max SF vs the PU set used by the *other*
-    branches; transitions unscaled.  Only the assigned (op, PU) cells are
-    gathered — O(branch length), not O(model size)."""
-    ents = [table.require(oi, p) for oi, p in zip(chain, assign)]
-    wv = np.array([e.w for e in ents])
-    pv = np.array([e.power for e in ents])
-    h2dv = np.array([e.h2d for e in ents])
-    d2hv = np.array([e.d2h for e in ents])
-    accv = np.array([pus[p].is_accelerator for p in assign])
+    branches; transitions unscaled.  One gather over the branch
+    workload's dense rows — O(branch length), not O(model size)."""
+    d = wl.dense
+    c = wl.cols(assign)
+    rows = np.arange(d.n)
+    wv = d.w[rows, c]
+    pv = d.power[rows, c]
+    h2dv = d.h2d[rows, c]
+    d2hv = d.d2h[rows, c]
+    accv = d.acc[c]
     sf_of = {p: contention.branch_factor(p, others) for p in set(assign)}
     sfv = np.array([sf_of[p] for p in assign])
-    pmv = np.array([pus[p].power_memory for p in assign])
+    pmv = wl.power_memory[c]
     # inter-op transitions (same PU -> 0; accelerator-gated H2D/D2H)
-    same = np.array([a == b for a, b in zip(assign[:-1], assign[1:])])
+    same = c[1:] == c[:-1]
     tcv = np.where(same, 0.0,
                    np.where(accv[1:], h2dv[1:], 0.0)
                    + np.where(accv[:-1], d2hv[:-1], 0.0))
@@ -274,10 +307,11 @@ def _rewalk_branch(
 
 def solve_parallel(
     graph: OpGraph,
-    table: CostTable,
+    table: CostTable | None,
     pus: Mapping[str, PUSpec],
     contention: ContentionModel | None = None,
     objective: str = "latency",
+    workload: Workload | None = None,
 ) -> ParallelSchedule:
     """Phase partition -> per-branch search -> contention-adjusted makespan.
 
@@ -285,15 +319,24 @@ def solve_parallel(
     optimal assignments and keep whichever is cheaper, so parallel
     orchestration never regresses below the sequential schedule (paper
     Table 3 reports parallel speedup >= sequential speedup everywhere).
+
+    The whole graph is ingested into one ``Workload``; per-branch views
+    are row-selections of it (no dict walks per branch).
     """
     contention = contention or ContentionModel()
+    wl_full = workload if workload is not None else Workload.build(
+        list(range(len(graph.ops))), table, pus, ops=graph.ops)
     phases_out: list[PhaseSchedule] = []
     total_lat = 0.0
     total_eng = 0.0
     for phase in graph.phases():
         brs: list[BranchSchedule] = []
+        br_wls: list[Workload] = []
         for br in phase.branches:
-            s = solve_sequential(br.ops, graph.ops, table, pus, objective)
+            bwl = wl_full.select(br.ops)
+            s = solve_sequential(br.ops, graph.ops, table, pus, objective,
+                                 workload=bwl)
+            br_wls.append(bwl)
             brs.append(BranchSchedule(
                 branch_ops=list(br.ops), assignment=s.assignment,
                 solo_latency=s.latency, adj_latency=s.latency, energy=s.energy))
@@ -303,15 +346,14 @@ def solve_parallel(
                 others: set[str] = set().union(
                     *(pu_sets[j] for j in range(len(brs)) if j != bi))
                 b.adj_latency, b.energy = _rewalk_branch(
-                    b.branch_ops, b.assignment, table, pus, contention, others)
+                    br_wls[bi], b.assignment, contention, others)
             par_makespan = max(b.adj_latency for b in brs)
             par_energy = sum(b.energy for b in brs)
             seq_makespan = sum(b.solo_latency for b in brs)
             # serialised energy: recompute without SF (solo energies)
             seq_energy = 0.0
-            for b in brs:
-                _, e = evaluate_sequential(b.branch_ops, b.assignment,
-                                           graph.ops, table, pus)
+            for bwl, b in zip(br_wls, brs):
+                _, e = bwl.evaluate(b.assignment)
                 seq_energy += e
             key_par = par_makespan if objective == "latency" else par_energy
             key_seq = seq_makespan if objective == "latency" else seq_energy
@@ -407,6 +449,7 @@ def solve_concurrent_aligned(
     objective: str = "latency",
     dense0: DenseCostTable | None = None,
     dense1: DenseCostTable | None = None,
+    cache: PairCostCache | None = None,
 ) -> ConcurrentSchedule:
     """Aligned Dijkstra: both requests advance in lockstep (same-model pairs).
 
@@ -414,17 +457,22 @@ def solve_concurrent_aligned(
     average of measured concurrent execution times; cross-PU = max of
     (contention-adjusted) solo times.  Tails (unequal lengths) advance solo.
     Per-step PU-pair minimisation runs on the memoized dense pair-cost
-    matrices; a custom contention model falls back to the scalar reference.
+    matrices; pass ``cache`` to share one ``PairCostCache`` across this
+    pair's latency- and energy-objective solves.  A custom contention
+    model falls back to the scalar reference.
     """
     contention = contention or ContentionModel()
     if not uses_default_coexec(contention):
         return solve_concurrent_aligned_reference(
             chain0, table0, chain1, table1, pus, contention, objective)
-    d0 = dense0 if dense0 is not None else DenseCostTable.from_chain(
-        chain0, table0, pus)
-    d1 = dense1 if dense1 is not None else DenseCostTable.from_chain(
-        chain1, table1, pus)
-    cache = PairCostCache(contention, d0, d1)
+    if cache is not None:
+        d0, d1 = cache.d0, cache.d1
+    else:
+        d0 = dense0 if dense0 is not None else DenseCostTable.from_chain(
+            chain0, table0, pus)
+        d1 = dense1 if dense1 is not None else DenseCostTable.from_chain(
+            chain1, table1, pus)
+        cache = PairCostCache(contention, d0, d1)
     k1 = d1.k
     n = min(d0.n, d1.n)
     steps: list[ConcurrentStep] = []
@@ -528,6 +576,7 @@ def solve_concurrent_joint(
     algorithm: str = "auto",
     dense0: DenseCostTable | None = None,
     dense1: DenseCostTable | None = None,
+    cache: PairCostCache | None = None,
 ) -> ConcurrentSchedule:
     """Joint (i, j) search: each request's progress tracked independently.
 
@@ -557,11 +606,14 @@ def solve_concurrent_joint(
             f"{type(contention).__name__} overrides them — use "
             "algorithm='auto' or 'dijkstra'")
 
-    d0 = dense0 if dense0 is not None else DenseCostTable.from_chain(
-        chain0, table0, pus)
-    d1 = dense1 if dense1 is not None else DenseCostTable.from_chain(
-        chain1, table1, pus)
-    cache = PairCostCache(contention, d0, d1)
+    if cache is not None:
+        d0, d1 = cache.d0, cache.d1
+    else:
+        d0 = dense0 if dense0 is not None else DenseCostTable.from_chain(
+            chain0, table0, pus)
+        d1 = dense1 if dense1 is not None else DenseCostTable.from_chain(
+            chain1, table1, pus)
+        cache = PairCostCache(contention, d0, d1)
     n0, n1 = d0.n, d1.n
     k1 = d1.k
     pk, ps, pe, pa = cache.edge_tables(objective)
@@ -741,3 +793,387 @@ def solve_concurrent_joint_reference(
     latency = sum(s.cost for s in steps)
     return ConcurrentSchedule(steps=steps, latency=latency, energy=energy,
                               objective=objective, mode="joint")
+
+
+# ---------------------------------------------------------------------------
+# M-request concurrent search over Workloads (generalizes the pair solvers)
+# ---------------------------------------------------------------------------
+
+
+class ConcurrentCaches:
+    """Objective-independent setup shared across repeated
+    ``solve_concurrent`` calls on the **same** workload tuple (typically
+    the latency- and energy-objective solves of one combination).
+
+    ``pair`` memoizes ``PairCostCache`` instances per request-index pair
+    (the pairwise route); ``group`` memoizes the grid route's
+    per-signature group edges (both objectives' bests are stored per
+    entry).  Entries are keyed by request index / signature ids, so a
+    pool is only valid for one fixed workload tuple.
+    """
+
+    def __init__(self) -> None:
+        self.pair: dict[tuple[int, int], PairCostCache] = {}
+        self.group: dict[tuple, tuple] = {}
+
+
+def _require_oracle_tables(wls: Sequence[Workload],
+                           cm: ContentionModel) -> None:
+    """Custom co-execution laws route to the scalar reference solvers,
+    which need each workload's oracle ``CostTable``.  Derived dense views
+    (``under_condition``/``tail``/``select``/``spliced``) carry none —
+    their rows no longer correspond to the source dict — so reject them
+    loudly instead of silently pricing the wrong costs."""
+    if uses_default_coexec(cm):
+        return
+    for r, wl in enumerate(wls):
+        if wl.table is None:
+            raise ValueError(
+                f"{type(cm).__name__} overrides the co-execution laws, "
+                "which requires the scalar reference solvers — but "
+                f"workload {r} has no oracle CostTable (it is a derived "
+                "dense view); solve from a Workload.build(...) of the "
+                "adjusted table instead")
+
+
+def _solo_step_walk(wl: Workload, req: int, m: int, objective: str
+                    ) -> tuple[list[ConcurrentStep], float, float]:
+    """Solo-advance steps for one request inside an M-request schedule:
+    each op on its best PU by ``objective`` (node weights only — the
+    concurrent formulation prices no inter-op transitions)."""
+    d = wl.dense
+    _, sarg, sw, se = _solo_edges(d, objective)
+    steps: list[ConcurrentStep] = []
+    lat = 0.0
+    eng = 0.0
+    for i in range(d.n):
+        d.require_row(i)
+        ops = [None] * m
+        pus_: list[str | None] = [None] * m
+        ops[req] = wl.chain[i]
+        pus_[req] = d.pus[int(sarg[i])]
+        w, e = float(sw[i]), float(se[i])
+        steps.append(ConcurrentStep(ops=tuple(ops), pus=tuple(pus_), cost=w))
+        lat += w
+        eng += e
+    return steps, lat, eng
+
+
+def solve_concurrent(
+    workloads: Sequence[Workload],
+    contention: ContentionModel | None = None,
+    objective: str = "latency",
+    algorithm: str = "auto",
+    max_states: int = 200_000,
+    caches: ConcurrentCaches | None = None,
+) -> ConcurrentSchedule:
+    """Joint co-scheduling of M >= 1 concurrent requests.
+
+    The single formulation of the paper's §3.2.2, generalized: state =
+    per-request completed-op counts; a transition advances any non-empty
+    subset of requests one op each, priced by the contention model's
+    group co-execution laws.
+
+    * **M = 1** — a solo walk (each op on its best PU by objective).
+    * **M = 2** — dispatched to ``solve_concurrent_joint``: the dense
+      pair A* fast path, bit-for-bit (the retained pair solvers ARE the
+      M = 2 case).
+    * **M >= 3, small grids** — exact A* on the M-dimensional progress
+      grid (``prod(n_r + 1) <= max_states``) with memoized per-signature
+      group edges (``algorithm="grid"`` forces this; raises if the grid
+      exceeds ``max_states`` or the contention model overrides the group
+      laws).
+    * **M >= 3, large grids or custom contention** — the documented
+      pairwise-merge fallback (``algorithm="pairwise"`` forces it):
+      requests sorted by descending solo-best cost, adjacent pairs
+      co-scheduled with the exact pair A*, pairs executed back-to-back,
+      an odd cheapest request running solo.  Feasible by construction
+      and never worse than fully-serial solo execution (each pair's
+      joint optimum is).
+
+    ``algorithm="auto"`` picks grid when exact search is affordable and
+    the default group laws apply, else pairwise.  Pass ``caches`` (a
+    :class:`ConcurrentCaches` dedicated to this workload tuple) to share
+    the objective-independent setup across a latency + energy solve
+    pair.
+    """
+    contention = contention or ContentionModel()
+    wls = list(workloads)
+    m = len(wls)
+    if m == 0:
+        raise ValueError("solve_concurrent needs at least one workload")
+    if m == 1:
+        steps, lat, eng = _solo_step_walk(wls[0], 0, 1, objective)
+        return ConcurrentSchedule(steps=steps, latency=lat, energy=eng,
+                                  objective=objective, mode="joint")
+    _require_oracle_tables(wls, contention)
+    if m == 2 and algorithm in ("auto", "astar", "dijkstra"):
+        pair_algo = "auto" if algorithm == "auto" else algorithm
+        cache = _pair_cache(caches, contention, wls, 0, 1)
+        return solve_concurrent_joint(
+            wls[0].chain, wls[0].table, wls[1].chain, wls[1].table,
+            wls[0].pus, contention, objective, algorithm=pair_algo,
+            dense0=wls[0].dense, dense1=wls[1].dense, cache=cache)
+    n_states = math.prod(wl.n + 1 for wl in wls)
+    default_laws = uses_default_group(contention)
+    group_memo = caches.group if caches is not None else None
+    if algorithm == "grid":
+        if not default_laws:
+            raise ValueError(
+                "algorithm='grid' requires the default group co-execution "
+                f"laws; {type(contention).__name__} overrides them — use "
+                "algorithm='auto' or 'pairwise'")
+        if n_states > max_states:
+            raise ValueError(
+                f"algorithm='grid' on {n_states} states exceeds "
+                f"max_states={max_states}; raise max_states or use "
+                "algorithm='pairwise'")
+        return _solve_concurrent_grid(wls, contention, objective, group_memo)
+    if algorithm == "pairwise":
+        return _solve_concurrent_pairwise(wls, contention, objective, caches)
+    if algorithm != "auto":
+        raise ValueError(algorithm)
+    if default_laws and n_states <= max_states:
+        return _solve_concurrent_grid(wls, contention, objective, group_memo)
+    return _solve_concurrent_pairwise(wls, contention, objective, caches)
+
+
+def _pair_cache(caches: ConcurrentCaches | None, cm: ContentionModel,
+                wls: Sequence[Workload], a: int, b: int
+                ) -> PairCostCache | None:
+    """Memoized PairCostCache for requests (a, b); None when the pair
+    solver should build its own (no pool, or custom laws where the dense
+    cache is unused)."""
+    if caches is None or not uses_default_coexec(cm):
+        return None
+    cache = caches.pair.get((a, b))
+    if cache is None:
+        cache = PairCostCache(cm, wls[a].dense, wls[b].dense)
+        caches.pair[(a, b)] = cache
+    return cache
+
+
+def _solve_concurrent_grid(
+    wls: Sequence[Workload], cm: ContentionModel, objective: str,
+    group_memo: dict | None = None,
+) -> ConcurrentSchedule:
+    """Exact A* on the M-dimensional progress grid.
+
+    Same structure as the pair A*: singleton advances use the per-request
+    solo edges; subset advances of size >= 2 are priced by the group
+    co-execution laws, minimized over all supported PU combinations and
+    memoized per (subset, signature-tuple) — the model zoo's repeated
+    layer shapes make the memo hit rate high.  The admissible heuristic
+    is the per-request scaled suffix bound (max across requests for
+    latency — a makespan dominates every request's remaining floor — and
+    the sum for energy, which is additive per op).
+    """
+    m = len(wls)
+    denses = [wl.dense for wl in wls]
+    ns = [d.n for d in denses]
+    solo = [_solo_edges(d, objective) for d in denses]
+    for d, s in zip(denses, solo):
+        if not np.isfinite(s[0]).all():
+            # some op unsupported on every PU: no transition can advance it
+            raise ValueError("joint search failed to reach target state")
+    sigs = [d.sig.tolist() for d in denses]
+    sk = [s[0].tolist() for s in solo]
+    scale = cm.min_factor()
+    sufs = [_suffix_heuristic(d, objective, scale) for d in denses]
+
+    # dense heuristic over the whole grid (<= max_states floats)
+    shape = tuple(n + 1 for n in ns)
+    if objective == "latency":
+        h = np.zeros(shape)
+        for r, suf in enumerate(sufs):
+            np.maximum(h, suf.reshape([-1 if i == r else 1
+                                       for i in range(m)]), out=h)
+    else:
+        h = sum(suf.reshape([-1 if i == r else 1 for i in range(m)])
+                for r, suf in enumerate(sufs))
+        h = np.ascontiguousarray(h)
+    hs = h.ravel()
+
+    strides = [0] * m
+    strides[m - 1] = 1
+    for r in range(m - 2, -1, -1):
+        strides[r] = strides[r + 1] * shape[r + 1]
+    n_states = strides[0] * shape[0]
+    target = n_states - 1
+
+    # subset masks, their advancing-request tuples and state deltas
+    masks = []
+    for bits in range(1, 1 << m):
+        reqs = tuple(r for r in range(m) if bits & (1 << r))
+        masks.append((bits, reqs, sum(strides[r] for r in reqs)))
+
+    pu_lists = [d.pus for d in denses]
+    if group_memo is None:
+        group_memo = {}
+    obj_idx = 0 if objective == "latency" else 1
+
+    def group_edge(reqs: tuple[int, ...], sig_key: tuple[int, ...]) -> tuple:
+        """(key, step_cost, energy, pu-index tuple) minimized over all
+        supported PU combos; first minimum in lexicographic PU-index
+        order (the M-ary analog of the pair cache's row-major argmin).
+        One enumeration computes BOTH objectives' bests — the memo is
+        objective-independent, so a shared pool serves a latency solve
+        and an energy solve of the same workload tuple."""
+        res = group_memo.get((reqs, sig_key))
+        if res is not None:
+            return res[obj_idx]
+        rows = [denses[r].sig_row[s] for r, s in zip(reqs, sig_key)]
+        wrows = [denses[r].w[row] for r, row in zip(reqs, rows)]
+        prows = [denses[r].power[row] for r, row in zip(reqs, rows)]
+        sup = [np.flatnonzero(denses[r].mask[row])
+               for r, row in zip(reqs, rows)]
+        inf = float("inf")
+        best_l = best_e = (inf, inf, inf, None)
+        for combo in itertools.product(*sup):
+            ts = [float(wr[j]) for wr, j in zip(wrows, combo)]
+            pws = [float(pr[j]) for pr, j in zip(prows, combo)]
+            pnames = [pu_lists[r][j] for r, j in zip(reqs, combo)]
+            step = cm.group_step_cost(ts, pnames)
+            e = cm.group_energy(ts, pws, pnames)
+            if step < best_l[0]:
+                best_l = (step, step, e, combo)
+            if e < best_e[0]:
+                best_e = (e, step, e, combo)
+        group_memo[(reqs, sig_key)] = (best_l, best_e)
+        return best_l if obj_idx == 0 else best_e
+
+    # tie plateaus: same quantization + deeper-g tie-break as the pair A*
+    c00 = float(hs[0])
+    quantum = (c00 if c00 > 0 else 1.0) * (sum(ns) + 64) * 1e-15
+    inv_q = 1.0 / quantum
+
+    dist = np.full(n_states, np.inf)
+    act = np.zeros(n_states, dtype=np.int32)   # subset bitmask taken
+    dist[0] = 0.0
+    heap: list[tuple[int, float, int]] = [(int(c00 * inv_q), 0.0, 0)]
+    found = False
+    while heap:
+        fq, ng, s = heapq.heappop(heap)
+        g = -ng
+        if g > dist[s]:
+            continue
+        if s == target:
+            found = True
+            break
+        pos = []
+        rem = s
+        for st in strides:
+            q, rem = divmod(rem, st)
+            pos.append(q)
+        for bits, reqs, delta in masks:
+            ok = True
+            for r in reqs:
+                if pos[r] >= ns[r]:
+                    ok = False
+                    break
+            if not ok:
+                continue
+            if len(reqs) == 1:
+                r = reqs[0]
+                key = sk[r][pos[r]]
+            else:
+                key = group_edge(
+                    reqs, tuple(sigs[r][pos[r]] for r in reqs))[0]
+                if key == float("inf"):
+                    continue
+            nd = g + key
+            nst = s + delta
+            if nd < dist[nst]:
+                dist[nst] = nd
+                act[nst] = bits
+                heapq.heappush(
+                    heap, (int((nd + hs[nst]) * inv_q), -nd, nst))
+    if not found:
+        raise ValueError("joint search failed to reach target state")
+
+    # reconstruct target -> start
+    steps: list[ConcurrentStep] = []
+    energy = 0.0
+    pos = list(ns)
+    s = target
+    while s != 0:
+        bits = int(act[s])
+        if bits == 0:  # pragma: no cover - corrupt predecessor chain
+            raise RuntimeError(f"grid A*: no action recorded at {pos}")
+        reqs = tuple(r for r in range(m) if bits & (1 << r))
+        for r in reqs:
+            pos[r] -= 1
+        s -= sum(strides[r] for r in reqs)
+        ops: list[int | None] = [None] * m
+        pus_: list[str | None] = [None] * m
+        if len(reqs) == 1:
+            r = reqs[0]
+            _, sarg, sw, se = solo[r]
+            ops[r] = wls[r].chain[pos[r]]
+            pus_[r] = pu_lists[r][int(sarg[pos[r]])]
+            cost = float(sw[pos[r]])
+            energy += float(se[pos[r]])
+        else:
+            _, cost, e, combo = group_edge(
+                reqs, tuple(sigs[r][pos[r]] for r in reqs))
+            for r, j in zip(reqs, combo):
+                ops[r] = wls[r].chain[pos[r]]
+                pus_[r] = pu_lists[r][j]
+            energy += e
+        steps.append(ConcurrentStep(ops=tuple(ops), pus=tuple(pus_),
+                                    cost=cost))
+    steps.reverse()
+    latency = sum(st.cost for st in steps)
+    return ConcurrentSchedule(steps=steps, latency=latency, energy=energy,
+                              objective=objective, mode="joint-grid")
+
+
+def _solve_concurrent_pairwise(
+    wls: Sequence[Workload], cm: ContentionModel, objective: str,
+    caches: ConcurrentCaches | None = None,
+) -> ConcurrentSchedule:
+    """Pairwise-merge fallback for M-request co-scheduling.
+
+    Requests are sorted by descending solo-best cost (suffix total of
+    each op's best-PU solo cost) and *adjacent* requests pair up — the
+    two longest together, then the next two, and so on — because a
+    well-overlapped pair's makespan approaches the longer member's solo
+    time, so pairing long with long minimizes the serialized total.
+    Each pair is co-scheduled with the exact pair A* (or its scalar
+    reference under custom contention laws); pairs run back-to-back;
+    an odd cheapest request runs solo at the end.  The result is a
+    feasible M-ary ``ConcurrentSchedule`` (only ops within a pair
+    co-execute) whose cost upper-bounds the exact grid optimum.
+    """
+    m = len(wls)
+    totals = []
+    for wl in wls:
+        skr = _solo_edges(wl.dense, objective)[0]
+        totals.append(float(np.sum(skr)))  # inf propagates -> solver raises
+    order = sorted(range(m), key=lambda r: (-totals[r], r))
+    steps: list[ConcurrentStep] = []
+    latency = 0.0
+    energy = 0.0
+    for a, b in zip(order[::2], order[1::2]):
+        pair = solve_concurrent_joint(
+            wls[a].chain, wls[a].table, wls[b].chain, wls[b].table,
+            wls[a].pus, cm, objective,
+            dense0=wls[a].dense, dense1=wls[b].dense,
+            cache=_pair_cache(caches, cm, wls, a, b))
+        for st in pair.steps:
+            ops: list[int | None] = [None] * m
+            pus_: list[str | None] = [None] * m
+            ops[a], ops[b] = st.ops
+            pus_[a], pus_[b] = st.pus
+            steps.append(ConcurrentStep(ops=tuple(ops), pus=tuple(pus_),
+                                        cost=st.cost))
+        latency += pair.latency
+        energy += pair.energy
+    if m % 2:
+        r = order[-1]
+        solo_steps, lat, eng = _solo_step_walk(wls[r], r, m, objective)
+        steps.extend(solo_steps)
+        latency += lat
+        energy += eng
+    return ConcurrentSchedule(steps=steps, latency=latency, energy=energy,
+                              objective=objective, mode="pairwise")

@@ -64,6 +64,18 @@ def test_fig8_concurrent_claims():
     assert not failed, failed
 
 
+def test_fig8_multi_model_claims_smoke():
+    """M = 3 zoo sweep (sampled, coarsened) runs end-to-end with the
+    executor verification check passing."""
+    from benchmarks import fig8_concurrent
+    out = fig8_concurrent.run_multi(verbose=False, n_models=3, limit=3,
+                                    max_segments=24)
+    failed = [c for c, ok in out["checks"].items() if not ok]
+    assert not failed, failed
+    assert out["n_models"] == 3 and out["n_combos"] == 3
+    assert sum(out["solver_modes"].values()) == 3
+
+
 def test_tpu_autoshard_claims():
     from benchmarks import tpu_autoshard
     out = tpu_autoshard.run(verbose=False)

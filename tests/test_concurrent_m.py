@@ -1,0 +1,395 @@
+"""M-request concurrent scheduling: equivalence, optimality, invariances,
+and real M-model lane execution.
+
+* M = 2 through ``solve_concurrent`` must be **bitwise identical** to the
+  retained pair solvers (it dispatches to them).
+* The M-dimensional grid A* must match an independent brute force over
+  all interleavings x PU choices under the group co-execution laws, and
+  the M = 2 grid must match the pair optimum.
+* The group laws must reduce to the pair laws for M = 2, bit for bit.
+* Permuting request order must never change the optimum.
+* An M = 3 ``ConcurrentSchedule`` executed across the shared PU lanes
+  must produce outputs identical to isolated per-model execution.
+"""
+import itertools
+from functools import lru_cache
+
+import numpy as np
+import pytest
+
+from repro.core import (ContentionModel, CostEntry, CostTable,
+                        DenseCostTable, EDGE_PUS, FusedOp, OpGraph,
+                        ScheduleExecutor, Workload, solve_concurrent,
+                        solve_concurrent_joint)
+
+PUS = ("CPU", "GPU", "NPU")
+
+
+def random_workload(rng, n_ops, drop_frac=0.25):
+    table = CostTable(list(PUS))
+    ops = []
+    for i in range(n_ops):
+        ops.append(FusedOp(name=f"o{i}", kind="other", out_shape=(4,)))
+        sup = [p for p in PUS if rng.random() > drop_frac]
+        if not sup:
+            sup = [PUS[int(rng.integers(len(PUS)))]]
+        for pu in sup:
+            table.set(i, pu, CostEntry(
+                kernel=float(rng.uniform(1e-6, 1e-3)),
+                dispatch=float(rng.uniform(0, 1e-5)),
+                h2d=float(rng.uniform(0, 1e-4)),
+                d2h=float(rng.uniform(0, 1e-4)),
+                power=float(rng.uniform(5.0, 30.0))))
+    return Workload.build(list(range(n_ops)), table, EDGE_PUS, ops=ops)
+
+
+def objective_key(sched, objective):
+    return sched.latency if objective == "latency" else sched.energy
+
+
+# ---------------------------------------------------------------------------
+# group laws
+# ---------------------------------------------------------------------------
+
+
+def test_group_laws_reduce_to_pair_laws():
+    cm = ContentionModel()
+    rng = np.random.default_rng(0)
+    for _ in range(300):
+        ta, tb = rng.uniform(1e-6, 1e-3, 2)
+        pa, pb = (PUS[int(i)] for i in rng.integers(0, 3, 2))
+        pwa, pwb = rng.uniform(5, 30, 2)
+        assert (cm.group_step_cost([ta, tb], [pa, pb])
+                == cm.pair_step_cost(ta, pa, tb, pb))
+        cca, ccb = cm.co_exec(ta, pa, tb, pb)
+        want = ta * pwa + tb * pwb if pa == pb else cca * pwa + ccb * pwb
+        assert cm.group_energy([ta, tb], [pwa, pwb], [pa, pb]) == want
+
+
+def test_group_step_cost_single_op_is_solo():
+    cm = ContentionModel()
+    assert cm.group_step_cost([3e-4], ["NPU"]) == 3e-4
+    assert cm.group_energy([3e-4], [9.0], ["NPU"]) == 3e-4 * 9.0
+
+
+# ---------------------------------------------------------------------------
+# M = 2: bitwise equivalence with the retained pair solvers
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_m2_bitwise_identical_to_pair_solver(seed, objective):
+    rng = np.random.default_rng(1000 + seed)
+    wl0 = random_workload(rng, int(rng.integers(2, 12)))
+    wl1 = random_workload(rng, int(rng.integers(2, 12)))
+    cm = ContentionModel()
+    mary = solve_concurrent([wl0, wl1], cm, objective)
+    pair = solve_concurrent_joint(wl0.chain, wl0.table, wl1.chain, wl1.table,
+                                  EDGE_PUS, cm, objective,
+                                  dense0=wl0.dense, dense1=wl1.dense)
+    assert mary.latency == pair.latency          # bitwise
+    assert mary.energy == pair.energy            # bitwise
+    assert ([(s.ops, s.pus, s.cost) for s in mary.steps]
+            == [(s.ops, s.pus, s.cost) for s in pair.steps])
+    assert mary.mode == pair.mode
+
+
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_m2_grid_matches_pair_optimum(objective):
+    """Forcing the M-dim grid on a pair must reach the pair A* optimum
+    (tie-broken paths may differ; the objective value must agree)."""
+    rng = np.random.default_rng(77)
+    wl0 = random_workload(rng, 7)
+    wl1 = random_workload(rng, 9)
+    cm = ContentionModel()
+    grid = solve_concurrent([wl0, wl1], cm, objective, algorithm="grid")
+    pair = solve_concurrent([wl0, wl1], cm, objective)
+    assert grid.mode == "joint-grid"
+    assert objective_key(grid, objective) == pytest.approx(
+        objective_key(pair, objective), rel=1e-11)
+
+
+# ---------------------------------------------------------------------------
+# M >= 3: optimality, invariances, fallback
+# ---------------------------------------------------------------------------
+
+
+def brute_force_group(wls, cm, objective):
+    """Exhaustive enumeration over advance-subsets x PU choices."""
+    m = len(wls)
+    ns = [wl.n for wl in wls]
+    sups = [[list(np.flatnonzero(wl.dense.mask[i])) for i in range(wl.n)]
+            for wl in wls]
+    ws = [wl.dense.w for wl in wls]
+    pws = [wl.dense.power for wl in wls]
+    names = [wl.pu_names for wl in wls]
+
+    @lru_cache(maxsize=None)
+    def best(pos):
+        if all(pos[r] == ns[r] for r in range(m)):
+            return 0.0
+        avail = [r for r in range(m) if pos[r] < ns[r]]
+        cands = []
+        for sz in range(1, len(avail) + 1):
+            for reqs in itertools.combinations(avail, sz):
+                npos = tuple(p + (1 if r in reqs else 0)
+                             for r, p in enumerate(pos))
+                rest = best(npos)
+                for combo in itertools.product(
+                        *[sups[r][pos[r]] for r in reqs]):
+                    ts = [float(ws[r][pos[r], j])
+                          for r, j in zip(reqs, combo)]
+                    ps_ = [float(pws[r][pos[r], j])
+                           for r, j in zip(reqs, combo)]
+                    pn = [names[r][j] for r, j in zip(reqs, combo)]
+                    step = cm.group_step_cost(ts, pn)
+                    e = cm.group_energy(ts, ps_, pn)
+                    cands.append((step if objective == "latency" else e)
+                                 + rest)
+        return min(cands)
+
+    return best(tuple([0] * m))
+
+
+@pytest.mark.parametrize("seed", range(6))
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_m3_grid_optimal_vs_bruteforce(seed, objective):
+    rng = np.random.default_rng(2000 + seed)
+    wls = [random_workload(rng, int(rng.integers(1, 4))) for _ in range(3)]
+    cm = ContentionModel()
+    sched = solve_concurrent(wls, cm, objective, algorithm="grid")
+    bf = brute_force_group(wls, cm, objective)
+    assert objective_key(sched, objective) == pytest.approx(bf, rel=1e-11)
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_permuting_requests_preserves_optimum(seed, objective):
+    """The joint optimum is symmetric in the requests: permuting the
+    workload order never changes the objective value, and each request
+    keeps an equally-optimal schedule."""
+    rng = np.random.default_rng(3000 + seed)
+    wls = [random_workload(rng, int(rng.integers(2, 5))) for _ in range(3)]
+    cm = ContentionModel()
+    base = solve_concurrent(wls, cm, objective, algorithm="grid")
+    for perm in itertools.permutations(range(3)):
+        got = solve_concurrent([wls[r] for r in perm], cm, objective,
+                               algorithm="grid")
+        assert objective_key(got, objective) == pytest.approx(
+            objective_key(base, objective), rel=1e-11)
+
+
+def test_schedule_covers_every_op_once():
+    rng = np.random.default_rng(9)
+    wls = [random_workload(rng, n) for n in (3, 5, 2)]
+    sched = solve_concurrent(wls, ContentionModel())
+    assert sched.n_requests == 3
+    for r, wl in enumerate(wls):
+        assert [o for o, _ in sched.assignment_of(r)] == wl.chain
+
+
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_pairwise_fallback_upper_bounds_grid(objective):
+    rng = np.random.default_rng(42)
+    wls = [random_workload(rng, int(rng.integers(3, 6))) for _ in range(4)]
+    cm = ContentionModel()
+    grid = solve_concurrent(wls, cm, objective, algorithm="grid",
+                            max_states=10**6)
+    pw = solve_concurrent(wls, cm, objective, algorithm="pairwise")
+    assert pw.mode == "pairwise"
+    assert objective_key(grid, objective) <= (
+        objective_key(pw, objective) * (1 + 1e-9))
+    # the fallback is a real schedule: every op covered exactly once
+    for r, wl in enumerate(wls):
+        assert [o for o, _ in pw.assignment_of(r)] == wl.chain
+
+
+def test_auto_routes_large_grids_to_pairwise():
+    rng = np.random.default_rng(8)
+    wls = [random_workload(rng, 9) for _ in range(3)]
+    sched = solve_concurrent(wls, ContentionModel(), max_states=100)
+    assert sched.mode == "pairwise"
+    sched2 = solve_concurrent(wls, ContentionModel(), max_states=10**6)
+    assert sched2.mode == "joint-grid"
+    assert sched2.latency <= sched.latency * (1 + 1e-9)
+
+
+def test_custom_contention_routes_to_pairwise_and_honours_laws():
+    class Harsh(ContentionModel):
+        def co_exec(self, t_a, pu_a, t_b, pu_b):
+            return 10.0 * t_a, 10.0 * t_b
+
+        def pair_step_cost(self, t_a, pu_a, t_b, pu_b):
+            return 10.0 * max(t_a, t_b)
+
+    rng = np.random.default_rng(4)
+    wls = [random_workload(rng, 4, drop_frac=0.0) for _ in range(3)]
+    harsh = Harsh()
+    sched = solve_concurrent(wls, harsh)
+    assert sched.mode == "pairwise"   # grid would misprice custom laws
+    with pytest.raises(ValueError, match="group co-execution"):
+        solve_concurrent(wls, harsh, algorithm="grid")
+
+
+def test_grid_raises_beyond_max_states():
+    rng = np.random.default_rng(6)
+    wls = [random_workload(rng, 10) for _ in range(3)]
+    with pytest.raises(ValueError, match="max_states"):
+        solve_concurrent(wls, ContentionModel(), algorithm="grid",
+                         max_states=50)
+
+
+def test_m1_solo_walk():
+    rng = np.random.default_rng(13)
+    wl = random_workload(rng, 6)
+    sched = solve_concurrent([wl])
+    assert sched.n_requests == 1
+    assert [o for o, _ in sched.assignment_of(0)] == wl.chain
+    best = float(np.sum(np.min(np.where(wl.dense.mask, wl.dense.w, np.inf),
+                               axis=1)))
+    assert sched.latency == pytest.approx(best, rel=1e-12)
+
+
+def test_unsupported_op_raises():
+    table = CostTable(list(PUS))
+    ops = [FusedOp(name="a", kind="other", out_shape=(4,)),
+           FusedOp(name="b", kind="other", out_shape=(4,))]
+    table.set(0, "CPU", CostEntry(1e-4, 1e-6, 0.0, 0.0, 10.0))
+    wl_bad = Workload(chain=[0, 1],
+                      dense=DenseCostTable.from_chain([0, 1], table,
+                                                      EDGE_PUS),
+                      pus=EDGE_PUS, ops=ops, table=table)
+    rng = np.random.default_rng(1)
+    wl_ok = random_workload(rng, 3, drop_frac=0.0)
+    with pytest.raises(ValueError, match="joint search failed"):
+        solve_concurrent([wl_bad, wl_ok, wl_ok], algorithm="grid")
+
+
+# ---------------------------------------------------------------------------
+# M = 3 real execution across the shared PU lanes
+# ---------------------------------------------------------------------------
+
+
+def _payload_model(rng, tag, n, kind):
+    ops = []
+    for i in range(n):
+        if kind == "matmul":
+            w = rng.standard_normal((24, 24)) / 5.0
+            ops.append(FusedOp(
+                name=f"{tag}{i}", kind="matmul",
+                in_shapes=((4, 24), (24, 24)), out_shape=(4, 24),
+                fn=(lambda wi: lambda x: np.tanh(x @ wi))(w)))
+        else:
+            ops.append(FusedOp(
+                name=f"{tag}{i}", kind="cumsum",
+                in_shapes=((4, 24),), out_shape=(4, 24),
+                fn=lambda x: np.cumsum(x, axis=1) / x.shape[1]))
+    return OpGraph(ops)
+
+
+def test_m3_executor_matches_isolated():
+    """An M=3 concurrent schedule really executed across the shared PU
+    lanes yields bitwise-identical outputs to isolated execution."""
+    from repro.core import EdgeSoCCostModel
+    rng = np.random.default_rng(0)
+    graphs = [_payload_model(rng, "a", 5, "matmul"),
+              _payload_model(rng, "b", 7, "cumsum"),
+              _payload_model(rng, "c", 4, "matmul")]
+    inputs = [{0: (rng.standard_normal((4, 24)),)} for _ in graphs]
+    model = EdgeSoCCostModel()
+    wls = [Workload.build(list(range(len(g))), model.build_table(g),
+                          EDGE_PUS, ops=g.ops) for g in graphs]
+    sched = solve_concurrent(wls, ContentionModel())
+    assert sched.mode == "joint-grid"
+    ex = ScheduleExecutor(list(EDGE_PUS))
+    conc = ex.run_concurrent(graphs, sched, inputs)
+    for g, x, got in zip(graphs, inputs, conc):
+        mono = ex.run_monolithic(g, x)
+        assert ScheduleExecutor.outputs_close(mono, got)  # bitwise
+
+
+def test_run_concurrent_rejects_mismatched_schedule():
+    rng = np.random.default_rng(2)
+    graphs = [_payload_model(rng, "a", 3, "matmul"),
+              _payload_model(rng, "b", 3, "cumsum")]
+    from repro.core import EdgeSoCCostModel
+    model = EdgeSoCCostModel()
+    wls = [Workload.build(list(range(len(g))), model.build_table(g),
+                          EDGE_PUS, ops=g.ops) for g in graphs]
+    sched = solve_concurrent(wls, ContentionModel())
+    ex = ScheduleExecutor(list(EDGE_PUS))
+    with pytest.raises(ValueError, match="requests"):
+        ex.run_concurrent(graphs[:1], sched)
+
+
+def test_custom_contention_rejects_derived_views():
+    """Derived dense views carry no oracle table; custom-law solves must
+    reject them loudly instead of silently pricing nominal costs."""
+    class Harsh(ContentionModel):
+        def co_exec(self, t_a, pu_a, t_b, pu_b):
+            return 10.0 * t_a, 10.0 * t_b
+
+    rng = np.random.default_rng(21)
+    wl = random_workload(rng, 4, drop_frac=0.0)
+    adj = wl.under_condition({"GPU": 1000.0}, ())
+    with pytest.raises(ValueError, match="oracle CostTable"):
+        solve_concurrent([adj, wl], Harsh())
+    with pytest.raises(ValueError, match="oracle CostTable"):
+        solve_concurrent([adj, wl, wl], Harsh())
+
+
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_shared_caches_match_fresh_solves(objective):
+    """A ConcurrentCaches pool threaded through both objectives must
+    reproduce fresh solves bitwise on both routes."""
+    from repro.core import ConcurrentCaches
+
+    cm = ContentionModel()
+    rng = np.random.default_rng(33)
+    wls = [random_workload(rng, int(rng.integers(2, 5))) for _ in range(3)]
+    for algo in ("grid", "pairwise"):
+        caches = ConcurrentCaches()
+        first = solve_concurrent(wls, cm, "latency", algorithm=algo)
+        warm = solve_concurrent(wls, cm, "latency", algorithm=algo,
+                                caches=caches)
+        reused = solve_concurrent(wls, cm, objective, algorithm=algo,
+                                  caches=caches)
+        fresh = solve_concurrent(wls, cm, objective, algorithm=algo)
+        assert (warm.latency, warm.energy) == (first.latency, first.energy)
+        assert (reused.latency, reused.energy) == (fresh.latency,
+                                                   fresh.energy)
+        assert ([(s.ops, s.pus, s.cost) for s in reused.steps]
+                == [(s.ops, s.pus, s.cost) for s in fresh.steps])
+
+
+def test_run_concurrent_rejects_misordered_schedule():
+    """A coverage-complete but dependency-misordered schedule must raise,
+    not deadlock the lane workers."""
+    from repro.core import ConcurrentSchedule, ConcurrentStep, EdgeSoCCostModel
+    rng = np.random.default_rng(3)
+    g = _payload_model(rng, "a", 2, "matmul")
+    model = EdgeSoCCostModel()
+    wl = Workload.build([0, 1], model.build_table(g), EDGE_PUS, ops=g.ops)
+    good = solve_concurrent([wl], ContentionModel())
+    bad = ConcurrentSchedule(steps=list(reversed(good.steps)),
+                             latency=good.latency, energy=good.energy,
+                             objective=good.objective, mode=good.mode)
+    ex = ScheduleExecutor(list(EDGE_PUS))
+    with pytest.raises(ValueError, match="before its predecessor"):
+        ex.run_concurrent([g], bad)
+
+
+def test_solve_sequential_oracle_algorithms_need_a_table():
+    from repro.core import solve_sequential
+    rng = np.random.default_rng(15)
+    wl = random_workload(rng, 4, drop_frac=0.0)
+    derived = wl.under_condition({"CPU": 2.0}, ())
+    for algo in ("dijkstra", "dp_reference"):
+        with pytest.raises(ValueError, match="oracle table"):
+            solve_sequential(derived.chain, None, None, EDGE_PUS,
+                             algorithm=algo, workload=derived)
+    # the dense DP needs no oracle
+    s = solve_sequential(derived.chain, None, None, EDGE_PUS,
+                         algorithm="dp", workload=derived)
+    assert len(s.assignment) == 4

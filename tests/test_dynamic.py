@@ -116,3 +116,86 @@ def test_tile_split_makespan_beats_serial():
 
     serial = t_full(gemm) + t_full(elt)
     assert mk < serial
+
+
+# ---------------------------------------------------------------------------
+# Workload-layer dynamic scheduling (dense conditions, real replan numbers)
+# ---------------------------------------------------------------------------
+
+
+def test_replanned_schedule_carries_real_numbers():
+    """After a remap the stitched plan must expose finite re-evaluated
+    latency/energy (prefix at the nominal profile, tail under the active
+    condition) — not NaN placeholders."""
+    import math
+
+    g, table = _chain(10)
+    chain = g.topo_order()
+    dyn = DynamicScheduler(chain, g.ops, table, EDGE_PUS)
+    cond = RuntimeCondition(slowdown={"GPU": 4.0})
+    plan = dyn.on_condition(5, cond)
+    assert dyn.events, "expected a remap event"
+    assert math.isfinite(plan.latency) and plan.latency > 0
+    assert math.isfinite(plan.energy) and plan.energy > 0
+    # the numbers must equal the spliced-workload evaluation of the plan
+    adj = dyn.workload.under_condition(cond.slowdown, cond.unavailable)
+    want = dyn.workload.spliced(adj, 5).evaluate(plan.assignment)
+    assert (plan.latency, plan.energy) == want
+
+
+def test_on_condition_uses_dense_views_not_dict_rebuilds():
+    """The dynamic hot path must not construct scalar CostTables."""
+    from unittest import mock
+
+    from repro.core.costmodel import CostTable as CT
+
+    g, table = _chain(8)
+    chain = g.topo_order()
+    dyn = DynamicScheduler(chain, g.ops, table, EDGE_PUS)
+    with mock.patch.object(CT, "__init__",
+                           side_effect=AssertionError(
+                               "scalar CostTable built on the dynamic "
+                               "hot path")):
+        dyn.on_condition(3, RuntimeCondition(slowdown={"GPU": 3.0}))
+        dyn.simulate({4: RuntimeCondition(slowdown={"CPU": 1.5})})
+
+
+def test_total_pu_loss_raises_descriptive_error():
+    """An op losing ALL PUs under a condition must raise a descriptive
+    infeasibility error, not a bare IndexError."""
+    from repro.core.dynamic import InfeasibleScheduleError
+
+    g, table = _chain(6)
+    chain = g.topo_order()
+    dyn = DynamicScheduler(chain, g.ops, table, EDGE_PUS)
+    doom = RuntimeCondition(unavailable=frozenset({"CPU", "GPU", "NPU"}))
+    with pytest.raises(InfeasibleScheduleError, match="infeasible"):
+        dyn.simulate({3: doom})
+
+
+def test_simulate_guard_raises_on_unsupported_assignment():
+    """If the active plan somehow assigns an op to a PU the condition has
+    removed, simulate reports it descriptively."""
+    from repro.core.dynamic import InfeasibleScheduleError
+
+    g, table = _chain(6)
+    chain = g.topo_order()
+    dyn = DynamicScheduler(chain, g.ops, table, EDGE_PUS)
+    # corrupt the plan: an op forced onto a PU we then take away;
+    # no condition event fires at that position, so no replan happens
+    dyn.plan.assignment[4] = "NPU"
+    dyn.workload = dyn.workload.under_condition({}, {"NPU"})
+    with pytest.raises(InfeasibleScheduleError, match="cannot run on NPU"):
+        dyn.simulate({})
+
+
+def test_dynamic_scheduler_accepts_prebuilt_workload():
+    from repro.core import Workload
+
+    g, table = _chain(6)
+    chain = g.topo_order()
+    wl = Workload.build(chain, table, EDGE_PUS, ops=g.ops)
+    dyn = DynamicScheduler(chain, g.ops, table, EDGE_PUS, workload=wl)
+    assert dyn.workload is wl
+    ref = DynamicScheduler(chain, g.ops, table, EDGE_PUS)
+    assert dyn.plan.assignment == ref.plan.assignment

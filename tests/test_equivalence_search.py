@@ -289,3 +289,71 @@ def test_custom_contention_model_falls_back_to_reference():
     assert got.latency == want.latency
     assert ([(s.ops, s.pus) for s in got.steps]
             == [(s.ops, s.pus) for s in want.steps])
+
+
+def test_solve_concurrent_m2_is_the_pair_fast_path():
+    """The M-ary entry point with M = 2 must be bitwise identical to the
+    retained pair solver — the pair A* IS the M = 2 case."""
+    from repro.core import Workload, solve_concurrent
+    rng = np.random.default_rng(4242)
+    ops0, t0 = random_table(rng, 9)
+    ops1, t1 = random_table(rng, 6)
+    c0, c1 = list(range(9)), list(range(6))
+    cm = ContentionModel()
+    wl0 = Workload.build(c0, t0, EDGE_PUS, ops=ops0)
+    wl1 = Workload.build(c1, t1, EDGE_PUS, ops=ops1)
+    for objective in ("latency", "energy"):
+        mary = solve_concurrent([wl0, wl1], cm, objective)
+        pair = solve_concurrent_joint(c0, t0, c1, t1, EDGE_PUS, cm, objective,
+                                      dense0=wl0.dense, dense1=wl1.dense)
+        assert mary.latency == pair.latency
+        assert mary.energy == pair.energy
+        assert ([(s.ops, s.pus, s.cost) for s in mary.steps]
+                == [(s.ops, s.pus, s.cost) for s in pair.steps])
+
+
+def test_shared_pair_cache_matches_fresh_caches():
+    """One PairCostCache threaded through both objectives (the fig8
+    micro-opt) must reproduce per-objective fresh-cache solves bitwise."""
+    rng = np.random.default_rng(515)
+    ops0, t0 = random_table(rng, 10)
+    ops1, t1 = random_table(rng, 8)
+    c0, c1 = list(range(10)), list(range(8))
+    cm = ContentionModel()
+    d0 = DenseCostTable.from_chain(c0, t0, EDGE_PUS)
+    d1 = DenseCostTable.from_chain(c1, t1, EDGE_PUS)
+    shared = PairCostCache(cm, d0, d1)
+    for objective in ("latency", "energy"):
+        got = solve_concurrent_joint(c0, t0, c1, t1, EDGE_PUS, cm, objective,
+                                     cache=shared)
+        want = solve_concurrent_joint(c0, t0, c1, t1, EDGE_PUS, cm, objective,
+                                      dense0=d0, dense1=d1)
+        assert got.latency == want.latency
+        assert got.energy == want.energy
+        assert ([(s.ops, s.pus, s.cost) for s in got.steps]
+                == [(s.ops, s.pus, s.cost) for s in want.steps])
+        ga = solve_concurrent_aligned(c0, t0, c1, t1, EDGE_PUS, cm, objective,
+                                      cache=shared)
+        wa = solve_concurrent_aligned(c0, t0, c1, t1, EDGE_PUS, cm, objective,
+                                      dense0=d0, dense1=d1)
+        assert (ga.latency, ga.energy) == (wa.latency, wa.energy)
+
+
+def test_dense_evaluate_matches_scalar_reference_walk():
+    """The dense Workload evaluator behind evaluate_sequential must agree
+    with the retained scalar dict walk."""
+    from repro.core import (Workload, evaluate_sequential,
+                            evaluate_sequential_reference)
+    rng = np.random.default_rng(616)
+    ops, table = random_table(rng, 20)
+    chain = list(range(20))
+    wl = Workload.build(chain, table, EDGE_PUS, ops=ops)
+    for _ in range(8):
+        assign = [table.supported_pus(oi)[
+            int(rng.integers(len(table.supported_pus(oi))))] for oi in chain]
+        got = evaluate_sequential(chain, assign, ops, table, EDGE_PUS,
+                                  workload=wl)
+        want = evaluate_sequential_reference(chain, assign, ops, table,
+                                             EDGE_PUS)
+        assert got[0] == pytest.approx(want[0], rel=1e-12)
+        assert got[1] == pytest.approx(want[1], rel=1e-12)

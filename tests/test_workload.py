@@ -1,0 +1,157 @@
+"""The dense ``Workload`` layer must reproduce the scalar oracles exactly.
+
+``Workload.evaluate`` / ``single_pu`` vs the scalar dict walks;
+``select``/``tail`` row views vs re-ingestion; ``under_condition`` column
+scalings vs the scalar ``adjusted_table`` rebuild."""
+import numpy as np
+import pytest
+
+from repro.core import (CostEntry, CostTable, EDGE_PUS, Workload,
+                        evaluate_sequential, evaluate_sequential_reference,
+                        single_pu_cost)
+from repro.core.dynamic import RuntimeCondition, adjusted_table
+from repro.core.op import FusedOp
+
+PUS = ("CPU", "GPU", "NPU")
+
+
+def random_table(rng, n_ops, drop_frac=0.25):
+    table = CostTable(list(PUS))
+    ops = []
+    for i in range(n_ops):
+        ops.append(FusedOp(name=f"o{i}", kind="other", out_shape=(4,)))
+        sup = [p for p in PUS if rng.random() > drop_frac]
+        if not sup:
+            sup = [PUS[int(rng.integers(len(PUS)))]]
+        for pu in sup:
+            table.set(i, pu, CostEntry(
+                kernel=float(rng.uniform(1e-6, 1e-3)),
+                dispatch=float(rng.uniform(0, 1e-5)),
+                h2d=float(rng.uniform(0, 1e-4)),
+                d2h=float(rng.uniform(0, 1e-4)),
+                power=float(rng.uniform(5.0, 30.0))))
+    return ops, table
+
+
+def random_assignment(rng, table, chain):
+    return [table.supported_pus(oi)[int(rng.integers(
+        len(table.supported_pus(oi))))] for oi in chain]
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_evaluate_matches_scalar_reference(seed):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(1, 25))
+    ops, table = random_table(rng, n)
+    chain = list(range(n))
+    wl = Workload.build(chain, table, EDGE_PUS, ops=ops)
+    for _ in range(5):
+        assign = random_assignment(rng, table, chain)
+        lat_d, eng_d = wl.evaluate(assign)
+        lat_r, eng_r = evaluate_sequential_reference(
+            chain, assign, ops, table, EDGE_PUS)
+        assert lat_d == pytest.approx(lat_r, rel=1e-12)
+        assert eng_d == pytest.approx(eng_r, rel=1e-12)
+        # the public wrapper goes through the same dense path
+        lat_w, eng_w = evaluate_sequential(chain, assign, ops, table,
+                                           EDGE_PUS, workload=wl)
+        assert (lat_w, eng_w) == (lat_d, eng_d)
+
+
+def test_evaluate_rejects_or_flags_infeasible():
+    rng = np.random.default_rng(3)
+    ops, table = random_table(rng, 4, drop_frac=0.0)
+    # drop op 2 from GPU
+    t2 = CostTable(list(PUS))
+    for (oi, pu), e in table.items():
+        if not (oi == 2 and pu == "GPU"):
+            t2.set(oi, pu, e)
+    wl = Workload.build([0, 1, 2, 3], t2, EDGE_PUS, ops=ops)
+    with pytest.raises(KeyError, match="unsupported on GPU"):
+        wl.evaluate(["CPU", "CPU", "GPU", "CPU"])
+    assert wl.evaluate(["CPU", "CPU", "GPU", "CPU"],
+                       allow_infeasible=True) == (float("inf"), float("inf"))
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_single_pu_matches_scalar(seed):
+    rng = np.random.default_rng(100 + seed)
+    n = int(rng.integers(1, 20))
+    ops, table = random_table(rng, n, drop_frac=0.3)
+    chain = list(range(n))
+    wl = Workload.build(chain, table, EDGE_PUS, ops=ops)
+    for pu in PUS:
+        got = single_pu_cost(chain, pu, ops, table, EDGE_PUS, workload=wl)
+        if any(not table.supported(oi, pu) for oi in chain):
+            assert got is None
+            continue
+        want = evaluate_sequential_reference(chain, [pu] * n, ops, table,
+                                             EDGE_PUS)
+        assert got == pytest.approx(want, rel=1e-12)
+
+
+def test_select_and_tail_are_views_of_the_same_costs():
+    rng = np.random.default_rng(7)
+    ops, table = random_table(rng, 12, drop_frac=0.0)
+    chain = list(range(12))
+    wl = Workload.build(chain, table, EDGE_PUS, ops=ops)
+    sub_chain = [3, 5, 8, 11]
+    sub = wl.select(sub_chain)
+    fresh = Workload.build(sub_chain, table, EDGE_PUS, ops=ops)
+    np.testing.assert_array_equal(sub.dense.w, fresh.dense.w)
+    np.testing.assert_array_equal(sub.dense.mask, fresh.dense.mask)
+    np.testing.assert_array_equal(sub.dense.dispatch, fresh.dense.dispatch)
+    assign = random_assignment(rng, table, sub_chain)
+    assert sub.evaluate(assign) == fresh.evaluate(assign)
+    t = wl.tail(4)
+    fresh_t = Workload.build(chain[4:], table, EDGE_PUS, ops=ops)
+    np.testing.assert_array_equal(t.dense.w, fresh_t.dense.w)
+    assert t.chain == chain[4:]
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_under_condition_matches_adjusted_table(seed):
+    """Column scalings on the dense view == the scalar adjusted_table
+    rebuild, cell for cell (kernel share scaled, dispatch untouched,
+    unavailable PUs dropped)."""
+    rng = np.random.default_rng(200 + seed)
+    n = int(rng.integers(2, 15))
+    ops, table = random_table(rng, n)
+    chain = list(range(n))
+    wl = Workload.build(chain, table, EDGE_PUS, ops=ops)
+    cond = RuntimeCondition(slowdown={"GPU": 2.5, "CPU": 1.3},
+                            unavailable=frozenset({"NPU"}))
+    adj_wl = wl.under_condition(cond.slowdown, cond.unavailable)
+    adj_t = adjusted_table(table, cond)
+    for pos, oi in enumerate(chain):
+        for j, pu in enumerate(wl.pu_names):
+            e = adj_t.get(oi, pu)
+            if e is None:
+                assert not adj_wl.dense.mask[pos, j]
+                assert adj_wl.dense.w[pos, j] == float("inf")
+            else:
+                assert adj_wl.dense.mask[pos, j]
+                assert adj_wl.dense.w[pos, j] == pytest.approx(e.w, rel=1e-15)
+
+
+def test_spliced_mixes_prefix_and_tail():
+    rng = np.random.default_rng(5)
+    ops, table = random_table(rng, 8, drop_frac=0.0)
+    chain = list(range(8))
+    wl = Workload.build(chain, table, EDGE_PUS, ops=ops)
+    adj = wl.under_condition({"GPU": 4.0}, ())
+    sp = wl.spliced(adj, 4)
+    np.testing.assert_array_equal(sp.dense.w[:4], wl.dense.w[:4])
+    np.testing.assert_array_equal(sp.dense.w[4:], adj.dense.w[4:])
+
+
+def test_best_solo_matches_best_single():
+    from benchmarks.common import best_single
+    rng = np.random.default_rng(11)
+    ops, table = random_table(rng, 10, drop_frac=0.0)
+    chain = list(range(10))
+    wl = Workload.build(chain, table, EDGE_PUS, ops=ops)
+    b, v, vals = wl.best_solo()
+    b2, v2, vals2 = best_single(chain, ops, table, workload=wl)
+    assert (b, v) == (b2, v2)
+    assert vals == vals2
