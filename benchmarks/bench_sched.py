@@ -12,7 +12,12 @@ Times, across the model zoo:
   (where the reference is intractable: the seed needed coarsening);
 * ``solve_concurrent`` with M >= 3 requests — the exact M-dimensional
   grid A* at coarsened granularity (its state count is recorded) and the
-  pairwise-merge fallback at full resolution.
+  pairwise-merge fallback at full resolution;
+* the ``Orchestrator`` front door — cold ``plan`` (full solve through the
+  router) vs a repeated identical ``plan`` served from the plan cache on
+  the full-resolution fig8 zoo pairs, so the plan-cache win is tracked
+  like the solver trajectory (``orchestrator`` section; the hit must stay
+  >= 10x faster than the cold solve).
 
 Writes ``BENCH_sched.json`` so subsequent PRs can diff the trajectory.
 ``--smoke`` runs a seconds-scale subset (used by CI).
@@ -24,7 +29,8 @@ import math
 import time
 
 from repro.core import (ContentionModel, EDGE_PUS, EdgeSoCCostModel,
-                        Workload, solve_concurrent, solve_concurrent_joint,
+                        Orchestrator, Workload, solve_concurrent,
+                        solve_concurrent_joint,
                         solve_concurrent_joint_reference, solve_parallel,
                         solve_sequential)
 from repro.core.paperzoo import zoo
@@ -73,7 +79,8 @@ def run(verbose: bool = True, smoke: bool = False,
         tables[name] = (g, list(range(len(g))), model.build_table(g))
 
     out: dict = {"smoke": smoke, "sequential": {}, "parallel": {},
-                 "joint_48seg": {}, "joint_fullres": {}, "concurrent_m": {}}
+                 "joint_48seg": {}, "joint_fullres": {}, "concurrent_m": {},
+                 "orchestrator": {}}
 
     for name in seq_models:
         g, chain, table = tables[name]
@@ -139,15 +146,38 @@ def run(verbose: bool = True, smoke: bool = False,
         }
         out["concurrent_m"][" x ".join(mset)] = row
 
+    # orchestrator front door: cold plan (routed full solve) vs a second
+    # identical plan served from the plan cache, at full op resolution
+    for a, b in joint_pairs:
+        ga, _, ta = tables[a]
+        gb, _, tb = tables[b]
+        cold_ms = float("inf")
+        orch = None
+        for _ in range(repeats):
+            orch = Orchestrator(model, EDGE_PUS, cm)
+            ha, hb = orch.register(ga, table=ta), orch.register(gb, table=tb)
+            t0 = time.perf_counter()
+            orch.plan((ha, hb))
+            cold_ms = min(cold_ms, 1e3 * (time.perf_counter() - t0))
+        hit_ms = 1e3 * _best_of(lambda: orch.plan((ha, hb)), 20)
+        out["orchestrator"][f"{a} x {b}"] = {
+            "cold_plan_ms": cold_ms, "cache_hit_ms": hit_ms,
+            "speedup": cold_ms / hit_ms}
+
     joint_speedup = geomean([r["speedup"]
                              for r in out["joint_48seg"].values()])
     out["joint_48seg_geomean_speedup"] = joint_speedup
+    orch_speedup = geomean([r["speedup"]
+                            for r in out["orchestrator"].values()])
+    out["orchestrator_geomean_speedup"] = orch_speedup
     out["checks"] = {
         "joint A* >= 10x over reference Dijkstra at 48-segment granularity "
         "(geomean %.1fx)" % joint_speedup: joint_speedup >= 10.0,
         "vectorized DP faster than explicit-graph Dijkstra on every model":
             all(r["speedup_vs_dijkstra"] > 1.0
                 for r in out["sequential"].values()),
+        "orchestrator plan-cache hit >= 10x faster than cold plan "
+        "(geomean %.0fx)" % orch_speedup: orch_speedup >= 10.0,
     }
 
     if verbose:
@@ -170,6 +200,10 @@ def run(verbose: bool = True, smoke: bool = False,
                   f"({r['grid_states']} states) "
                   f"{r['grid_%dseg_ms' % M_GRID_SEGMENTS]:8.2f}ms   "
                   f"pairwise@full {r['pairwise_fullres_ms']:8.2f}ms")
+        for pair, r in out["orchestrator"].items():
+            print(f"  orch {pair:34s} cold {r['cold_plan_ms']:8.2f}ms"
+                  f"  hit {1e3*r['cache_hit_ms']:8.2f}us"
+                  f"  ({r['speedup']:.0f}x)")
         for c, ok in out["checks"].items():
             print(f"  [{'PASS' if ok else 'FAIL'}] {c}")
 
@@ -187,10 +221,17 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale subset (CI)")
-    ap.add_argument("--out", default="BENCH_sched.json",
-                    help="output JSON path ('' to skip writing)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path ('' to skip writing; default "
+                         "BENCH_sched.json, or BENCH_sched.smoke.json "
+                         "under --smoke so the tracked full-run trajectory "
+                         "is never clobbered by a smoke run)")
     args = ap.parse_args()
-    out = run(smoke=args.smoke, out_path=args.out or None)
+    out_path = args.out
+    if out_path is None:
+        out_path = ("BENCH_sched.smoke.json" if args.smoke
+                    else "BENCH_sched.json")
+    out = run(smoke=args.smoke, out_path=out_path or None)
     # wall-clock ratio checks are informational in --smoke (single-repeat
     # timings on shared CI runners are too noisy to gate a build on)
     raise SystemExit(0 if args.smoke or all(out["checks"].values()) else 1)

@@ -5,8 +5,8 @@ import math
 import time
 from typing import Mapping, Sequence
 
-from repro.core import (CostTable, EdgeSoCCostModel, EDGE_PUS, Workload,
-                        single_pu_cost, solve_sequential)
+from repro.core import (CostTable, EdgeSoCCostModel, EDGE_PUS, Orchestrator,
+                        Workload, single_pu_cost, solve_sequential)
 from repro.core.costmodel import CostEntry
 from repro.core.op import FusedOp, OpGraph
 
@@ -44,17 +44,19 @@ def best_single(chain, ops, table, pus=EDGE_PUS, objective: str = "latency",
 
 
 def sequential_report(graph: OpGraph, model: EdgeSoCCostModel | None = None):
-    """One Table-2 row: single-PU latencies + BIDENT-lat + BIDENT-energy."""
-    model = model or EdgeSoCCostModel()
-    table = model.build_table(graph)
-    chain = graph.topo_order()
-    # one dense ingestion shared by the baselines and both solves
-    wl = Workload.build(chain, table, EDGE_PUS, ops=graph.ops)
+    """One Table-2 row: single-PU latencies + BIDENT-lat + BIDENT-energy.
+
+    Runs through the ``Orchestrator`` front door: one ``register`` (the
+    single dense ingestion, shared by the baselines and both solves),
+    then a latency and an energy ``plan`` — bitwise what the direct
+    ``solve_sequential`` calls returned."""
+    orch = Orchestrator(model or EdgeSoCCostModel(), EDGE_PUS)
+    h = orch.register(graph)
+    wl = orch.workload(h)
+    table, chain = wl.table, wl.chain
     b, bl, lat = best_single(chain, graph.ops, table, workload=wl)
-    sched_l = solve_sequential(chain, graph.ops, table, EDGE_PUS, "latency",
-                               workload=wl)
-    sched_e = solve_sequential(chain, graph.ops, table, EDGE_PUS, "energy",
-                               workload=wl)
+    sched_l = orch.plan(h, mode="sequential").schedule
+    sched_e = orch.plan(h, objective="energy", mode="sequential").schedule
     _, be, _ = best_single(chain, graph.ops, table, objective="energy",
                            workload=wl)
     return {

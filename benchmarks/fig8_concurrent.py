@@ -2,25 +2,30 @@
 configurations, vs homogeneous serial execution (each model sequentially on
 its own best single PU).
 
+The sweep drives the ``Orchestrator`` front door: every zoo config
+registers once (one dense ``Workload`` per model for the whole sweep),
+pairs/combos are ``plan``ed per objective, and each workload tuple's
+latency- and energy-objective solves share the orchestrator's
+objective-independent cache pool (``PairCostCache``/group edges built
+once per pair).  Plans are bitwise-identical to the direct
+``solve_concurrent*`` calls the sweep used to hand-assemble.
+
 Pair mode (default, the paper's experiment): all 190 unique pairs.
-Same-model pairs use the aligned solver; mixed pairs the joint (i, j)
-search (paper §3.2.2).  Each pair's latency- and energy-objective solves
-share one ``PairCostCache``, so the objective-independent 4-D pair-cost
-reductions are built once per pair.  The sweep runs at **full operator
-resolution**: the dense-table A* joint solver
-(``core.search.solve_concurrent_joint``) walks the optimal corridor of
-the progress grid directly, so even the pi0.5 x Hyena pair (4,334 x 504
-ops) solves in ~150 ms.  The seed's mandatory <= 48-segment coarsening
-(``common.segment_table``) is retired as an approximation and kept only
-as an opt-in fallback (``max_segments=``/``--max-segments``) for
-comparison runs.
+Same-model pairs use the aligned solver (``mode="aligned"``); mixed
+pairs the joint (i, j) search (paper §3.2.2).  The sweep runs at **full
+operator resolution**: the dense-table A* joint solver walks the optimal
+corridor of the progress grid directly, so even the pi0.5 x Hyena pair
+(4,334 x 504 ops) solves in ~150 ms.  The seed's mandatory <= 48-segment
+coarsening (``common.segment_table``) is retired as an approximation and
+kept only as an opt-in fallback (``max_segments=``/``--max-segments``)
+for comparison runs.
 
 M-model mode (``--n-models 3`` / ``4``): sweeps combinations of M
-distinct zoo configs through ``core.search.solve_concurrent`` — the
-M-dimensional grid A* where the progress grid is small enough, the
-documented pairwise-merge fallback elsewhere (the per-combo solver route
-is reported, never silently).  The mode also co-schedules M small
-*executable* payload models and runs them for real on the multi-lane
+distinct zoo configs through M-ary ``plan`` — the M-dimensional grid A*
+where the progress grid is small enough, the documented pairwise-merge
+fallback elsewhere (the per-combo solver route is reported, never
+silently).  The mode also co-schedules M small *executable* payload
+models and ``execute``s them for real on the multi-lane
 ``ScheduleExecutor``, verifying orchestrated outputs bitwise against
 isolated execution.
 
@@ -51,50 +56,56 @@ import time
 
 import numpy as np
 
-from repro.core import (ConcurrentCaches, ContentionModel, EDGE_PUS,
-                        EdgeSoCCostModel, FusedOp, OpGraph, PairCostCache,
-                        ScheduleExecutor, Workload, solve_concurrent,
-                        solve_concurrent_aligned, solve_concurrent_joint)
+from repro.core import (ContentionModel, EDGE_PUS, EdgeSoCCostModel,
+                        FusedOp, OpGraph, Orchestrator, ScheduleExecutor,
+                        Workload)
 from repro.core.costmodel import STATIC_POWER_W
 from repro.core.paperzoo import zoo
 
 from .common import best_single, geomean, segment_table
 
 
-def _setup(max_segments: int | None):
-    """Per-config workloads + serial baselines.  The Fig. 8 baseline is
-    "each model runs sequentially on its best single PU" — the energy
-    claim compares against the energy of THAT execution (not against an
-    energy-best serial run), consistent with the paper."""
+def _setup(max_segments: int | None, cm: ContentionModel
+           ) -> tuple[Orchestrator, dict, list[str], float]:
+    """One Orchestrator session for the whole sweep: every zoo config
+    registers once (dense workload memoized per model), and the serial
+    baselines come off the registered full-resolution workloads.  The
+    Fig. 8 baseline is "each model runs sequentially on its best single
+    PU" — the energy claim compares against the energy of THAT execution
+    (not against an energy-best serial run), consistent with the paper."""
     model = EdgeSoCCostModel()
     z = zoo()
     t_setup = time.time()
+    orch = Orchestrator(model, EDGE_PUS, cm)
     seg = {}
     for name, g in z.items():
         full_table = model.build_table(g)
-        full_chain = list(range(len(g)))
-        chain, table = (segment_table(g, full_table, max_segments)
-                        if max_segments is not None
-                        else (full_chain, full_table))
-        full_wl = Workload.build(full_chain, full_table, EDGE_PUS, ops=g.ops)
-        bpu, bl, _ = best_single(full_chain, g.ops, full_table,
+        if max_segments is None:
+            h = orch.register(g, table=full_table)
+            full_wl = orch.workload(h)
+        else:
+            # coarsened pair solves; baselines still at full resolution
+            chain, table = segment_table(g, full_table, max_segments)
+            h = orch.register(
+                [FusedOp(name=f"seg{i}", kind="other", out_shape=(1,))
+                 for i in range(len(chain))], table=table)
+            full_wl = Workload.build(list(range(len(g))), full_table,
+                                     EDGE_PUS, ops=g.ops)
+        bpu, bl, _ = best_single(full_wl.chain, g.ops, full_table,
                                  workload=full_wl)
         _, be = full_wl.single_pu(bpu)
-        # dense workload built once per model, shared by all pair solves
-        wl = (full_wl if max_segments is None
-              else Workload.build(chain, table, EDGE_PUS))
-        seg[name] = (wl, bl, be)
-    return seg, list(z), time.time() - t_setup
+        seg[name] = (h, bl, be)
+    return orch, seg, list(z), time.time() - t_setup
 
 
 def run(verbose: bool = True, max_segments: int | None = None) -> dict:
-    """Run the 190-pair sweep.
+    """Run the 190-pair sweep through the orchestrator front door.
 
     ``max_segments=None`` (default) schedules at full operator
     resolution; an integer opts back into the seed's segment coarsening.
     """
     cm = ContentionModel()
-    seg, names, t_setup = _setup(max_segments)
+    orch, seg, names, t_setup = _setup(max_segments, cm)
 
     pairs = list(itertools.combinations_with_replacement(names, 2))
     assert len(pairs) == 190, len(pairs)
@@ -102,18 +113,16 @@ def run(verbose: bool = True, max_segments: int | None = None) -> dict:
     energy_reds = {}
     t_solve = time.time()
     for a, b in pairs:
-        wa, bla, bea = seg[a]
-        wb, blb, beb = seg[b]
+        ha, bla, bea = seg[a]
+        hb, blb, beb = seg[b]
         serial = bla + blb
-        # one cache per pair: its objective-independent 4-D reductions
-        # serve both the latency- and the energy-objective solve
-        cache = PairCostCache(cm, wa.dense, wb.dense)
-        solve = solve_concurrent_aligned if a == b else solve_concurrent_joint
-        sched = solve(wa.chain, wa.table, wb.chain, wb.table, EDGE_PUS, cm,
-                      cache=cache)
+        # latency- and energy-objective plans of one pair share the
+        # orchestrator's objective-independent cache pool, so the 4-D
+        # pair-cost reductions are built once per pair
+        mode = "aligned" if a == b else "concurrent"
+        sched = orch.plan((ha, hb), mode=mode).schedule
         speedups[(a, b)] = serial / sched.latency
-        se = solve(wa.chain, wa.table, wb.chain, wb.table, EDGE_PUS, cm,
-                   objective="energy", cache=cache)
+        se = orch.plan((ha, hb), objective="energy", mode=mode).schedule
         # total window energy = active op energy + package static power
         # over the window: shortening the makespan saves static energy —
         # the dominant source of the paper's concurrent energy reduction.
@@ -206,17 +215,15 @@ def _payload_models(m: int):
 
 
 def _verify_executor(m: int, cm: ContentionModel) -> bool:
-    """Co-schedule M executable models, run them across the PU lanes, and
-    compare each model's outputs bitwise against isolated execution."""
-    model = EdgeSoCCostModel()
+    """Register M executable models, ``plan`` them concurrently, and
+    ``execute`` across the PU lanes — each model's outputs must match
+    isolated execution bitwise."""
     graphs, inputs = _payload_models(m)
-    wls = [Workload.build(list(range(len(g))), model.build_table(g),
-                          EDGE_PUS, ops=g.ops) for g in graphs]
-    sched = solve_concurrent(wls, cm)
-    ex = ScheduleExecutor(list(EDGE_PUS))
-    conc = ex.run_concurrent(graphs, sched, inputs)
+    orch = Orchestrator(EdgeSoCCostModel(), EDGE_PUS, cm)
+    plan = orch.plan([orch.register(g) for g in graphs])
+    conc = orch.execute(plan, inputs)
     for g, x, got in zip(graphs, inputs, conc):
-        mono = ex.run_monolithic(g, x)
+        mono = orch.executor.run_monolithic(g, x)
         if not ScheduleExecutor.outputs_close(mono, got):
             return False
     return True
@@ -233,7 +240,7 @@ def run_multi(verbose: bool = True, n_models: int = 3,
     approximated.
     """
     cm = ContentionModel()
-    seg, names, t_setup = _setup(max_segments)
+    orch, seg, names, t_setup = _setup(max_segments, cm)
     combos = list(itertools.combinations(names, n_models))
     n_total = len(combos)
     if limit is not None and limit < n_total:
@@ -246,13 +253,13 @@ def run_multi(verbose: bool = True, n_models: int = 3,
     modes: dict[str, int] = {}
     t_solve = time.time()
     for combo in combos:
-        wls = [seg[n][0] for n in combo]
+        hs = tuple(seg[n][0] for n in combo)
         serial = sum(seg[n][1] for n in combo)
-        # one cache pool per combo: group edges / pair caches built by the
-        # latency solve are reused by the energy solve
-        caches = ConcurrentCaches()
-        sched = solve_concurrent(wls, cm, caches=caches)
-        se = solve_concurrent(wls, cm, objective="energy", caches=caches)
+        # the combo's latency + energy plans share the orchestrator's
+        # per-workload-tuple cache pool (group edges / pair caches built
+        # by the latency solve are reused by the energy solve)
+        sched = orch.plan(hs).schedule
+        se = orch.plan(hs, objective="energy").schedule
         modes[sched.mode] = modes.get(sched.mode, 0) + 1
         speedups[combo] = serial / sched.latency
         base = (sum(seg[n][2] for n in combo) + STATIC_POWER_W * serial)

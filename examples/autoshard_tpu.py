@@ -49,5 +49,8 @@ with mesh:
     lowered = jax.jit(
         lambda p, b: M.loss_fn(rcfg, p, b, policy)[0]).lower(params, batch)
     compiled = lowered.compile()
+cost = compiled.cost_analysis()
+if isinstance(cost, (list, tuple)):   # older jax returns one dict per device
+    cost = cost[0] if cost else {}
 print("lowered + compiled under BIDENT-emitted shardings: OK "
-      f"({compiled.cost_analysis().get('flops', 0):.3g} HLO flops)")
+      f"({cost.get('flops', 0):.3g} HLO flops)")

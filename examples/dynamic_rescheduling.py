@@ -1,44 +1,61 @@
-"""Dynamic operator-level rescheduling — the paper's §6 future work, live.
+"""Dynamic operator-level rescheduling — the paper's §6 future work, live,
+through the orchestrator's condition hook.
 
-A hybrid GEMM+scan workload runs under a static BIDENT schedule; halfway
-through, the GPU thermally throttles 4x.  The dynamic scheduler detects
-the drift, re-runs the shortest-path search over the remaining tail
-(sub-millisecond), and reroutes — beating the static schedule.
+A hybrid GEMM+scan workload is registered and admitted; halfway through,
+the GPU thermally throttles 4x.  ``orch.on_condition`` invalidates the
+cached plans priced under the stale GPU assumption and re-plans the
+active request through its ``DynamicScheduler`` from current progress
+(sub-millisecond tail re-search, hysteresis included), returning the
+stitched plan — prefix at the nominal profile, tail under the throttled
+condition.  The low-level ``DynamicScheduler.simulate`` then replays the
+whole chain to compare realised latencies against a static schedule.
 
 Run:  PYTHONPATH=src python examples/dynamic_rescheduling.py
 """
-from repro.core import EDGE_PUS, AnalyticProfiler, OpGraph
+from repro.core import (EDGE_PUS, AnalyticProfiler, OpGraph, Orchestrator,
+                        RuntimeCondition)
 from repro.core.costmodel import make_cumsum, make_matmul
-from repro.core.dynamic import DynamicScheduler, RuntimeCondition
+from repro.core.dynamic import DynamicScheduler
 
 ops = []
 for i in range(12):
     ops.append(make_matmul(512, name=f"mm{i}") if i % 2 == 0
                else make_cumsum(4096, 128))
 g = OpGraph(ops)
-table = AnalyticProfiler().profile(g)
-chain = g.topo_order()
 
-event = {6: RuntimeCondition(slowdown={"GPU": 4.0})}
+orch = Orchestrator(AnalyticProfiler())
+h = orch.register(g)
+plan0 = orch.plan(h)
 print("event: GPU throttles 4.0x before op 6\n")
 
-dyn = DynamicScheduler(chain, g.ops, table, EDGE_PUS)
-plan_before = list(dyn.plan.assignment)
-t_dyn = dyn.simulate(event)
-
-static = DynamicScheduler(chain, g.ops, table, EDGE_PUS,
-                          replan_threshold=1e9)
-t_static = static.simulate(event)
-
-print(f"static plan : {plan_before}")
-print(f"dynamic plan: {dyn.plan.assignment}")
-for e in dyn.events:
+# the serving view: the request is active and 6 ops in when the
+# monitoring condition arrives
+orch.admit(h)
+orch.advance(h, 6)
+restitched = orch.on_condition(
+    RuntimeCondition(slowdown={"GPU": 4.0}))[(h, "latency")]
+print(f"static plan : {plan0.schedule.assignment}")
+print(f"dynamic plan: {restitched.schedule.assignment}")
+for e in orch.dynamic(h).events:
     print(f"remap at op {e.at_op} ({e.reason}): tail "
           f"{e.old_tail_cost*1e3:.2f} -> {e.new_tail_cost*1e3:.2f} ms predicted")
 # the stitched plan carries real re-evaluated numbers (prefix at the
 # nominal profile, tail under the throttled condition) — no NaNs
-print(f"stitched plan: {dyn.plan.latency*1e3:.2f} ms / "
-      f"{dyn.plan.energy*1e3:.2f} mJ predicted")
+print(f"stitched plan: {restitched.latency*1e3:.2f} ms / "
+      f"{restitched.energy*1e3:.2f} mJ predicted")
+# cached nominal plans priced with GPU@1.0 were invalidated per-PU
+print(f"plan cache after invalidation: {orch.stats}")
+
+# -- realised latency: replay on the low-level DynamicScheduler ----------
+event = {6: RuntimeCondition(slowdown={"GPU": 4.0})}
+table = orch.workload(h).table
+chain = g.topo_order()
+dyn = DynamicScheduler(chain, g.ops, table, EDGE_PUS)
+t_dyn = dyn.simulate(event)
+static = DynamicScheduler(chain, g.ops, table, EDGE_PUS,
+                          replan_threshold=1e9)
+t_static = static.simulate(event)
 print(f"\nrealised latency: static {t_static*1e3:.2f} ms, "
       f"dynamic {t_dyn*1e3:.2f} ms ({t_static/t_dyn:.2f}x)")
 assert t_dyn < t_static
+assert dyn.plan.assignment == restitched.schedule.assignment

@@ -1,9 +1,13 @@
-"""Heterogeneous serving: BIDENT's Fig. 5 on a real model.
+"""Heterogeneous serving: BIDENT's Fig. 5 on a real model, through the
+register → plan → execute front door.
 
-Builds the fused-operator graph of an assigned architecture's decode step,
-runs the sequential shortest-path search under latency AND energy
-objectives, prints the per-operator PU path (the paper's Fig. 5
-"highlighted path"), then actually serves batched requests with the
+The ``Orchestrator`` session owns the cost provider and the plan cache —
+the serving posture: ``register`` the decode-step operator graph once
+(profiled + densified behind a handle), then ``plan`` it under latency
+AND energy objectives (the second objective reuses the same memoized
+``Workload``; a repeated ``plan`` call is a cache hit).  The per-operator
+PU path (the paper's Fig. 5 "highlighted path") is read off
+``plan.route``, and batched requests are then actually served with the
 engine.
 
 Run:  PYTHONPATH=src python examples/heterogeneous_serving.py [--arch ...]
@@ -15,8 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ALL_ARCHS, get_config
-from repro.core import EDGE_PUS, EdgeSoCCostModel, solve_sequential
-from repro.core.schedule import single_pu_cost
+from repro.core import EdgeSoCCostModel, Orchestrator
 from repro.core.modelgraph import model_op_graph
 from repro.models import model as M
 from repro.serving.engine import Engine
@@ -27,37 +30,36 @@ ap.add_argument("--arch", default="zamba2-2.7b", choices=ALL_ARCHS)
 ap.add_argument("--batch", type=int, default=2)
 args = ap.parse_args()
 
-# -- BIDENT mapping of the decode-step operator graph ---------------------
+# -- register the decode-step operator graph ------------------------------
 cfg_full = get_config(args.arch)
 g = model_op_graph(cfg_full, kind="decode", batch=1, seq=2048)
-table = EdgeSoCCostModel().build_table(g)
-chain = g.topo_order()
+orch = Orchestrator(EdgeSoCCostModel())
+h = orch.register(g)
 
 for objective in ("latency", "energy"):
-    s = solve_sequential(chain, g.ops, table, EDGE_PUS, objective)
+    plan = orch.plan(h, objective=objective)
     counts: dict[str, int] = {}
-    for a in s.assignment:
-        counts[a] = counts.get(a, 0) + 1
+    for _, pu in plan.route[0]:
+        counts[pu] = counts.get(pu, 0) + 1
     print(f"{args.arch} decode, {objective}-optimal: "
-          f"{s.latency*1e3:.2f} ms / {s.energy*1e3:.1f} mJ, "
+          f"{plan.latency*1e3:.2f} ms / {plan.energy*1e3:.1f} mJ, "
           f"assignment {counts}")
 
-# Fig. 5-style path for the first layer's operators
-s = solve_sequential(chain, g.ops, table, EDGE_PUS)
+# Fig. 5-style path for the first layer's operators (cache hit: the
+# latency plan above is served back from the plan cache)
+plan = orch.plan(h)
+table = orch.workload(h).table
 print("\nper-operator path (first 12 ops):")
-for pos in range(min(12, len(chain))):
-    oi = chain[pos]
+for oi, pu in plan.route[0][:12]:
     op = g.ops[oi]
     best1 = min(table.supported_pus(oi),
                 key=lambda p: table.require(oi, p).w)
-    print(f"  {op.name:24s} kind={op.kind:9s} -> {s.assignment[pos]}"
-          + ("   (solo-best: %s)" % best1 if best1 != s.assignment[pos]
-             else ""))
+    print(f"  {op.name:24s} kind={op.kind:9s} -> {pu}"
+          + ("   (solo-best: %s)" % best1 if best1 != pu else ""))
 
-base = min(v for v in (single_pu_cost(chain, p, g.ops, table, EDGE_PUS)
-                       for p in EDGE_PUS) if v)[0]
-print(f"\nbest single PU {base*1e3:.2f} ms -> BIDENT {s.latency*1e3:.2f} ms "
-      f"({base/s.latency:.2f}x)")
+_, base, _ = orch.workload(h).best_solo()
+print(f"\nbest single PU {base*1e3:.2f} ms -> BIDENT {plan.latency*1e3:.2f} ms "
+      f"({base/plan.latency:.2f}x)   [plan cache: {orch.stats}]")
 
 # -- actually serve requests (reduced config on this CPU container) -------
 cfg = cfg_full.reduced()

@@ -1,22 +1,23 @@
 """Multi-model concurrent inference: the paper's Fig. 7(b) on real models,
-extended from pairs to M concurrent requests.
+extended from pairs to M concurrent requests — register → plan → execute.
 
-Three models' operator graphs are co-scheduled with the M-request joint
-search (``solve_concurrent`` — exact grid A* here; pairs keep the 2-D
-A*); the schedule is then REALLY EXECUTED across the multi-lane
-orchestrator (one worker lane per PU, all models multiplexed onto the
-shared lanes), and each model's outputs are verified against isolated
-execution.  Finally the predicted concurrent makespan is compared with
-homogeneous serial execution.
+Three models register with one ``Orchestrator`` session; ``plan`` over
+the handle tuple routes to the M-request joint search (exact grid A*
+here; pairs keep the 2-D A*), and ``execute`` REALLY RUNS the schedule
+across the multi-lane executor (one worker lane per PU, all models
+multiplexed onto the shared lanes), verifying each model's outputs
+against isolated execution.  The serving scenario is then played out
+online: two requests are admitted, make progress, and a third arrives
+mid-flight — ``admit`` re-plans the concurrent set over every active
+request's *remaining* ops.
 
 Run:  PYTHONPATH=src python examples/multi_model_concurrent.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import (EDGE_PUS, AnalyticProfiler, ContentionModel,
-                        FusedOp, OpGraph, ScheduleExecutor, Workload,
-                        solve_concurrent)
+from repro.core import (AnalyticProfiler, FusedOp, OpGraph, Orchestrator,
+                        ScheduleExecutor)
 
 key = jax.random.PRNGKey(0)
 
@@ -61,23 +62,19 @@ def conv_model(name: str, n_layers: int, width: int):
 
 models = [gemm_model("A", 8, 512), scan_model("B", 8, 512),
           conv_model("C", 6, 512)]
-prof = AnalyticProfiler()
-workloads = []
-serial = 0.0
-for g, _ in models:
-    table = prof.profile(g)
-    wl = Workload.build(g.topo_order(), table, EDGE_PUS, ops=g.ops)
-    workloads.append(wl)
-    serial += wl.best_solo()[1]   # best single PU, back to back
+orch = Orchestrator(AnalyticProfiler())
+handles = [orch.register(g) for g, _ in models]
+serial = sum(orch.workload(h).best_solo()[1]   # best single PU, back to back
+             for h in handles)
 
-sched = solve_concurrent(workloads, ContentionModel())
+plan = orch.plan(handles)
 print(f"serial best-single: {1e3*serial:.2f} ms")
-print(f"BIDENT {len(models)}-model concurrent ({sched.mode}): "
-      f"{1e3*sched.latency:.2f} ms -> {serial/sched.latency:.2f}x")
+print(f"BIDENT {len(models)}-model concurrent ({plan.schedule.mode}): "
+      f"{1e3*plan.latency:.2f} ms -> {serial/plan.latency:.2f}x")
 
 # show the first few co-scheduled steps (Fig. 7(b) style)
 print("\nfirst 6 concurrent steps:")
-for st in sched.steps[:6]:
+for st in plan.schedule.steps[:6]:
     cols = []
     for r, (g, _) in enumerate(models):
         cols.append(f"{g.ops[st.ops[r]].name}@{st.pus[r]}"
@@ -85,13 +82,27 @@ for st in sched.steps[:6]:
     print("  " + " || ".join(f"{c:16s}" for c in cols)
           + f" ({st.cost*1e6:7.1f} us)")
 
-# really execute the M-model schedule across the shared PU lanes and
-# verify every model's outputs against isolated execution
-ex = ScheduleExecutor(list(EDGE_PUS))
-graphs = [g for g, _ in models]
+# really execute the M-model plan across the shared PU lanes and verify
+# every model's outputs against isolated execution
 inputs = [{0: (x,)} for _, x in models]
-conc = ex.run_concurrent(graphs, sched, inputs)
+conc = orch.execute(plan, inputs)
+graphs = [g for g, _ in models]
 for g, x, got in zip(graphs, inputs, conc):
-    mono = ex.run_monolithic(g, x)
+    mono = orch.executor.run_monolithic(g, x)
     assert ScheduleExecutor.outputs_close(mono, got)
 print(f"\nall {len(models)} models' orchestrated outputs == isolated: OK")
+
+# -- the serving scenario: a request arrives mid-flight -------------------
+hA, hB, hC = handles
+orch.admit(hA)
+orch.admit(hB)
+orch.advance(hA, 5)           # A is 5 ops in when C arrives
+orch.advance(hB, 3)
+online = orch.admit(hC)
+rem = [len(r) for r in online.route]
+print(f"\nonline admission: C arrives with A at op 5/8, B at op 3/8 -> "
+      f"re-planned over remaining ops {rem} "
+      f"({1e3*online.latency:.2f} ms, mode {online.schedule.mode})")
+done = orch.retire(hA)
+print(f"A retires -> re-planned set {done.handles}, "
+      f"{1e3*done.latency:.2f} ms")

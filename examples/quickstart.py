@@ -1,20 +1,28 @@
-"""Quickstart: BIDENT end-to-end in ~60 lines.
+"""Quickstart: BIDENT's register → plan → execute flow in ~60 lines.
+
+The ``Orchestrator`` is the front door: hand it a cost provider once,
+``register`` each inference graph (profiled + densified once, behind a
+handle), ``plan`` whatever regime you need — the router picks the
+sequential DP for chains, the phase/branch parallel solve when ``Branch``
+nodes are present, the M-ary concurrent search for multiple handles — and
+``execute`` the returned ``Plan`` on the multi-lane executor.  Repeated
+``plan`` calls are served from the plan cache; the ``solve_*`` free
+functions remain the low-level layer underneath.
 
 1. Build a small model as a fused-operator graph (with real JAX payloads).
-2. Profile it on the edge-SoC cost model (CPU / GPU / NPU).
-3. Solve the three regimes: sequential, intra-model parallel, concurrent.
-4. Execute the sequential schedule on the multi-lane orchestrator and
-   verify the outputs match monolithic execution exactly.
+2. ``register`` it (profile on the edge-SoC cost model: CPU / GPU / NPU).
+3. ``plan`` the three regimes: sequential, intra-model parallel,
+   two concurrent requests.
+4. ``execute`` the sequential plan and verify the outputs match
+   monolithic execution exactly.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import (EDGE_PUS, AnalyticProfiler, ContentionModel,
-                        FusedOp, OpGraph, ScheduleExecutor,
-                        solve_concurrent_joint, solve_parallel,
-                        solve_sequential)
+from repro.core import (AnalyticProfiler, FusedOp, OpGraph, Orchestrator,
+                        ScheduleExecutor)
 
 # -- 1. a tiny two-branch model: shared proj -> (conv path || scan path) --
 key = jax.random.PRNGKey(0)
@@ -36,32 +44,33 @@ ops = [
 ]
 graph = OpGraph(ops, edges=[(0, 1), (0, 2), (1, 3), (2, 3)])
 
-# -- 2. profile -> (op, PU) cost table ------------------------------------
-table = AnalyticProfiler().profile(graph)
+# -- 2. register: profile -> (op, PU) cost table -> dense Workload, once --
+orch = Orchestrator(AnalyticProfiler())
+h = orch.register(graph)
+table = orch.workload(h).table
 print("supported PUs per op:",
       {op.name: table.supported_pus(i) for i, op in enumerate(graph.ops)})
 
 # -- 3a. sequential shortest-path mapping ---------------------------------
-seq = solve_sequential(graph.topo_order(), graph.ops, table, EDGE_PUS)
-print("sequential:", list(zip([graph.ops[i].name for i in seq.chain],
-                              seq.assignment)),
+seq = orch.plan(h, mode="sequential")
+print("sequential:", [(graph.ops[o].name, p) for o, p in seq.route[0]],
       f"latency {seq.latency*1e6:.1f} us")
 
-# -- 3b. intra-model parallel (branches co-execute) -----------------------
-par = solve_parallel(graph, table, EDGE_PUS, ContentionModel())
+# -- 3b. intra-model parallel (auto-routed: the graph has Branch nodes) ---
+par = orch.plan(h)
 print(f"parallel: {par.latency*1e6:.1f} us "
-      f"({par.n_concurrent_phases} concurrent phase(s))")
+      f"({par.schedule.n_concurrent_phases} concurrent phase(s))")
 
 # -- 3c. two concurrent requests of this model ----------------------------
-conc = solve_concurrent_joint(graph.topo_order(), table,
-                              graph.topo_order(), table, EDGE_PUS)
+conc = orch.plan((h, h))
 print(f"concurrent 2x: {conc.latency*1e6:.1f} us "
       f"(vs serial 2x sequential = {2*seq.latency*1e6:.1f} us)")
+assert orch.plan((h, h)) is conc, "second identical plan() is a cache hit"
 
-# -- 4. really run the schedule; outputs must match monolithic ------------
-ex = ScheduleExecutor(list(EDGE_PUS))
+# -- 4. really run the plan; outputs must match monolithic ----------------
 inputs = {0: (x,)}
-mono = ex.run_monolithic(graph, inputs)
-orch = ex.run_scheduled(graph, dict(zip(seq.chain, seq.assignment)), inputs)
-assert ScheduleExecutor.outputs_close(mono, orch), "orchestration changed numerics!"
+orch_out = orch.execute(seq, inputs)
+mono = orch.executor.run_monolithic(graph, inputs)
+assert ScheduleExecutor.outputs_close(mono, orch_out), \
+    "orchestration changed numerics!"
 print("orchestrated output == monolithic output: OK")

@@ -4,21 +4,29 @@ The paper's primary contribution, mode-agnostic over two cost providers:
 the EdgeSoC CPU/GPU/NPU models (faithful reproduction) and the TPU
 sharding-strategy roofline (``repro.core.autoshard``, the beyond-paper
 system).
+
+The documented front door is ``Orchestrator`` (register → plan →
+execute, with plan caching and online admission); the per-regime
+``solve_*`` free functions remain the stable low-level layer it routes
+to.
 """
 from .contention import (ContentionModel, DEFAULT_MM_SF, PairCostCache,
                          uses_default_coexec, uses_default_group)
 from .costmodel import (CPU, GPU, NPU, EDGE_PUS, DEFAULT_SF, CostEntry,
                         CostTable, DenseCostTable, EdgeSoCCostModel, PUSpec,
                         transition_cost)
+from .dynamic import DynamicScheduler, RuntimeCondition
 from .executor import ScheduleExecutor
 from .graph import (DenseChain, ExecGraph, build_dense_chain,
                     build_sequential_graph)
 from .op import Branch, FusedOp, OpGraph, Phase, chain_graph
+from .orchestrator import Orchestrator, Plan
 from .profiler import (AnalyticProfiler, MeasuredProfiler, measure_callable,
                        trace_fused_ops)
 from .schedule import (ConcurrentSchedule, ConcurrentStep, ParallelSchedule,
                        SeqSchedule, evaluate_sequential,
-                       evaluate_sequential_reference, single_pu_cost)
+                       evaluate_sequential_reference, schedule_from_dict,
+                       schedule_to_dict, single_pu_cost)
 from .search import (ConcurrentCaches, dijkstra, sequential_dp,
                      sequential_dp_reference,
                      solve_concurrent, solve_concurrent_aligned,
@@ -32,7 +40,8 @@ __all__ = [
     "ContentionModel", "DEFAULT_MM_SF", "PairCostCache",
     "uses_default_coexec", "uses_default_group", "CPU", "GPU", "NPU",
     "EDGE_PUS", "DEFAULT_SF", "CostEntry", "CostTable", "DenseCostTable",
-    "EdgeSoCCostModel", "PUSpec", "Workload",
+    "DynamicScheduler", "EdgeSoCCostModel", "Orchestrator", "PUSpec",
+    "Plan", "RuntimeCondition", "Workload",
     "transition_cost", "ScheduleExecutor", "DenseChain", "ExecGraph",
     "build_dense_chain", "build_sequential_graph", "Branch", "FusedOp",
     "OpGraph", "Phase",
@@ -40,6 +49,7 @@ __all__ = [
     "measure_callable", "trace_fused_ops", "ConcurrentSchedule",
     "ConcurrentStep", "ParallelSchedule", "SeqSchedule",
     "evaluate_sequential", "evaluate_sequential_reference",
+    "schedule_from_dict", "schedule_to_dict",
     "single_pu_cost", "dijkstra", "sequential_dp", "sequential_dp_reference",
     "ConcurrentCaches", "solve_concurrent", "solve_concurrent_aligned",
     "solve_concurrent_aligned_reference",

@@ -22,7 +22,7 @@ The paper's §6 Future Work, implemented:
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Sequence
+from typing import Iterable, Mapping, Sequence
 
 import numpy as np
 
@@ -54,6 +54,20 @@ class RuntimeCondition:
 
     def factor(self, pu: str) -> float:
         return float(self.slowdown.get(pu, 1.0))
+
+    def key(self, pus: Iterable[str]) -> tuple[tuple[str, float | None], ...]:
+        """Canonical per-PU scaling tuple over ``pus``: ``(name, factor)``
+        with ``None`` marking an unavailable PU.  Two conditions with
+        equal keys price every workload identically, which is what the
+        orchestrator keys its plan cache on (and diffs to decide which
+        PUs' cached plans to invalidate)."""
+        return tuple((p, None if p in self.unavailable else self.factor(p))
+                     for p in sorted(pus))
+
+    @property
+    def nominal(self) -> bool:
+        return not self.unavailable and all(
+            float(f) == 1.0 for f in self.slowdown.values())
 
 
 class InfeasibleScheduleError(ValueError):
@@ -106,10 +120,13 @@ class DynamicScheduler:
     """
 
     def __init__(self, chain: Sequence[int], ops: Sequence[FusedOp],
-                 table: CostTable, pus: Mapping[str, PUSpec],
+                 table: CostTable | None, pus: Mapping[str, PUSpec],
                  objective: str = "latency",
                  replan_threshold: float = 0.05,
                  workload: Workload | None = None):
+        if table is None and workload is None:
+            raise ValueError(
+                "DynamicScheduler needs a CostTable or a prebuilt Workload")
         self.chain = list(chain)
         self.ops = ops
         self.base_table = table

@@ -33,9 +33,25 @@ class ScheduleExecutor:
         """Reference: run everything on one lane in topological order."""
         return self._run(graph, external_inputs, lanes=1, assignment=None)
 
-    def run_scheduled(self, graph: OpGraph, assignment: Mapping[int, str],
+    def run_scheduled(self, graph: OpGraph, assignment,
                       external_inputs: Mapping[int, tuple] | None = None) -> dict[int, Any]:
-        """Run under the schedule: one worker lane per PU, event-synced."""
+        """Run under the schedule: one worker lane per PU, event-synced.
+
+        ``assignment`` is an ``{op index: PU name}`` mapping, or any
+        schedule object exposing one (``SeqSchedule`` — via its chain —
+        or ``ParallelSchedule.assignment``), so orchestrator plans can be
+        executed without hand-building the mapping.
+        """
+        if hasattr(assignment, "chain") and hasattr(assignment, "assignment"):
+            assignment = dict(zip(assignment.chain, assignment.assignment))
+        elif hasattr(assignment, "assignment"):
+            assignment = assignment.assignment
+        missing = [i for i in range(len(graph.ops)) if i not in assignment]
+        if missing:
+            raise ValueError(
+                f"assignment does not cover the graph: {len(missing)} op(s) "
+                f"unassigned (e.g. {missing[:5]}) — partial (tail/admission) "
+                "plans cannot be executed on the full graph")
         return self._run(graph, external_inputs, lanes=len(self.pus),
                          assignment=dict(assignment))
 

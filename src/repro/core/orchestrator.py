@@ -1,0 +1,489 @@
+"""``Orchestrator`` — the session-style front door of BIDENT.
+
+The solver library exposes one free function per regime with historically
+grown signatures (``solve_sequential(chain, ops, table, pus, ...)`` vs
+``solve_concurrent(workloads, cm)``); every example and benchmark had to
+hand-assemble ``Workload``s, pair caches, and executors.  The orchestrator
+wraps that into the register → plan → execute flow of a serving system:
+
+    orch = Orchestrator(EdgeSoCCostModel(), pus=EDGE_PUS)
+    h = orch.register(graph)              # profile + dense Workload, once
+    plan = orch.plan(h)                   # routed solve, cached
+    outputs = orch.execute(plan, inputs)  # multi-lane ScheduleExecutor
+
+* ``register`` profiles the graph through the configured cost provider
+  (or takes a prebuilt ``CostTable``) and memoizes the dense ``Workload``
+  — the single scalar-dict ingestion pass.  Malformed inputs fail here
+  with descriptive errors (empty graphs, unprofiled ops, unknown PUs).
+* ``plan`` routes by shape: one chain handle → the sequential DP; one
+  handle with ``Branch`` nodes (fork/join DAG) → the phase/branch
+  parallel solve; a tuple of handles → the M-ary concurrent search
+  (``mode="aligned"`` opts a pair into the lockstep solver).  Results
+  come back as a uniform :class:`Plan` and are **bitwise identical** to
+  the corresponding direct solver call — the free functions remain the
+  stable low-level layer underneath.
+* Plans are cached keyed by (workload signatures + progress, objective,
+  resolved mode, runtime-condition scaling); the objective-independent
+  solver state (``ConcurrentCaches`` holding ``PairCostCache``s / group
+  edges) is shared across calls on the same workload tuple, so a
+  latency + energy solve pair pays the 4-D pair-cost setup once and a
+  repeated ``plan`` call is a dict hit.
+* ``on_condition`` folds in a :class:`RuntimeCondition` (per-PU column
+  scalings on the dense views).  Cached plans priced under a now-stale
+  assumption about a changed PU are invalidated; handles admitted to the
+  active set re-plan through their :class:`DynamicScheduler` from their
+  current progress (hysteresis and plan stitching included).
+* ``admit`` / ``retire`` maintain the online serving set: each call
+  re-plans the concurrent schedule over every active request's
+  *remaining* ops (``Workload.tail`` views), which is how requests
+  arriving or completing mid-flight are absorbed.
+* ``execute`` drives the multi-lane :class:`ScheduleExecutor` for any
+  plan kind (sequential / parallel assignments, M-ary concurrent
+  multiplexing).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Mapping, Sequence
+
+from .contention import ContentionModel
+from .costmodel import CostTable, EDGE_PUS, PUSpec
+from .dynamic import DynamicScheduler, RuntimeCondition
+from .executor import ScheduleExecutor
+from .op import FusedOp, OpGraph, chain_graph
+from .schedule import (ConcurrentSchedule, ParallelSchedule, SeqSchedule,
+                       schedule_from_dict, schedule_to_dict)
+from .search import (ConcurrentCaches, _pair_cache, solve_concurrent,
+                     solve_concurrent_aligned, solve_parallel,
+                     solve_sequential)
+from .workload import Workload
+
+PLAN_MODES = ("auto", "sequential", "parallel", "concurrent", "aligned")
+
+
+@dataclasses.dataclass
+class Plan:
+    """Uniform result of ``Orchestrator.plan``: one schedule of any kind
+    plus the routing metadata needed to execute or serialize it."""
+
+    kind: str                 # "sequential" | "parallel" | "concurrent"
+    schedule: SeqSchedule | ParallelSchedule | ConcurrentSchedule
+    objective: str
+    handles: tuple[int, ...] = ()
+    mode: str = ""            # resolved plan mode (e.g. "aligned")
+
+    @property
+    def latency(self) -> float:
+        return self.schedule.latency
+
+    @property
+    def energy(self) -> float:
+        return self.schedule.energy
+
+    @property
+    def route(self) -> list[list[tuple[int, str]]]:
+        """Per-request ``[(op index, PU name), ...]`` in execution order —
+        the one assignment shape shared by all three schedule kinds.  For
+        parallel plans the order is phase-by-phase (phases are barriers),
+        each branch's chain listed whole (branches within a phase
+        co-execute, so any branch interleaving is valid)."""
+        s = self.schedule
+        if isinstance(s, SeqSchedule):
+            return [list(zip(s.chain, s.assignment))]
+        if isinstance(s, ParallelSchedule):
+            out: list[tuple[int, str]] = []
+            for ph in s.phases:
+                for br in ph.branches:
+                    out.extend(zip(br.branch_ops, br.assignment))
+            return [out]
+        return [s.assignment_of(r) for r in range(s.n_requests)]
+
+    def to_json(self) -> str:
+        return json.dumps({"kind": self.kind, "objective": self.objective,
+                           "handles": list(self.handles), "mode": self.mode,
+                           "schedule": schedule_to_dict(self.schedule)})
+
+    @classmethod
+    def from_json(cls, s: str) -> "Plan":
+        d = json.loads(s)
+        return cls(kind=d["kind"], schedule=schedule_from_dict(d["schedule"]),
+                   objective=d["objective"], handles=tuple(d["handles"]),
+                   mode=d.get("mode", ""))
+
+
+@dataclasses.dataclass
+class _Registration:
+    handle: int
+    graph: OpGraph
+    chain: list[int]
+    table: CostTable
+    wl: Workload
+    sig: str          # Workload content signature (chain + dense arrays)
+    struct_sig: str   # graph edge-structure hash (phases/branches)
+    # the exact object the caller registered (an OpGraph or a bare op
+    # sequence) — kept alive so the id()-keyed memo can never collide
+    # with a recycled address of a freed object
+    source: Any = None
+
+
+class Orchestrator:
+    """Session front door: register inference graphs once, plan under any
+    objective/regime with caching, react to runtime conditions, and
+    execute plans on the multi-lane executor.
+
+    ``cost`` is the cost provider: an ``EdgeSoCCostModel``-like object
+    (``build_table(graph)``), a profiler (``profile(graph)``), or a
+    prebuilt ``CostTable`` applied to every registered graph (op indices
+    must then match that table).
+    """
+
+    def __init__(self, cost, pus: Mapping[str, PUSpec] = EDGE_PUS,
+                 contention: ContentionModel | None = None,
+                 max_cached_plans: int = 256, max_cache_pools: int = 32):
+        if not (isinstance(cost, CostTable) or hasattr(cost, "build_table")
+                or hasattr(cost, "profile")):
+            raise TypeError(
+                "cost must be a CostTable, a cost model with "
+                "build_table(graph), or a profiler with profile(graph); "
+                f"got {type(cost).__name__}")
+        self.cost = cost
+        self.pus = dict(pus)
+        self.contention = contention or ContentionModel()
+        self.executor = ScheduleExecutor(list(self.pus))
+        self.condition = RuntimeCondition()
+        self.stats = {"hits": 0, "misses": 0, "invalidated": 0}
+        self._max_plans = max_cached_plans
+        self._max_pools = max_cache_pools
+        self._regs: dict[int, _Registration] = {}
+        self._by_graph: dict[int, int] = {}          # id(graph) -> handle
+        self._plans: dict[tuple, Plan] = {}          # insertion-ordered LRU
+        self._pools: dict[tuple, ConcurrentCaches] = {}
+        self._cond_views: dict[tuple[int, tuple], Workload] = {}
+        self._active: dict[int, int] = {}            # handle -> ops done
+        self._dyn: dict[tuple[int, str], DynamicScheduler] = {}
+
+    # -- register -----------------------------------------------------------
+    def register(self, graph: OpGraph | Sequence[FusedOp],
+                 table: CostTable | None = None) -> int:
+        """Profile ``graph`` (unless ``table`` is given) and build its
+        dense ``Workload`` once; returns a handle for ``plan``/``admit``.
+
+        Re-registering the same graph (or op-sequence) object without an
+        explicit ``table`` returns the existing provider-profiled handle
+        without re-profiling; explicitly-tabled registrations always get
+        a fresh handle and never shadow the provider-profiled one.  A
+        bare sequence of ``FusedOp``s is wrapped into a chain graph.
+        """
+        source = graph             # the object the caller handed us,
+        memo_key = id(source)      # pre-wrapping
+        explicit_table = table is not None
+        if not explicit_table and memo_key in self._by_graph:
+            return self._by_graph[memo_key]
+        if not isinstance(graph, OpGraph):
+            graph = chain_graph(list(graph))
+        if not len(graph.ops):
+            raise ValueError("register: the graph has no ops")
+        if table is None:
+            if isinstance(self.cost, CostTable):
+                table = self.cost
+            elif hasattr(self.cost, "build_table"):
+                table = self.cost.build_table(graph)
+            else:
+                table = self.cost.profile(graph)
+        chain = graph.topo_order()
+        wl = Workload.build(chain, table, self.pus, ops=graph.ops)
+        h = len(self._regs)
+        struct_sig = hashlib.blake2b(repr(sorted(graph.edges)).encode(),
+                                     digest_size=8).hexdigest()
+        self._regs[h] = _Registration(handle=h, graph=graph, chain=chain,
+                                      table=table, wl=wl,
+                                      sig=wl.signature(),
+                                      struct_sig=struct_sig, source=source)
+        if not explicit_table:
+            self._by_graph[memo_key] = h
+        return h
+
+    def workload(self, h: int) -> Workload:
+        """The memoized dense Workload of a registered handle (nominal
+        profile; conditions are applied per-plan, not destructively)."""
+        return self._reg(h).wl
+
+    def _reg(self, h: int) -> _Registration:
+        try:
+            return self._regs[h]
+        except KeyError:
+            raise KeyError(
+                f"unknown handle {h!r}; register(graph) first "
+                f"(valid handles: {sorted(self._regs)})") from None
+
+    # -- runtime condition ---------------------------------------------------
+    def _cond_key(self, cond: RuntimeCondition | None = None) -> tuple:
+        return (cond if cond is not None else self.condition).key(self.pus)
+
+    def _wl(self, reg: _Registration) -> Workload:
+        """Registration workload under the active condition (memoized
+        derived view; the nominal workload itself when no condition)."""
+        if self.condition.nominal:
+            return reg.wl
+        key = (reg.handle, self._cond_key())
+        wl = self._cond_views.get(key)
+        if wl is None:
+            wl = reg.wl.under_condition(self.condition.slowdown,
+                                        self.condition.unavailable)
+            self._cond_views[key] = wl
+            while len(self._cond_views) > self._max_pools:
+                self._cond_views.pop(next(iter(self._cond_views)))
+        else:
+            self._cond_views[key] = self._cond_views.pop(key)  # LRU refresh
+        return wl
+
+    def on_condition(self, cond: RuntimeCondition
+                     ) -> dict[tuple[int, str], Plan]:
+        """Fold a runtime condition into the session.
+
+        Cached plans and solver pools are invalidated *per changed PU*:
+        any entry priced under an assumption about a changed PU that
+        disagrees with the new condition is dropped, because it no longer
+        describes the hardware (keys fully encode the condition, so this
+        is staleness hygiene, not hit-correctness — a condition change
+        deliberately costs a cold solve for the affected plans; entries
+        that already agree with the new factors on every changed PU
+        survive).  Active chain handles re-plan through their
+        ``DynamicScheduler`` trackers from current progress — hysteresis
+        and prefix/tail stitching apply — and the re-stitched sequential
+        plans are returned keyed by ``(handle, objective)``, one entry
+        per tracker (a latency-objective tracker is created for active
+        chain handles that have none).
+
+        PU names the session doesn't know are rejected loudly — a typo'd
+        ``slowdown`` key would otherwise silently leave the real PU
+        unthrottled in every re-plan.
+        """
+        unknown = sorted(p for p in set(cond.slowdown) | set(cond.unavailable)
+                         if p not in self.pus)
+        if unknown:
+            raise ValueError(
+                f"on_condition: unknown PU name(s) {unknown}; this "
+                f"session's PUs are {sorted(self.pus)}")
+        old, new = self._cond_key(), self._cond_key(cond)
+        changed = {p for (p, f0), (_, f1) in zip(old, new) if f0 != f1}
+        if changed:
+            new_f = dict(new)
+            for cache in (self._plans, self._pools, self._cond_views):
+                for key in list(cache):
+                    entry_cond = key[-1]
+                    if any(p in changed and f != new_f[p]
+                           for p, f in entry_cond):
+                        del cache[key]
+                        if cache is self._plans:
+                            self.stats["invalidated"] += 1
+        self.condition = cond
+        out: dict[tuple[int, str], Plan] = {}
+        for h, progress in self._active.items():
+            reg = self._regs[h]
+            if not reg.graph.is_chain():
+                continue
+            if not any(dh == h for dh, _ in self._dyn):
+                self.dynamic(h)        # default latency-objective tracker
+            for (dh, objective), dyn in list(self._dyn.items()):
+                if dh != h:
+                    continue
+                sched = dyn.on_condition(progress, cond)
+                out[(h, objective)] = Plan(kind="sequential", schedule=sched,
+                                           objective=objective, handles=(h,),
+                                           mode="sequential")
+        return out
+
+    def dynamic(self, h: int, objective: str = "latency",
+                replan_threshold: float = 0.05) -> DynamicScheduler:
+        """The handle's ``DynamicScheduler`` (created lazily, sharing the
+        memoized workload); ``on_condition`` re-plans through it."""
+        reg = self._reg(h)
+        if not reg.graph.is_chain():
+            raise ValueError(
+                f"handle {h}: dynamic re-planning needs a chain graph "
+                "(the DAG regimes re-plan via plan() under a condition)")
+        key = (h, objective)
+        dyn = self._dyn.get(key)
+        if dyn is None:
+            dyn = DynamicScheduler(reg.chain, reg.graph.ops, reg.table,
+                                   self.pus, objective,
+                                   replan_threshold=replan_threshold,
+                                   workload=reg.wl)
+            self._dyn[key] = dyn
+        return dyn
+
+    # -- plan ---------------------------------------------------------------
+    def plan(self, handles: int | Sequence[int], objective: str = "latency",
+             mode: str = "auto") -> Plan:
+        """Solve (or serve from cache) a schedule for one or more handles.
+
+        ``mode="auto"`` routes a single chain handle to the sequential
+        DP, a single fork/join handle (``Branch`` nodes present) to the
+        phase/branch parallel solve, and multiple handles to the M-ary
+        concurrent search; ``"aligned"`` forces the lockstep pair solver
+        for exactly two handles.  Results are bitwise identical to the
+        corresponding direct solver call on the same workloads.
+        """
+        hs = (handles,) if isinstance(handles, int) else tuple(handles)
+        if not hs:
+            raise ValueError("plan: no handles given")
+        regs = [self._reg(h) for h in hs]
+        if mode not in PLAN_MODES:
+            raise ValueError(f"unknown mode {mode!r}; one of {PLAN_MODES}")
+        if mode == "auto":
+            if len(hs) > 1:
+                mode = "concurrent"
+            else:
+                mode = ("sequential" if regs[0].graph.is_chain()
+                        else "parallel")
+        if mode in ("sequential", "parallel") and len(hs) != 1:
+            raise ValueError(
+                f"mode={mode!r} plans one handle, got {len(hs)}")
+        if mode == "aligned" and len(hs) != 2:
+            raise ValueError(
+                f"mode='aligned' is the lockstep pair solver, got "
+                f"{len(hs)} handle(s)")
+        return self._plan_cached(
+            [(reg, 0) for reg in regs], hs, objective, mode)
+
+    def _plan_cached(self, regs_progress: list[tuple[_Registration, int]],
+                     hs: tuple[int, ...], objective: str, mode: str) -> Plan:
+        # the sequential/concurrent solvers consume only the chain + dense
+        # cost views (covered by the workload signature); the parallel
+        # solve additionally consumes the graph's edge structure
+        # (phases/branches), so its key must include the structure hash
+        if mode == "parallel":
+            wl_key = tuple((reg.sig, reg.struct_sig, prog)
+                           for reg, prog in regs_progress)
+        else:
+            wl_key = tuple((reg.sig, prog) for reg, prog in regs_progress)
+        key = (wl_key, objective, mode, self._cond_key())
+        plan = self._plans.get(key)
+        if plan is not None:
+            self.stats["hits"] += 1
+            self._plans[key] = self._plans.pop(key)   # LRU refresh
+            if plan.handles != hs:
+                # equal signatures make the *schedule* shareable, but the
+                # handles must be the caller's — execute() resolves graphs
+                # (and their op payloads) through them
+                plan = dataclasses.replace(plan, handles=hs)
+            return plan
+        self.stats["misses"] += 1
+        plan = self._solve(regs_progress, hs, objective, mode)
+        self._plans[key] = plan
+        while len(self._plans) > self._max_plans:
+            self._plans.pop(next(iter(self._plans)))
+        return plan
+
+    def _pool(self, wl_key: tuple) -> ConcurrentCaches:
+        """Objective-independent solver state (pair-cost matrices, group
+        edges) shared across every solve on the same workload tuple
+        under the same condition."""
+        key = (wl_key, self._cond_key())
+        pool = self._pools.get(key)
+        if pool is None:
+            pool = ConcurrentCaches()
+            self._pools[key] = pool
+            while len(self._pools) > self._max_pools:
+                self._pools.pop(next(iter(self._pools)))
+        else:
+            self._pools[key] = self._pools.pop(key)   # LRU refresh
+        return pool
+
+    def _solve(self, regs_progress: list[tuple[_Registration, int]],
+               hs: tuple[int, ...], objective: str, mode: str) -> Plan:
+        nominal = self.condition.nominal
+        wls = []
+        for reg, prog in regs_progress:
+            wl = self._wl(reg)
+            wls.append(wl if prog == 0 else wl.tail(prog))
+        if mode == "sequential":
+            reg, wl = regs_progress[0][0], wls[0]
+            sched = solve_sequential(
+                wl.chain, reg.graph.ops, reg.table if nominal else None,
+                self.pus, objective, workload=wl)
+            return Plan("sequential", sched, objective, hs, mode)
+        if mode == "parallel":
+            reg, wl = regs_progress[0][0], wls[0]
+            sched = solve_parallel(
+                reg.graph, reg.table if nominal else None, self.pus,
+                self.contention, objective, workload=wl)
+            return Plan("parallel", sched, objective, hs, mode)
+        wl_key = tuple((reg.sig, prog) for reg, prog in regs_progress)
+        pool = self._pool(wl_key)
+        if mode == "aligned":
+            w0, w1 = wls
+            cache = _pair_cache(pool, self.contention, wls, 0, 1)
+            sched = solve_concurrent_aligned(
+                w0.chain, w0.table, w1.chain, w1.table, self.pus,
+                self.contention, objective, dense0=w0.dense,
+                dense1=w1.dense, cache=cache)
+            return Plan("concurrent", sched, objective, hs, mode)
+        sched = solve_concurrent(wls, self.contention, objective,
+                                 caches=pool)
+        return Plan("concurrent", sched, objective, hs, mode)
+
+    # -- online admission (the serving scenario) ----------------------------
+    def admit(self, h: int, objective: str = "latency") -> Plan | None:
+        """Admit a registered request into the active concurrent set and
+        re-plan the set from every member's current progress — the
+        request-arriving-mid-flight case.  ``None`` when no active
+        request has remaining ops (everything already fully advanced)."""
+        self._reg(h)
+        self._active.setdefault(h, 0)
+        return self._replan_active(objective)
+
+    def retire(self, h: int, objective: str = "latency") -> Plan | None:
+        """Remove a request from the active set (completed or cancelled)
+        and re-plan the remainder; ``None`` when the set empties or no
+        remaining member has ops left to schedule."""
+        if h not in self._active:
+            raise KeyError(f"handle {h} is not in the active set "
+                           f"({sorted(self._active)})")
+        del self._active[h]
+        return self._replan_active(objective) if self._active else None
+
+    def advance(self, h: int, n_ops: int = 1) -> int:
+        """Record execution progress (completed op count) for an active
+        request; the next re-plan covers only the remaining tail."""
+        if h not in self._active:
+            raise KeyError(f"handle {h} is not in the active set")
+        if n_ops < 0:
+            raise ValueError(f"advance: n_ops must be >= 0, got {n_ops}")
+        reg = self._regs[h]
+        self._active[h] = min(self._active[h] + n_ops, reg.wl.n)
+        return self._active[h]
+
+    def _replan_active(self, objective: str) -> Plan | None:
+        items = [(h, p) for h, p in sorted(self._active.items())
+                 if p < self._regs[h].wl.n]
+        if not items:
+            return None
+        regs_progress = [(self._regs[h], p) for h, p in items]
+        return self._plan_cached(regs_progress, tuple(h for h, _ in items),
+                                 objective, "concurrent")
+
+    # -- execute ------------------------------------------------------------
+    def execute(self, plan: Plan, inputs=None) -> Any:
+        """Run a plan on the multi-lane executor.
+
+        Sequential/parallel plans take one ``{op: (args...)}`` mapping
+        and return that graph's results dict; concurrent plans take a
+        sequence of such mappings (one per request, in handle order) and
+        return a list of results dicts.  Partial plans (admission tails)
+        cannot be executed — re-plan from progress 0 first.
+        """
+        if not plan.handles:
+            raise ValueError("plan carries no handles; was it built by "
+                             "this orchestrator (or restored from JSON "
+                             "with handles intact)?")
+        regs = [self._reg(h) for h in plan.handles]
+        if plan.kind in ("sequential", "parallel"):
+            return self.executor.run_scheduled(regs[0].graph, plan.schedule,
+                                               inputs)
+        graphs = [reg.graph for reg in regs]
+        return self.executor.run_concurrent(graphs, plan.schedule,
+                                            inputs)

@@ -9,6 +9,11 @@ schedule can be compared against the energy-optimised one (paper Fig. 6).
 Evaluation runs on the dense ``Workload`` layer (one gather over the
 ``(N, K)`` arrays); the scalar dict walk is retained as
 ``evaluate_sequential_reference`` for the equivalence suite.
+
+``schedule_to_dict`` / ``schedule_from_dict`` give every schedule kind a
+lossless JSON-able form (floats survive ``json`` round-trips bitwise via
+``repr`` shortest-round-trip printing) — the serialization layer behind
+``orchestrator.Plan.to_json``/``from_json``.
 """
 from __future__ import annotations
 
@@ -175,3 +180,76 @@ def single_pu_cost(
     wl = workload if workload is not None else Workload.build(
         chain, table, pus, ops=ops)
     return wl.single_pu(pu)
+
+
+# ---------------------------------------------------------------------------
+# Lossless (de)serialization of every schedule kind
+# ---------------------------------------------------------------------------
+
+
+AnySchedule = SeqSchedule | ParallelSchedule | ConcurrentSchedule
+
+
+def schedule_to_dict(s: AnySchedule) -> dict:
+    """JSON-able dict of any schedule kind, tagged with ``"type"``.
+
+    The inverse ``schedule_from_dict`` reconstructs an ``==``-equal
+    schedule: every float survives a JSON round-trip bitwise and every
+    tuple/list shape is restored exactly.
+    """
+    if isinstance(s, SeqSchedule):
+        return {"type": "sequential", "chain": list(s.chain),
+                "assignment": list(s.assignment), "latency": s.latency,
+                "energy": s.energy, "objective": s.objective}
+    if isinstance(s, ParallelSchedule):
+        return {
+            "type": "parallel", "latency": s.latency, "energy": s.energy,
+            "objective": s.objective,
+            "phases": [{
+                "index": ph.index, "parallel": ph.parallel,
+                "makespan": ph.makespan, "energy": ph.energy,
+                "branches": [{
+                    "branch_ops": list(b.branch_ops),
+                    "assignment": list(b.assignment),
+                    "solo_latency": b.solo_latency,
+                    "adj_latency": b.adj_latency, "energy": b.energy,
+                } for b in ph.branches],
+            } for ph in s.phases],
+        }
+    if isinstance(s, ConcurrentSchedule):
+        return {"type": "concurrent", "latency": s.latency,
+                "energy": s.energy, "objective": s.objective, "mode": s.mode,
+                "steps": [{"ops": list(st.ops), "pus": list(st.pus),
+                           "cost": st.cost} for st in s.steps]}
+    raise TypeError(f"not a schedule: {type(s).__name__}")
+
+
+def schedule_from_dict(d: Mapping) -> AnySchedule:
+    """Rebuild the schedule serialized by :func:`schedule_to_dict`."""
+    kind = d.get("type")
+    if kind == "sequential":
+        return SeqSchedule(chain=list(d["chain"]),
+                           assignment=list(d["assignment"]),
+                           latency=d["latency"], energy=d["energy"],
+                           objective=d["objective"])
+    if kind == "parallel":
+        return ParallelSchedule(
+            phases=[PhaseSchedule(
+                index=ph["index"], parallel=ph["parallel"],
+                makespan=ph["makespan"], energy=ph["energy"],
+                branches=[BranchSchedule(
+                    branch_ops=list(b["branch_ops"]),
+                    assignment=list(b["assignment"]),
+                    solo_latency=b["solo_latency"],
+                    adj_latency=b["adj_latency"], energy=b["energy"],
+                ) for b in ph["branches"]],
+            ) for ph in d["phases"]],
+            latency=d["latency"], energy=d["energy"],
+            objective=d["objective"])
+    if kind == "concurrent":
+        return ConcurrentSchedule(
+            steps=[ConcurrentStep(ops=tuple(st["ops"]), pus=tuple(st["pus"]),
+                                  cost=st["cost"]) for st in d["steps"]],
+            latency=d["latency"], energy=d["energy"],
+            objective=d["objective"], mode=d["mode"])
+    raise ValueError(f"unknown schedule type {kind!r}")

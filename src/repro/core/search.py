@@ -391,6 +391,20 @@ def _solo_w(table: CostTable, oi: int, pu: str) -> float:
     return table.require(oi, pu).w
 
 
+def _require_pair_tables(table0: CostTable | None, table1: CostTable | None,
+                         cm: ContentionModel) -> None:
+    """The scalar reference routes walk the dict tables; derived dense
+    views (``Workload.tail``/``under_condition``/...) carry none, so fail
+    with a descriptive error instead of an ``AttributeError`` mid-walk."""
+    if table0 is None or table1 is None:
+        raise ValueError(
+            "this solve routes to the scalar reference solver (custom "
+            f"contention laws on {type(cm).__name__}, or an explicit "
+            "reference algorithm), which walks the scalar CostTables — "
+            "but at least one chain has none (a derived dense view); "
+            "solve from Workload.build(...) of an adjusted table instead")
+
+
 def _solo_edges(d: DenseCostTable, objective: str
                 ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
     """Per-position solo-advance edges: (key, chosen PU idx, w, energy)."""
@@ -463,6 +477,7 @@ def solve_concurrent_aligned(
     """
     contention = contention or ContentionModel()
     if not uses_default_coexec(contention):
+        _require_pair_tables(table0, table1, contention)
         return solve_concurrent_aligned_reference(
             chain0, table0, chain1, table1, pus, contention, objective)
     if cache is not None:
@@ -596,6 +611,7 @@ def solve_concurrent_joint(
     if algorithm == "auto":
         algorithm = "astar" if uses_default_coexec(contention) else "dijkstra"
     if algorithm == "dijkstra":
+        _require_pair_tables(table0, table1, contention)
         return solve_concurrent_joint_reference(
             chain0, table0, chain1, table1, pus, contention, objective)
     if algorithm != "astar":

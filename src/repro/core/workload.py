@@ -32,6 +32,7 @@ not re-ingest), so building per-branch or per-tail workloads inside
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Iterable, Mapping, Sequence
 
 import numpy as np
@@ -60,6 +61,7 @@ class Workload:
         # power in energy mode (same rule as graph.build_sequential_graph).
         self.power_memory = np.array(
             [pus[p].power_memory for p in self.pu_names])
+        self._signature: str | None = None
 
     # -- construction -------------------------------------------------------
     @classmethod
@@ -67,9 +69,59 @@ class Workload:
               pus: Mapping[str, PUSpec], ops: Sequence | None = None
               ) -> "Workload":
         """Ingest a scalar ``CostTable`` into a dense Workload (the single
-        sanctioned dict pass)."""
+        sanctioned dict pass).
+
+        Malformed inputs raise descriptive ``ValueError``s here, at the
+        front door, instead of surfacing as bare ``KeyError``/``IndexError``
+        deep inside the dense views: empty chains, chain ops with no cost
+        entry on any PU (unprofiled), and cost-table PU names the
+        ``PUSpec`` mapping doesn't know.
+        """
+        chain = list(chain)
+        if not chain:
+            raise ValueError(
+                "Workload.build: empty op chain — nothing to schedule")
+        if table is None:
+            raise ValueError(
+                "Workload.build: no CostTable (table=None); profile the "
+                "graph first, or pass a prebuilt workload to the solver")
+        unknown = [p for p in table.pus if p not in pus]
+        if unknown:
+            raise ValueError(
+                f"Workload.build: cost table uses unknown PU name(s) "
+                f"{unknown}; the PUSpec mapping only defines "
+                f"{sorted(pus)}")
+        missing = [oi for oi in dict.fromkeys(chain)
+                   if not table.supported_pus(oi)]
+        if missing:
+            def _nm(oi: int) -> str:
+                if ops is not None and 0 <= oi < len(ops):
+                    return f"op {oi} ({ops[oi].name})"
+                return f"op {oi}"
+            shown = ", ".join(_nm(oi) for oi in missing[:5])
+            more = f" (+{len(missing) - 5} more)" if len(missing) > 5 else ""
+            raise ValueError(
+                f"Workload.build: {len(missing)} chain op(s) missing from "
+                f"the cost table on every PU: {shown}{more} — were they "
+                "profiled?")
         dense = DenseCostTable.from_chain(chain, table, pus)
         return cls(chain, dense, pus, ops=ops, table=table)
+
+    def signature(self) -> str:
+        """Content hash of the dense views (chain, PU set, all cost
+        arrays).  Two workloads with equal signatures are interchangeable
+        for every dense solver — the orchestrator keys its plan cache on
+        this, so an identically-profiled graph reuses cached *schedules*
+        (the orchestrator re-binds the plan's handles to the caller's,
+        since op payloads may differ behind equal cost tables)."""
+        if self._signature is None:
+            h = hashlib.blake2b(digest_size=16)
+            d = self.dense
+            h.update(repr((tuple(self.chain), tuple(d.pus))).encode())
+            for a in (d.mask, d.w, d.power, d.h2d, d.d2h, d.dispatch, d.acc):
+                h.update(np.ascontiguousarray(a).tobytes())
+            self._signature = h.hexdigest()
+        return self._signature
 
     # -- basic queries -------------------------------------------------------
     @property
@@ -109,6 +161,7 @@ class Workload:
         wl.pu_names = dense.pus
         wl._col = self._col
         wl.power_memory = self.power_memory
+        wl._signature = None
         return wl
 
     def tail(self, pos: int) -> "Workload":

@@ -1,0 +1,500 @@
+"""The ``Orchestrator`` front door must be a zero-cost veneer: plans
+bitwise-identical to the direct solver calls, cache hits bitwise-identical
+to cold solves (including after condition-driven invalidation), lossless
+JSON round-trips for every schedule kind, and descriptive front-door
+errors instead of deep KeyError/IndexError."""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (ContentionModel, CostEntry, CostTable, EDGE_PUS,
+                        EdgeSoCCostModel, FusedOp, OpGraph, Orchestrator,
+                        Plan, RuntimeCondition, ScheduleExecutor, Workload,
+                        solve_concurrent, solve_concurrent_aligned,
+                        solve_parallel, solve_sequential)
+from repro.core.costmodel import make_cumsum, make_matmul
+from repro.core.dynamic import DynamicScheduler
+
+
+def _chain_graph(n=10, seed=0):
+    ops = [make_matmul(256, name=f"mm{i}") if (i + seed) % 2 == 0
+           else make_cumsum(2048, 64) for i in range(n)]
+    return OpGraph(ops)
+
+
+def _branch_graph():
+    ops = [make_matmul(256, name="proj"), make_matmul(256, name="gemm"),
+           make_cumsum(2048, 64), FusedOp(name="join", kind="add",
+                                          in_shapes=((1, 64, 2048),),
+                                          out_shape=(1, 64, 2048))]
+    return OpGraph(ops, edges=[(0, 1), (0, 2), (1, 3), (2, 3)])
+
+
+@pytest.fixture(scope="module")
+def model():
+    return EdgeSoCCostModel()
+
+
+# ---------------------------------------------------------------------------
+# bitwise equivalence with the direct solver calls
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_plan_sequential_equals_direct_solve(model, objective):
+    g = _chain_graph()
+    orch = Orchestrator(model)
+    h = orch.register(g)
+    plan = orch.plan(h, objective=objective)
+    table = model.build_table(g)
+    direct = solve_sequential(g.topo_order(), g.ops, table, EDGE_PUS,
+                              objective)
+    assert plan.kind == "sequential"
+    assert plan.schedule == direct          # dataclass ==: bitwise floats
+
+
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_plan_parallel_equals_direct_solve(model, objective):
+    g = _branch_graph()
+    orch = Orchestrator(model)
+    h = orch.register(g)
+    plan = orch.plan(h, objective=objective)   # auto-detected from Branch
+    table = model.build_table(g)
+    direct = solve_parallel(g, table, EDGE_PUS, orch.contention, objective)
+    assert plan.kind == "parallel"
+    assert plan.schedule == direct
+
+
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+@pytest.mark.parametrize("m", [2, 3])
+def test_plan_concurrent_equals_direct_solve(model, objective, m):
+    graphs = [_chain_graph(8, seed=r) for r in range(m)]
+    orch = Orchestrator(model)
+    hs = [orch.register(g) for g in graphs]
+    plan = orch.plan(hs, objective=objective)
+    wls = [Workload.build(g.topo_order(), model.build_table(g), EDGE_PUS,
+                          ops=g.ops) for g in graphs]
+    direct = solve_concurrent(wls, orch.contention, objective)
+    assert plan.kind == "concurrent"
+    assert plan.schedule == direct
+
+
+def test_plan_aligned_equals_direct_solve(model):
+    g = _chain_graph()
+    orch = Orchestrator(model)
+    h = orch.register(g)
+    plan = orch.plan((h, h), mode="aligned")
+    table = model.build_table(g)
+    chain = g.topo_order()
+    direct = solve_concurrent_aligned(chain, table, chain, table, EDGE_PUS,
+                                      orch.contention)
+    assert plan.schedule == direct
+    assert plan.schedule.mode == "aligned"
+
+
+# ---------------------------------------------------------------------------
+# plan caching
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_is_bitwise_equal_and_counted(model):
+    g = _chain_graph()
+    orch = Orchestrator(model)
+    h = orch.register(g)
+    cold = orch.plan(h)
+    assert orch.stats == {"hits": 0, "misses": 1, "invalidated": 0}
+    hit = orch.plan(h)
+    assert hit is cold                       # served from cache
+    assert orch.stats["hits"] == 1
+    # a fresh session's cold solve is bitwise-equal to the cached plan
+    orch2 = Orchestrator(model)
+    cold2 = orch2.plan(orch2.register(g))
+    assert cold2.to_json() == hit.to_json()
+
+
+def test_cache_key_distinguishes_objective_and_mode(model):
+    g = _chain_graph()
+    orch = Orchestrator(model)
+    h = orch.register(g)
+    p_lat = orch.plan(h)
+    p_eng = orch.plan(h, objective="energy")
+    assert p_lat is not p_eng
+    assert orch.stats["misses"] == 2
+    # same handle pair, aligned vs joint: separate entries
+    a = orch.plan((h, h), mode="aligned")
+    j = orch.plan((h, h))
+    assert a is not j and orch.stats["misses"] == 4
+
+
+def test_shared_signature_shares_cache_across_handles(model):
+    g = _chain_graph()
+    orch = Orchestrator(model)
+    h1 = orch.register(g)
+    # a distinct graph object with identical ops profiles identically
+    g2 = OpGraph(list(g.ops))
+    h2 = orch.register(g2)
+    assert h1 != h2
+    p1 = orch.plan(h1)
+    p2 = orch.plan(h2)
+    # the schedule is shared (keyed by workload signature)...
+    assert p2.schedule is p1.schedule
+    assert orch.stats["hits"] == 1
+    # ...but the handles are re-bound to the caller's, so execute()
+    # resolves the right graph
+    assert p1.handles == (h1,) and p2.handles == (h2,)
+
+
+def test_cache_hit_rebinds_handles_so_execute_runs_right_graph(model):
+    # two graphs with identical profiled costs (same shapes/kinds) but
+    # different payload weights: a cached plan served for the second
+    # handle must still execute the SECOND graph's functions
+    g1, inputs = _payload_chain(4, seed=0)
+    g2 = OpGraph([FusedOp(name=op.name, kind=op.kind,
+                          in_shapes=op.in_shapes, out_shape=op.out_shape,
+                          fn=(lambda f: lambda a: -f(-a))(op.fn))
+                  for op in g1.ops])
+    orch = Orchestrator(model)
+    h1, h2 = orch.register(g1), orch.register(g2)
+    orch.plan(h1)
+    p2 = orch.plan(h2)
+    assert orch.stats["hits"] == 1 and p2.handles == (h2,)
+    got = orch.execute(p2, inputs)
+    mono = orch.executor.run_monolithic(g2, inputs)
+    assert ScheduleExecutor.outputs_close(mono, got)
+
+
+def test_parallel_plans_not_shared_across_graph_structures(model):
+    # a diamond DAG and a pure chain over the SAME ops have equal
+    # workload signatures (chain + dense costs), but different phase
+    # structure — the parallel-mode cache must not share their plans
+    ops = [make_matmul(256, name="a"), make_matmul(256, name="b"),
+           make_cumsum(2048, 64), make_matmul(256, name="d")]
+    diamond = OpGraph(list(ops), edges=[(0, 2), (0, 1), (1, 3), (2, 3)])
+    chain = OpGraph(list(ops))
+    assert diamond.topo_order() == chain.topo_order()  # aliasing precondition
+    orch = Orchestrator(model)
+    hd, hc = orch.register(diamond), orch.register(chain)
+    assert orch.workload(hd).signature() == orch.workload(hc).signature()
+    pd = orch.plan(hd, mode="parallel")
+    pc = orch.plan(hc, mode="parallel")
+    assert orch.stats["hits"] == 0           # no structural aliasing
+    table = model.build_table(chain)
+    assert pc.schedule == solve_parallel(chain, table, EDGE_PUS,
+                                         orch.contention)
+    assert pd.schedule == solve_parallel(diamond, table, EDGE_PUS,
+                                         orch.contention)
+
+
+def test_condition_invalidates_per_pu_and_resolve_is_bitwise(model):
+    g = _chain_graph()
+    orch = Orchestrator(model)
+    h = orch.register(g)
+    nominal = orch.plan(h)
+    orch.on_condition(RuntimeCondition(slowdown={"GPU": 4.0}))
+    assert orch.stats["invalidated"] == 1    # nominal plan priced GPU@1.0
+    throttled = orch.plan(h)
+    # the throttled chain re-routes off the GPU somewhere
+    assert throttled.schedule.assignment != nominal.schedule.assignment
+    # throttled solve equals a direct solve on the adjusted workload
+    table = model.build_table(g)
+    wl = Workload.build(g.topo_order(), table, EDGE_PUS, ops=g.ops)
+    direct = solve_sequential(g.topo_order(), g.ops, None, EDGE_PUS,
+                              workload=wl.under_condition({"GPU": 4.0}))
+    assert throttled.schedule == direct
+    # back to nominal: the throttled entry is invalidated, and the cold
+    # re-solve reproduces the original plan bitwise
+    orch.on_condition(RuntimeCondition())
+    renominal = orch.plan(h)
+    assert renominal.to_json() == nominal.to_json()
+
+
+def test_condition_unavailable_pu_reroutes(model):
+    g = _chain_graph()
+    orch = Orchestrator(model)
+    h = orch.register(g)
+    orch.on_condition(RuntimeCondition(unavailable=frozenset({"GPU"})))
+    plan = orch.plan(h)
+    assert "GPU" not in set(plan.schedule.assignment)
+
+
+# ---------------------------------------------------------------------------
+# Plan JSON round-trips (all three schedule kinds)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_json_roundtrip_all_kinds(model):
+    orch = Orchestrator(model)
+    hc = orch.register(_chain_graph())
+    hb = orch.register(_branch_graph())
+    h2 = orch.register(_chain_graph(8, seed=1))
+    h3 = orch.register(_chain_graph(6, seed=2))
+    plans = [orch.plan(hc), orch.plan(hb), orch.plan((hc, h2)),
+             orch.plan((hc, h2, h3)), orch.plan((hc, hc), mode="aligned"),
+             orch.plan(hb, objective="energy")]
+    for plan in plans:
+        restored = Plan.from_json(plan.to_json())
+        assert restored.schedule == plan.schedule
+        assert (restored.kind, restored.objective, restored.handles,
+                restored.mode) == (plan.kind, plan.objective, plan.handles,
+                                   plan.mode)
+        # and the round-trip is a fixed point
+        assert restored.to_json() == plan.to_json()
+        assert restored.route == plan.route
+
+
+# ---------------------------------------------------------------------------
+# descriptive front-door errors
+# ---------------------------------------------------------------------------
+
+
+def test_register_memoizes_provider_profiled_only(model):
+    g = _chain_graph()
+    orch = Orchestrator(model)
+    h0 = orch.register(g)
+    assert orch.register(g) == h0            # provider-profiled: memoized
+    t = model.build_table(g)
+    h1 = orch.register(g, table=t)           # explicit table: fresh handle
+    assert h1 != h0
+    assert orch.register(g) == h0            # memo not shadowed by h1
+    ops = list(_chain_graph(6, seed=3).ops)  # bare op sequences memoize too
+    hs = orch.register(ops)
+    assert orch.register(ops) == hs
+
+
+def test_register_sequence_id_reuse_cannot_alias(model):
+    # temporaries freed after register() must not let a recycled id()
+    # hit the memo: the orchestrator pins every registered source object
+    orch = Orchestrator(model)
+    h1 = orch.register([make_matmul(64, name="m1"), make_matmul(64, name="m2")])
+    h2 = orch.register([make_cumsum(512, 8), make_cumsum(512, 8)])
+    assert h1 != h2
+    assert orch.workload(h1).signature() != orch.workload(h2).signature()
+
+
+def test_on_condition_rejects_unknown_pu(model):
+    orch = Orchestrator(model)
+    orch.register(_chain_graph())
+    with pytest.raises(ValueError, match=r"unknown PU name\(s\) \['gpu'\]"):
+        orch.on_condition(RuntimeCondition(slowdown={"gpu": 4.0}))
+    with pytest.raises(ValueError, match="unknown PU"):
+        orch.on_condition(RuntimeCondition(unavailable=frozenset({"TPU"})))
+
+
+def test_parallel_route_respects_execution_order(model):
+    # op indices deliberately NOT a topological order: 2 is the root,
+    # 0 is the join — route must follow phases, not index order
+    ops = [FusedOp(name="join", kind="add", in_shapes=((1, 64, 2048),),
+                   out_shape=(1, 64, 2048)),
+           make_matmul(256, name="b1"), make_matmul(256, name="root"),
+           make_cumsum(2048, 64)]
+    g = OpGraph(ops, edges=[(2, 1), (2, 3), (1, 0), (3, 0)])
+    orch = Orchestrator(model)
+    plan = orch.plan(orch.register(g))
+    assert plan.kind == "parallel"
+    order = [op for op, _ in plan.route[0]]
+    assert sorted(order) == [0, 1, 2, 3]
+    seen = set()
+    for oi in order:
+        assert all(p in seen for p in g.pred[oi]), \
+            f"op {oi} routed before its predecessor(s)"
+        seen.add(oi)
+
+
+def test_register_empty_graph_raises():
+    orch = Orchestrator(EdgeSoCCostModel())
+    with pytest.raises(ValueError, match="no ops"):
+        orch.register(OpGraph([]))
+
+
+def test_workload_build_empty_chain_raises():
+    table = CostTable(["CPU"])
+    with pytest.raises(ValueError, match="empty op chain"):
+        Workload.build([], table, EDGE_PUS)
+
+
+def test_workload_build_missing_op_raises():
+    ops = [make_matmul(64, name="a"), make_matmul(64, name="b")]
+    table = CostTable(["CPU", "GPU", "NPU"])
+    table.set(0, "CPU", CostEntry(1e-4, 0, 0, 0, 10.0))
+    with pytest.raises(ValueError, match=r"op 1 \(b\).*profiled"):
+        Workload.build([0, 1], table, EDGE_PUS, ops=ops)
+
+
+def test_workload_build_unknown_pu_raises():
+    table = CostTable(["CPU", "TPU"])
+    table.set(0, "CPU", CostEntry(1e-4, 0, 0, 0, 10.0))
+    table.set(0, "TPU", CostEntry(1e-4, 0, 0, 0, 10.0))
+    with pytest.raises(ValueError, match=r"unknown PU name\(s\) \['TPU'\]"):
+        Workload.build([0], table, EDGE_PUS)
+
+
+def test_plan_bad_handle_and_mode(model):
+    orch = Orchestrator(model)
+    h = orch.register(_chain_graph())
+    with pytest.raises(KeyError, match="unknown handle 99"):
+        orch.plan(99)
+    with pytest.raises(ValueError, match="unknown mode"):
+        orch.plan(h, mode="quantum")
+    with pytest.raises(ValueError, match="aligned"):
+        orch.plan(h, mode="aligned")
+    with pytest.raises(ValueError, match="one handle"):
+        orch.plan((h, h), mode="sequential")
+    with pytest.raises(TypeError, match="cost must be"):
+        Orchestrator(object())
+
+
+# ---------------------------------------------------------------------------
+# online admission (requests arriving mid-flight)
+# ---------------------------------------------------------------------------
+
+
+def test_admit_advance_retire(model):
+    ga, gb = _chain_graph(10), _chain_graph(8, seed=1)
+    orch = Orchestrator(model)
+    ha, hb = orch.register(ga), orch.register(gb)
+    p1 = orch.admit(ha)
+    assert p1.kind == "concurrent" and p1.handles == (ha,)
+    assert len(p1.route[0]) == 10
+    # request A progresses 4 ops, then B arrives: the re-plan covers A's
+    # remaining 6 ops and all of B
+    assert orch.advance(ha, 4) == 4
+    with pytest.raises(ValueError, match="n_ops must be >= 0"):
+        orch.advance(ha, -1)
+    p2 = orch.admit(hb)
+    assert p2.handles == (ha, hb)
+    assert len(p2.route[0]) == 6 and len(p2.route[1]) == 8
+    assert [op for op, _ in p2.route[0]] == ga.topo_order()[4:]
+    # the tail re-plan equals a direct solve on the tail workloads
+    wa = Workload.build(ga.topo_order(), model.build_table(ga), EDGE_PUS,
+                        ops=ga.ops)
+    wb = Workload.build(gb.topo_order(), model.build_table(gb), EDGE_PUS,
+                        ops=gb.ops)
+    direct = solve_concurrent([wa.tail(4), wb], orch.contention)
+    assert p2.schedule == direct
+    # A retires: only B remains
+    p3 = orch.retire(ha)
+    assert p3.handles == (hb,)
+    assert orch.retire(hb) is None
+    with pytest.raises(KeyError, match="not in the active set"):
+        orch.retire(hb)
+    with pytest.raises(KeyError, match="not in the active set"):
+        orch.advance(ha)
+
+
+def test_admit_fully_complete_request_drops_out(model):
+    ga, gb = _chain_graph(6), _chain_graph(6, seed=1)
+    orch = Orchestrator(model)
+    ha, hb = orch.register(ga), orch.register(gb)
+    orch.admit(ha)
+    plan = orch.admit(hb)
+    assert plan.handles == (ha, hb)
+    orch.advance(ha, 6)       # A finished executing
+    plan = orch.admit(hb)     # idempotent admit, replans
+    assert plan.handles == (hb,)
+    orch.advance(hb, 6)       # B finished too: nothing left to schedule
+    assert orch.admit(hb) is None
+    assert orch.retire(ha) is None      # B still active but fully advanced
+
+
+def test_on_condition_restitches_active_chain(model):
+    g = _chain_graph(12)
+    orch = Orchestrator(model)
+    h = orch.register(g)
+    orch.admit(h)
+    orch.advance(h, 6)
+    out = orch.on_condition(RuntimeCondition(slowdown={"GPU": 4.0}))
+    assert set(out) == {(h, "latency")}
+    stitched = out[(h, "latency")]
+    # the stitched plan matches a standalone DynamicScheduler fed the
+    # same condition at the same progress point
+    dyn = DynamicScheduler(g.topo_order(), g.ops, model.build_table(g),
+                           EDGE_PUS)
+    dyn.on_condition(6, RuntimeCondition(slowdown={"GPU": 4.0}))
+    assert stitched.schedule == dyn.plan
+    assert np.isfinite(stitched.latency) and np.isfinite(stitched.energy)
+
+
+def test_on_condition_returns_every_objective_tracker(model):
+    g = _chain_graph(12)
+    orch = Orchestrator(model)
+    h = orch.register(g)
+    orch.admit(h)
+    orch.dynamic(h)               # latency tracker
+    orch.dynamic(h, "energy")     # and an energy tracker alongside it
+    out = orch.on_condition(RuntimeCondition(slowdown={"GPU": 3.0}))
+    assert set(out) == {(h, "latency"), (h, "energy")}
+    assert out[(h, "latency")].objective == "latency"
+    assert out[(h, "energy")].objective == "energy"
+
+
+# ---------------------------------------------------------------------------
+# execute: plans drive the multi-lane executor
+# ---------------------------------------------------------------------------
+
+
+def _payload_chain(n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    ws = [rng.standard_normal((32, 32)) / 6.0 for _ in range(n)]
+    ops = [FusedOp(name=f"mm{i}", kind="matmul",
+                   in_shapes=((1, 32, 32), (32, 32)), out_shape=(1, 32, 32),
+                   fn=(lambda w: lambda a: np.maximum(a @ w, 0.0))(ws[i]))
+           for i in range(n)]
+    return OpGraph(ops), {0: (rng.standard_normal((1, 32, 32)),)}
+
+
+def test_execute_sequential_matches_monolithic(model):
+    g, inputs = _payload_chain()
+    orch = Orchestrator(model)
+    h = orch.register(g)
+    plan = orch.plan(h)
+    got = orch.execute(plan, inputs)
+    mono = orch.executor.run_monolithic(g, inputs)
+    assert ScheduleExecutor.outputs_close(mono, got)
+
+
+def test_execute_concurrent_matches_isolated(model):
+    g0, in0 = _payload_chain(5, seed=0)
+    g1, in1 = _payload_chain(4, seed=1)
+    orch = Orchestrator(model)
+    h0, h1 = orch.register(g0), orch.register(g1)
+    plan = orch.plan((h0, h1))
+    results = orch.execute(plan, [in0, in1])
+    for g, x, got in zip((g0, g1), (in0, in1), results):
+        mono = orch.executor.run_monolithic(g, x)
+        assert ScheduleExecutor.outputs_close(mono, got)
+
+
+def test_execute_partial_plan_raises(model):
+    g, _ = _payload_chain()
+    orch = Orchestrator(model)
+    h = orch.register(g)
+    orch.admit(h)
+    orch.advance(h, 2)
+    partial = orch.admit(h)
+    with pytest.raises(ValueError,
+                       match="does not cover|before its predecessor"):
+        orch.execute(partial, [{0: ()}])
+
+
+# ---------------------------------------------------------------------------
+# the plan-cache win on the bench_sched fig8 zoo pair
+# ---------------------------------------------------------------------------
+
+
+def test_cache_hit_10x_faster_on_fig8_zoo_pair(model):
+    from repro.core.paperzoo import zoo
+    z = zoo()
+    ga, gb = z["ViT-B/16 FP16"], z["ResNet-50 FP16"]
+    orch = Orchestrator(model)
+    ha, hb = orch.register(ga), orch.register(gb)
+    t0 = time.perf_counter()
+    cold = orch.plan((ha, hb))
+    cold_s = time.perf_counter() - t0
+    hit_s = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        hit = orch.plan((ha, hb))
+        hit_s = min(hit_s, time.perf_counter() - t0)
+    assert hit is cold
+    assert cold_s >= 10 * hit_s, (cold_s, hit_s)
