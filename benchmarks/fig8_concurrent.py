@@ -20,14 +20,16 @@ coarsening (``common.segment_table``) is retired as an approximation and
 kept only as an opt-in fallback (``max_segments=``/``--max-segments``)
 for comparison runs.
 
-M-model mode (``--n-models 3`` / ``4``): sweeps combinations of M
-distinct zoo configs through M-ary ``plan`` — the M-dimensional grid A*
-where the progress grid is small enough, the documented pairwise-merge
-fallback elsewhere (the per-combo solver route is reported, never
-silently).  The mode also co-schedules M small *executable* payload
-models and ``execute``s them for real on the multi-lane
-``ScheduleExecutor``, verifying orchestrated outputs bitwise against
-isolated execution.
+M-model mode (``--n-models 3`` / ``4``): sweeps **all** combinations of
+M distinct zoo configs through M-ary ``plan`` (969 triples / 3876 quads
+— ``--limit`` opts into deterministic sampling for quick runs) — the
+vectorized M-dimensional grid sweep solves every combo whose progress
+grid fits the exact-solve ceiling, the rolling-horizon merge
+co-schedules the rest window by window (the per-combo solver route is
+reported, never silently).  The mode also co-schedules M small
+*executable* payload models and ``execute``s them for real on the
+multi-lane ``ScheduleExecutor``, verifying orchestrated outputs bitwise
+against isolated execution.
 
 Claims validated (structural): concurrent geomean clearly exceeds the
 sequential geomean; complementary-affinity pairs (CPU-bound KAN/SNN x
@@ -230,14 +232,15 @@ def _verify_executor(m: int, cm: ContentionModel) -> bool:
 
 
 def run_multi(verbose: bool = True, n_models: int = 3,
-              limit: int | None = 25, seed: int = 0,
+              limit: int | None = None, seed: int = 0,
               max_segments: int | None = None) -> dict:
     """Sweep M-model combinations of distinct zoo configs.
 
-    ``limit`` caps the number of sampled combinations (deterministic
-    ``seed``); ``None`` sweeps them all.  Per-combo the solver route
-    (exact grid vs pairwise fallback) is recorded — nothing is silently
-    approximated.
+    The **full** combination sweep is the default (the vectorized grid
+    sweep + rolling-horizon merge made it affordable); ``limit`` opts
+    into sampling (deterministic ``seed``) for quick/CI runs.  Per-combo
+    the solver route (exact grid vs rolling-horizon vs pairwise) is
+    recorded — nothing is silently approximated.
     """
     cm = ContentionModel()
     orch, seg, names, t_setup = _setup(max_segments, cm)
@@ -312,9 +315,10 @@ if __name__ == "__main__":
     ap.add_argument("--n-models", type=int, default=2,
                     help="models co-scheduled per combination (2 = the "
                          "paper's 190-pair sweep; >=3 = M-model extension)")
-    ap.add_argument("--limit", type=int, default=25,
-                    help="max sampled combinations in M-model mode "
-                         "(0 = sweep all)")
+    ap.add_argument("--limit", type=int, default=0,
+                    help="opt-in: sample at most N combinations in "
+                         "M-model mode (default 0 = full sweep, including "
+                         "the unsampled 3876-quad sweep at --n-models 4)")
     ap.add_argument("--seed", type=int, default=0,
                     help="sampling seed for --limit")
     args = ap.parse_args()

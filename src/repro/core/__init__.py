@@ -10,8 +10,10 @@ execute, with plan caching and online admission); the per-regime
 ``solve_*`` free functions remain the stable low-level layer it routes
 to.
 """
-from .contention import (ContentionModel, DEFAULT_MM_SF, PairCostCache,
-                         uses_default_coexec, uses_default_group)
+from .contention import (ContentionModel, DEFAULT_MM_SF, GroupCostCache,
+                         PairCostCache, uses_default_coexec,
+                         uses_default_group)
+from .errors import InfeasibleScheduleError
 from .costmodel import (CPU, GPU, NPU, EDGE_PUS, DEFAULT_SF, CostEntry,
                         CostTable, DenseCostTable, EdgeSoCCostModel, PUSpec,
                         transition_cost)
@@ -27,8 +29,8 @@ from .schedule import (ConcurrentSchedule, ConcurrentStep, ParallelSchedule,
                        SeqSchedule, evaluate_sequential,
                        evaluate_sequential_reference, schedule_from_dict,
                        schedule_to_dict, single_pu_cost)
-from .search import (ConcurrentCaches, dijkstra, sequential_dp,
-                     sequential_dp_reference,
+from .search import (ConcurrentCaches, DEFAULT_MAX_STATES, dijkstra,
+                     sequential_dp, sequential_dp_reference,
                      solve_concurrent, solve_concurrent_aligned,
                      solve_concurrent_aligned_reference,
                      solve_concurrent_joint, solve_concurrent_joint_reference,
@@ -37,11 +39,12 @@ from .workload import Workload
 from . import autoshard, modelgraph, paperzoo  # noqa: F401  (TPU mode + graphs)
 
 __all__ = [
-    "ContentionModel", "DEFAULT_MM_SF", "PairCostCache",
+    "ContentionModel", "DEFAULT_MM_SF", "GroupCostCache", "PairCostCache",
     "uses_default_coexec", "uses_default_group", "CPU", "GPU", "NPU",
     "EDGE_PUS", "DEFAULT_SF", "CostEntry", "CostTable", "DenseCostTable",
-    "DynamicScheduler", "EdgeSoCCostModel", "Orchestrator", "PUSpec",
-    "Plan", "RuntimeCondition", "Workload",
+    "DynamicScheduler", "EdgeSoCCostModel", "InfeasibleScheduleError",
+    "Orchestrator", "PUSpec",
+    "Plan", "RuntimeCondition", "Workload", "DEFAULT_MAX_STATES",
     "transition_cost", "ScheduleExecutor", "DenseChain", "ExecGraph",
     "build_dense_chain", "build_sequential_graph", "Branch", "FusedOp",
     "OpGraph", "Phase",

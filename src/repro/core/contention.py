@@ -18,6 +18,7 @@ Two empirically grounded models:
 from __future__ import annotations
 
 import dataclasses
+import itertools
 from typing import Mapping, Sequence
 
 import numpy as np
@@ -115,6 +116,38 @@ class ContentionModel:
         f = self._group_factors(pus_)
         return sum(t * f[p] * pw for t, p, pw in zip(ts, pus_, powers))
 
+    # -- batched M-ary laws (one fixed PU combo, many op tuples) ------------
+    def group_step_cost_batch(self, ts: np.ndarray,
+                              pus_: Sequence[str]) -> np.ndarray:
+        """Vectorized :meth:`group_step_cost`: ``ts`` is ``(..., M)`` solo
+        times of M co-scheduled ops and ``pus_`` their (single, shared
+        across the batch) PU assignment.  Returns the ``(...,)`` makespans,
+        bit-for-bit equal to the scalar law applied per tuple: per-PU
+        queue sums accumulate in op-position order and the per-queue
+        factor/max algebra is order-exact."""
+        f = self._group_factors(pus_)
+        cost: np.ndarray | None = None
+        for q in dict.fromkeys(pus_):           # distinct PUs, first-seen order
+            tq: np.ndarray | None = None
+            for i, p in enumerate(pus_):
+                if p == q:
+                    tq = ts[..., i] if tq is None else tq + ts[..., i]
+            vq = tq * f[q]
+            cost = vq if cost is None else np.maximum(cost, vq)
+        return cost
+
+    def group_energy_batch(self, ts: np.ndarray, powers: np.ndarray,
+                           pus_: Sequence[str]) -> np.ndarray:
+        """Vectorized :meth:`group_energy` over ``(..., M)`` solo times and
+        powers for one fixed PU combo — same term grouping and summation
+        order as the scalar law, so results match element-for-element."""
+        f = self._group_factors(pus_)
+        out: np.ndarray | None = None
+        for i, p in enumerate(pus_):
+            term = (ts[..., i] * f[p]) * powers[..., i]
+            out = term if out is None else out + term
+        return out
+
     def min_factor(self) -> float:
         """Smallest factor any co-executed op's solo time can be scaled by.
 
@@ -137,14 +170,119 @@ def uses_default_coexec(cm: ContentionModel) -> bool:
 def uses_default_group(cm: ContentionModel) -> bool:
     """True iff ``cm`` inherits the base M-ary group laws AND the pair
     laws they generalize.  The M-dimensional grid search prices group
-    advances with ``group_step_cost``/``group_energy``; a model that
-    overrides the pair laws but not the group laws would be priced
-    inconsistently, so such models route to the pairwise-merge fallback
-    (which honours custom pair laws through the reference solvers)."""
+    advances with ``group_step_cost``/``group_energy`` (the vectorized
+    sweep through their ``*_batch`` forms); a model that overrides any of
+    the family would be priced inconsistently, so such models route to
+    the pairwise-merge fallback (which honours custom pair laws through
+    the reference solvers)."""
     return (uses_default_coexec(cm)
             and type(cm).group_step_cost is ContentionModel.group_step_cost
             and type(cm).group_energy is ContentionModel.group_energy
+            and type(cm).group_step_cost_batch
+            is ContentionModel.group_step_cost_batch
+            and type(cm).group_energy_batch
+            is ContentionModel.group_energy_batch
             and type(cm)._group_factors is ContentionModel._group_factors)
+
+
+class GroupCostCache:
+    """Batched group-edge tables per *signature tuple* for one ordered
+    subset of >= 2 co-advancing requests — the M-ary generalization of
+    :class:`PairCostCache`.
+
+    A group co-advance's cost/energy over all PU combos depends only on
+    the advancing ops' per-PU (w, power, support) signatures
+    (``DenseCostTable.sig``), so one batched reduction per signature
+    tuple serves every grid state that advances this subset.  For each of
+    the ``prod(n_sig_r)`` signature tuples the cache stores the best PU
+    combo under BOTH objectives (one enumeration pass, memoized — a
+    shared cache serves a latency solve and an energy solve of the same
+    workload tuple, like ``PairCostCache.edge_tables``).
+
+    Semantics replicate the scalar per-state enumeration of the heap grid
+    A* bit-for-bit: PU combos are scanned in the same row-major
+    (``itertools.product``) order with strict first-minimum updates, the
+    costs come from :meth:`ContentionModel.group_step_cost_batch` /
+    :meth:`~ContentionModel.group_energy_batch` (order-exact vectorized
+    forms of the scalar laws), and unsupported slots are ``inf`` in both
+    keys so they can never win the argmin.
+    """
+
+    def __init__(self, cm: ContentionModel, denses: Sequence[DenseCostTable]):
+        if len(denses) < 2:
+            raise ValueError(
+                f"GroupCostCache is for group advances of >= 2 requests, "
+                f"got {len(denses)}; singleton advances price from the "
+                "dense solo-edge arrays")
+        self.cm = cm
+        self.denses = list(denses)
+        self.ks = [d.k for d in self.denses]
+        self.shape = tuple(d.n_sig for d in self.denses)
+        self._memo: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray,
+                                    np.ndarray]] = {}
+
+    def edge_tables(self, objective: str
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
+                               np.ndarray]:
+        """``(key, step_cost, energy, flat PU-combo argmin)`` per signature
+        tuple, each of shape ``(n_sig_1, ..., n_sig_g)``.  The argmin is
+        row-major over ``(K_1, ..., K_g)`` (decode with divmod), matching
+        the scalar enumeration's first-minimum tie-break."""
+        if objective not in self._memo:
+            self._build()
+        return self._memo[objective]
+
+    # tuples per build chunk: each chunk gathers g per-request (C, K)
+    # w/power/mask blocks once and then serves every PU combo from cheap
+    # column views, bounding the gather scratch to a few tens of MB even
+    # at the rolling route's signature-alphabet cap
+    _CHUNK_TUPLES = 262_144
+
+    def _build(self) -> None:
+        g = len(self.denses)
+        rows = [d.sig_row for d in self.denses]
+        tsig = [d.w[r] for d, r in zip(self.denses, rows)]       # (S_r, K_r)
+        psig = [d.power[r] for d, r in zip(self.denses, rows)]
+        msig = [d.mask[r] for d, r in zip(self.denses, rows)]
+        grid = np.indices(self.shape).reshape(g, -1)             # (g, n_tup)
+        n_tup = grid.shape[1]
+        pu_lists = [d.pus for d in self.denses]
+        combos = list(itertools.product(*[range(k) for k in self.ks]))
+        out = {obj: (np.full(n_tup, np.inf), np.empty(n_tup),
+                     np.empty(n_tup), np.zeros(n_tup, dtype=np.int64))
+               for obj in ("latency", "energy")}
+        for lo in range(0, n_tup, self._CHUNK_TUPLES):
+            hi = min(lo + self._CHUNK_TUPLES, n_tup)
+            # one gather per (request, kind) per chunk — combo-independent
+            gat = [(tsig[i][grid[i, lo:hi]], psig[i][grid[i, lo:hi]],
+                    msig[i][grid[i, lo:hi]]) for i in range(g)]
+            ts = np.empty((hi - lo, g))
+            pws = np.empty((hi - lo, g))
+            for ci, combo in enumerate(combos):
+                pnames = [pu_lists[i][j] for i, j in enumerate(combo)]
+                valid: np.ndarray | None = None
+                for i, j in enumerate(combo):
+                    ts[:, i] = gat[i][0][:, j]
+                    pws[:, i] = gat[i][1][:, j]
+                    vi = gat[i][2][:, j]
+                    valid = vi if valid is None else valid & vi
+                with np.errstate(invalid="ignore"):  # inf*0 at unsupported
+                    cost = self.cm.group_step_cost_batch(ts, pnames)
+                    eng = self.cm.group_energy_batch(ts, pws, pnames)
+                cost = np.where(valid, cost, np.inf)
+                eng = np.where(valid, eng, np.inf)
+                for obj, key in (("latency", cost), ("energy", eng)):
+                    pk, ps, pe, pa = out[obj]
+                    pkc = pk[lo:hi]
+                    imp = key < pkc
+                    if imp.any():
+                        pkc[imp] = key[imp]
+                        ps[lo:hi][imp] = cost[imp]
+                        pe[lo:hi][imp] = eng[imp]
+                        pa[lo:hi][imp] = ci
+        self._memo.update(
+            {obj: tuple(a.reshape(self.shape) for a in arrs)
+             for obj, arrs in out.items()})
 
 
 class PairCostCache:

@@ -27,6 +27,7 @@ from typing import Iterable, Mapping, Sequence
 import numpy as np
 
 from .costmodel import CostEntry, CostTable, PUSpec
+from .errors import InfeasibleScheduleError
 from .op import FusedOp
 from .schedule import SeqSchedule
 from .search import solve_sequential
@@ -70,8 +71,12 @@ class RuntimeCondition:
             float(f) == 1.0 for f in self.slowdown.values())
 
 
-class InfeasibleScheduleError(ValueError):
-    """No PU can run some op under the active runtime condition."""
+# InfeasibleScheduleError historically lived here; it now sits in
+# ``repro.core.errors`` so the concurrent solvers can raise it too
+# (``dynamic`` imports ``search``, so ``search`` cannot import us).
+# Re-exported for backward compatibility.
+__all__ = ["DynamicScheduler", "RuntimeCondition", "InfeasibleScheduleError",
+           "RemapEvent", "adjusted_table"]
 
 
 def adjusted_table(table: CostTable, cond: RuntimeCondition) -> CostTable:

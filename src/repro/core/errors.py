@@ -1,0 +1,17 @@
+"""Shared scheduler error types.
+
+Lives in its own leaf module so both the search engine
+(:mod:`repro.core.search`) and the dynamic scheduler
+(:mod:`repro.core.dynamic`, which imports the search engine) can raise
+the same exception without a circular import.
+"""
+from __future__ import annotations
+
+
+class InfeasibleScheduleError(ValueError):
+    """No PU can run some op (profiling gap, compile failure on every PU,
+    or a runtime condition that masked the last capable PU).
+
+    Raised with context — which request, which op, which chain position —
+    instead of a bare ``ValueError`` from deep inside a solver loop.
+    """

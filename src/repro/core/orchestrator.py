@@ -61,6 +61,10 @@ from .search import (ConcurrentCaches, _pair_cache, solve_concurrent,
 from .workload import Workload
 
 PLAN_MODES = ("auto", "sequential", "parallel", "concurrent", "aligned")
+# concurrent-search routes accepted by plan(algorithm=...); passed through
+# to solve_concurrent verbatim ("astar"/"dijkstra" are pair-only spellings
+# the low-level layer also accepts, but the front door keeps the M-ary set)
+CONCURRENT_ALGORITHMS = ("auto", "grid", "grid_astar", "rolling", "pairwise")
 
 
 @dataclasses.dataclass
@@ -317,7 +321,8 @@ class Orchestrator:
 
     # -- plan ---------------------------------------------------------------
     def plan(self, handles: int | Sequence[int], objective: str = "latency",
-             mode: str = "auto") -> Plan:
+             mode: str = "auto", algorithm: str = "auto",
+             max_states: int | None = None) -> Plan:
         """Solve (or serve from cache) a schedule for one or more handles.
 
         ``mode="auto"`` routes a single chain handle to the sequential
@@ -326,6 +331,17 @@ class Orchestrator:
         concurrent search; ``"aligned"`` forces the lockstep pair solver
         for exactly two handles.  Results are bitwise identical to the
         corresponding direct solver call on the same workloads.
+
+        ``algorithm`` and ``max_states`` are the concurrent-search knobs
+        of :func:`~repro.core.search.solve_concurrent`, passed through
+        verbatim (``algorithm`` forces a route — exact vectorized
+        ``"grid"`` sweep, retained ``"grid_astar"`` heap oracle,
+        ``"rolling"`` horizon merge, or the ``"pairwise"`` fallback —
+        and ``max_states`` bounds the exact-solve grid; ``None`` keeps
+        the solver default).  Both are part of the plan-cache key, so a
+        forced-pairwise plan can never be served a cached grid schedule;
+        they are rejected for non-concurrent modes rather than silently
+        ignored.
         """
         hs = (handles,) if isinstance(handles, int) else tuple(handles)
         if not hs:
@@ -333,6 +349,11 @@ class Orchestrator:
         regs = [self._reg(h) for h in hs]
         if mode not in PLAN_MODES:
             raise ValueError(f"unknown mode {mode!r}; one of {PLAN_MODES}")
+        if algorithm not in CONCURRENT_ALGORITHMS:
+            raise ValueError(f"unknown algorithm {algorithm!r}; one of "
+                             f"{CONCURRENT_ALGORITHMS}")
+        if max_states is not None and max_states < 1:
+            raise ValueError(f"max_states must be >= 1, got {max_states}")
         if mode == "auto":
             if len(hs) > 1:
                 mode = "concurrent"
@@ -346,11 +367,24 @@ class Orchestrator:
             raise ValueError(
                 f"mode='aligned' is the lockstep pair solver, got "
                 f"{len(hs)} handle(s)")
+        if algorithm != "auto" or max_states is not None:
+            if mode != "concurrent":
+                raise ValueError(
+                    "algorithm=/max_states= are knobs of the M-ary "
+                    f"concurrent search; this plan resolved to mode={mode!r}")
+            if len(hs) == 1:
+                raise ValueError(
+                    "algorithm=/max_states= route the M >= 2 concurrent "
+                    "search; a single-request concurrent plan is a solo "
+                    "best-PU walk with nothing to route")
         return self._plan_cached(
-            [(reg, 0) for reg in regs], hs, objective, mode)
+            [(reg, 0) for reg in regs], hs, objective, mode,
+            algorithm, max_states)
 
     def _plan_cached(self, regs_progress: list[tuple[_Registration, int]],
-                     hs: tuple[int, ...], objective: str, mode: str) -> Plan:
+                     hs: tuple[int, ...], objective: str, mode: str,
+                     algorithm: str = "auto",
+                     max_states: int | None = None) -> Plan:
         # the sequential/concurrent solvers consume only the chain + dense
         # cost views (covered by the workload signature); the parallel
         # solve additionally consumes the graph's edge structure
@@ -360,7 +394,10 @@ class Orchestrator:
                            for reg, prog in regs_progress)
         else:
             wl_key = tuple((reg.sig, prog) for reg, prog in regs_progress)
-        key = (wl_key, objective, mode, self._cond_key())
+        # algorithm/max_states are in the key: a forced-pairwise plan must
+        # never be served a cached grid schedule (and vice versa)
+        key = (wl_key, objective, mode, algorithm, max_states,
+               self._cond_key())
         plan = self._plans.get(key)
         if plan is not None:
             self.stats["hits"] += 1
@@ -372,7 +409,8 @@ class Orchestrator:
                 plan = dataclasses.replace(plan, handles=hs)
             return plan
         self.stats["misses"] += 1
-        plan = self._solve(regs_progress, hs, objective, mode)
+        plan = self._solve(regs_progress, hs, objective, mode,
+                           algorithm, max_states)
         self._plans[key] = plan
         while len(self._plans) > self._max_plans:
             self._plans.pop(next(iter(self._plans)))
@@ -394,7 +432,9 @@ class Orchestrator:
         return pool
 
     def _solve(self, regs_progress: list[tuple[_Registration, int]],
-               hs: tuple[int, ...], objective: str, mode: str) -> Plan:
+               hs: tuple[int, ...], objective: str, mode: str,
+               algorithm: str = "auto",
+               max_states: int | None = None) -> Plan:
         nominal = self.condition.nominal
         wls = []
         for reg, prog in regs_progress:
@@ -422,8 +462,9 @@ class Orchestrator:
                 self.contention, objective, dense0=w0.dense,
                 dense1=w1.dense, cache=cache)
             return Plan("concurrent", sched, objective, hs, mode)
+        kw = {} if max_states is None else {"max_states": max_states}
         sched = solve_concurrent(wls, self.contention, objective,
-                                 caches=pool)
+                                 algorithm=algorithm, caches=pool, **kw)
         return Plan("concurrent", sched, objective, hs, mode)
 
     # -- online admission (the serving scenario) ----------------------------

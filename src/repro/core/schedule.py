@@ -98,7 +98,7 @@ class ConcurrentSchedule:
     latency: float
     energy: float
     objective: str
-    mode: str  # "aligned" | "joint" | "joint-grid" | "pairwise"
+    mode: str  # "aligned" | "joint" | "joint-grid" | "rolling" | "pairwise"
 
     @property
     def n_requests(self) -> int:

@@ -24,12 +24,21 @@
   automatically for ``ContentionModel`` subclasses that override the
   co-execution cost laws.
 * ``solve_concurrent`` — the M-request generalization over ``Workload``
-  views: M = 2 dispatches to the pair A* bit-for-bit; small M-dimensional
-  progress grids are searched exactly (``_solve_concurrent_grid``, the
-  same A* structure with memoized per-signature *group* edges priced by
-  ``ContentionModel.group_step_cost``/``group_energy``); larger products
-  fall back to the documented pairwise-merge schedule
-  (``_solve_concurrent_pairwise``).
+  views: M = 2 dispatches to the pair A* bit-for-bit; M-dimensional
+  progress grids up to ``max_states`` are searched exactly by a
+  **vectorized anti-diagonal sweep** (``_solve_concurrent_grid``): all
+  states with equal total progress are relaxed together, one batched
+  NumPy relaxation per advance subset, singleton advances priced from
+  the dense solo-edge arrays and group advances gathered from
+  per-(subset, signature-tuple) edge tables built once per solve
+  (``contention.GroupCostCache``, the M-ary ``PairCostCache``).  The
+  pre-vectorization heap A* is retained as ``algorithm="grid_astar"``
+  (equivalence oracle).  Grids beyond ``max_states`` stitch a
+  **rolling-horizon merge** (``_solve_concurrent_rolling``): exact sweep
+  over a bounded window of next ops across ALL M requests, window after
+  window.  The old pairwise-merge schedule
+  (``_solve_concurrent_pairwise``) survives only as the
+  custom-contention fallback.
 
 All solvers consume the dense ``Workload`` layer; the scalar dict
 ``CostTable`` is ingested once at the boundary (``Workload.build``) and
@@ -44,9 +53,10 @@ from typing import Mapping, Sequence
 
 import numpy as np
 
-from .contention import (ContentionModel, PairCostCache, uses_default_coexec,
-                         uses_default_group)
+from .contention import (ContentionModel, GroupCostCache, PairCostCache,
+                         uses_default_coexec, uses_default_group)
 from .costmodel import CostTable, DenseCostTable, PUSpec, transition_cost
+from .errors import InfeasibleScheduleError
 from .graph import (DenseChain, ExecGraph, build_dense_chain,
                     build_sequential_graph, node_weight)
 from .op import FusedOp, OpGraph
@@ -822,15 +832,19 @@ class ConcurrentCaches:
     the latency- and energy-objective solves of one combination).
 
     ``pair`` memoizes ``PairCostCache`` instances per request-index pair
-    (the pairwise route); ``group`` memoizes the grid route's
-    per-signature group edges (both objectives' bests are stored per
-    entry).  Entries are keyed by request index / signature ids, so a
-    pool is only valid for one fixed workload tuple.
+    (the pairwise route); ``group_tables`` memoizes the vectorized grid
+    sweep's per-subset :class:`~repro.core.contention.GroupCostCache`
+    tables (both objectives' bests per entry, shared by the full-grid
+    and every rolling-horizon window solve); ``group`` memoizes the
+    retained heap A*'s scalar per-(subset, signature-tuple) edges.
+    Entries are keyed by request index / signature ids, so a pool is
+    only valid for one fixed workload tuple.
     """
 
     def __init__(self) -> None:
         self.pair: dict[tuple[int, int], PairCostCache] = {}
         self.group: dict[tuple, tuple] = {}
+        self.group_tables: dict[tuple[int, ...], GroupCostCache] = {}
 
 
 def _require_oracle_tables(wls: Sequence[Workload],
@@ -875,13 +889,18 @@ def _solo_step_walk(wl: Workload, req: int, m: int, objective: str
     return steps, lat, eng
 
 
+DEFAULT_MAX_STATES = 2_000_000     # exact-grid ceiling: a MEMORY bound
+DEFAULT_WINDOW_STATES = 65_536     # rolling-horizon per-window grid budget
+
+
 def solve_concurrent(
     workloads: Sequence[Workload],
     contention: ContentionModel | None = None,
     objective: str = "latency",
     algorithm: str = "auto",
-    max_states: int = 200_000,
+    max_states: int | None = None,
     caches: ConcurrentCaches | None = None,
+    window_states: int = DEFAULT_WINDOW_STATES,
 ) -> ConcurrentSchedule:
     """Joint co-scheduling of M >= 1 concurrent requests.
 
@@ -894,21 +913,37 @@ def solve_concurrent(
     * **M = 2** — dispatched to ``solve_concurrent_joint``: the dense
       pair A* fast path, bit-for-bit (the retained pair solvers ARE the
       M = 2 case).
-    * **M >= 3, small grids** — exact A* on the M-dimensional progress
-      grid (``prod(n_r + 1) <= max_states``) with memoized per-signature
-      group edges (``algorithm="grid"`` forces this; raises if the grid
-      exceeds ``max_states`` or the contention model overrides the group
-      laws).
-    * **M >= 3, large grids or custom contention** — the documented
-      pairwise-merge fallback (``algorithm="pairwise"`` forces it):
-      requests sorted by descending solo-best cost, adjacent pairs
-      co-scheduled with the exact pair A*, pairs executed back-to-back,
-      an odd cheapest request running solo.  Feasible by construction
-      and never worse than fully-serial solo execution (each pair's
-      joint optimum is).
+    * **M >= 3, grids up to ``max_states``** — exact vectorized
+      anti-diagonal sweep of the M-dimensional progress grid
+      (``algorithm="grid"`` forces it; ``"grid_astar"`` forces the
+      retained heap A* oracle; both raise if the grid exceeds
+      ``max_states`` or the contention model overrides the group laws).
+      ``max_states`` (``None`` = ``DEFAULT_MAX_STATES``) is a *memory*
+      bound (~100 bytes/state for the sweep's dense per-state arrays),
+      not a time bound; it governs the M >= 3 routes and the explicitly
+      grid-forced M = 2 solves — passing it alongside the M = 2 pair
+      fast path (which is corridor-exact and not state-bounded) raises
+      rather than silently ignoring it.
+    * **M >= 3, larger grids** — the rolling-horizon merge
+      (``algorithm="rolling"`` forces it): the next window of ops across
+      ALL M requests is co-scheduled with an exact grid sweep
+      (``<= window_states`` states per window, window lengths
+      proportional to remaining chain lengths) and windows are stitched
+      back-to-back.  Upper-bounds the exact grid optimum and recovers
+      cross-request concurrency the old pairwise merge serialized away.
+    * **custom contention laws** — the documented pairwise-merge
+      fallback (``algorithm="pairwise"`` forces it): requests sorted by
+      descending solo-best cost, adjacent pairs co-scheduled with the
+      exact pair A* (whose scalar reference honours overridden pair
+      laws), pairs executed back-to-back, an odd cheapest request
+      running solo.
 
-    ``algorithm="auto"`` picks grid when exact search is affordable and
-    the default group laws apply, else pairwise.  Pass ``caches`` (a
+    ``algorithm="auto"`` picks the exact sweep when it fits
+    ``max_states``, the rolling-horizon merge when it does not, and
+    pairwise only under custom contention laws (or for the degenerate
+    near-unique-signature profiles whose shared group tables would dwarf
+    the rolling windows; forcing ``"rolling"`` there raises instead of
+    silently downgrading).  Pass ``caches`` (a
     :class:`ConcurrentCaches` dedicated to this workload tuple) to share
     the objective-independent setup across a latency + energy solve
     pair.
@@ -918,39 +953,85 @@ def solve_concurrent(
     m = len(wls)
     if m == 0:
         raise ValueError("solve_concurrent needs at least one workload")
+    if algorithm not in ("auto", "astar", "dijkstra", "grid", "grid_astar",
+                         "rolling", "pairwise"):
+        raise ValueError(algorithm)
     if m == 1:
+        if algorithm != "auto" or max_states is not None:
+            raise ValueError(
+                "algorithm=/max_states= were forced, but a single request "
+                "has no concurrent search to route — the M = 1 solve is a "
+                "solo best-PU walk; drop the arguments")
         steps, lat, eng = _solo_step_walk(wls[0], 0, 1, objective)
         return ConcurrentSchedule(steps=steps, latency=lat, energy=eng,
                                   objective=objective, mode="joint")
     _require_oracle_tables(wls, contention)
     if m == 2 and algorithm in ("auto", "astar", "dijkstra"):
+        if max_states is not None:
+            raise ValueError(
+                "max_states bounds the grid/rolling routes, but this M = 2 "
+                "solve dispatches to the pair A* fast path (corridor-exact, "
+                "not state-bounded) — drop max_states, or force "
+                "algorithm='grid'/'grid_astar'/'rolling'/'pairwise' to "
+                "apply a state-bounded route")
         pair_algo = "auto" if algorithm == "auto" else algorithm
         cache = _pair_cache(caches, contention, wls, 0, 1)
         return solve_concurrent_joint(
             wls[0].chain, wls[0].table, wls[1].chain, wls[1].table,
             wls[0].pus, contention, objective, algorithm=pair_algo,
             dense0=wls[0].dense, dense1=wls[1].dense, cache=cache)
+    if max_states is None:
+        max_states = DEFAULT_MAX_STATES
     n_states = math.prod(wl.n + 1 for wl in wls)
     default_laws = uses_default_group(contention)
-    group_memo = caches.group if caches is not None else None
-    if algorithm == "grid":
+    if algorithm in ("grid", "grid_astar"):
         if not default_laws:
             raise ValueError(
-                "algorithm='grid' requires the default group co-execution "
-                f"laws; {type(contention).__name__} overrides them — use "
-                "algorithm='auto' or 'pairwise'")
+                f"algorithm={algorithm!r} requires the default group "
+                f"co-execution laws; {type(contention).__name__} overrides "
+                "them — use algorithm='auto' or 'pairwise'")
         if n_states > max_states:
             raise ValueError(
-                f"algorithm='grid' on {n_states} states exceeds "
-                f"max_states={max_states}; raise max_states or use "
-                "algorithm='pairwise'")
-        return _solve_concurrent_grid(wls, contention, objective, group_memo)
+                f"algorithm={algorithm!r} on {n_states} states exceeds "
+                f"max_states={max_states}; raise max_states (a memory "
+                "bound of ~100 bytes/state) or use algorithm='rolling' "
+                "or 'pairwise'")
+        if algorithm == "grid":
+            return _solve_concurrent_grid(wls, contention, objective, caches)
+        group_memo = caches.group if caches is not None else None
+        return _solve_concurrent_grid_astar(wls, contention, objective,
+                                            group_memo)
+    if algorithm == "rolling":
+        if not default_laws:
+            raise ValueError(
+                "algorithm='rolling' co-schedules each window with the "
+                "exact grid sweep, which requires the default group "
+                f"co-execution laws; {type(contention).__name__} overrides "
+                "them — use algorithm='auto' or 'pairwise'")
+        sig_states = _group_table_states(wls)
+        if sig_states > _ROLLING_TABLE_CAP:
+            raise ValueError(
+                "algorithm='rolling' shares group-edge tables over the "
+                f"requests' full signature alphabets, and {sig_states} "
+                f"signature tuples exceed the {_ROLLING_TABLE_CAP} table "
+                "cap (near-unique per-op signatures, e.g. a measured "
+                "profile) — use algorithm='auto' or 'pairwise'")
+        return _solve_concurrent_rolling(wls, contention, objective, caches,
+                                         min(window_states, max_states))
     if algorithm == "pairwise":
         return _solve_concurrent_pairwise(wls, contention, objective, caches)
-    if algorithm != "auto":
-        raise ValueError(algorithm)
-    if default_laws and n_states <= max_states:
-        return _solve_concurrent_grid(wls, contention, objective, group_memo)
+    if algorithm != "auto":   # "astar"/"dijkstra": pair-only spellings
+        raise ValueError(
+            f"algorithm={algorithm!r} names the two-request pair solvers "
+            f"and does not generalize to M = {m} requests — use "
+            "'auto', 'grid', 'grid_astar', 'rolling', or 'pairwise'")
+    if not default_laws:
+        return _solve_concurrent_pairwise(wls, contention, objective, caches)
+    if n_states <= max_states:
+        return _solve_concurrent_grid(wls, contention, objective, caches)
+    if _group_table_states(wls) <= _ROLLING_TABLE_CAP:
+        return _solve_concurrent_rolling(wls, contention, objective, caches,
+                                         min(window_states, max_states))
     return _solve_concurrent_pairwise(wls, contention, objective, caches)
 
 
@@ -969,11 +1050,282 @@ def _pair_cache(caches: ConcurrentCaches | None, cm: ContentionModel,
     return cache
 
 
+def _require_all_advanceable(wls: Sequence[Workload],
+                             solo_keys: Sequence[np.ndarray]) -> None:
+    """Descriptive infeasibility gate for the M-request solvers: an op
+    with no supported PU can never be advanced by any transition, so
+    every route fails identically — report which request, which op, and
+    where, instead of an opaque search-exhaustion error later."""
+    for r, (wl, key) in enumerate(zip(wls, solo_keys)):
+        bad = ~np.isfinite(np.asarray(key))
+        if bad.any():
+            pos = int(np.argmax(bad))
+            raise InfeasibleScheduleError(
+                f"request {r}: {wl.op_name(pos)} at chain position {pos} "
+                "is unsupported on every PU — no concurrent transition "
+                "can advance it")
+
+
+class _GridContext:
+    """Per-solve vectorized inputs shared by the full-grid sweep and the
+    rolling-horizon windows: per-request dense solo edges, signature-id
+    arrays, and lazily built per-subset group-edge tables
+    (:class:`~repro.core.contention.GroupCostCache`).  Tables are keyed
+    by request-index tuple over the requests' *global* signature
+    alphabets, so every window of a rolling solve — and, through a
+    shared :class:`ConcurrentCaches` pool, the companion solve under the
+    other objective — reuses them.
+    """
+
+    def __init__(self, wls: Sequence[Workload], cm: ContentionModel,
+                 objective: str, caches: ConcurrentCaches | None = None):
+        self.wls = list(wls)
+        self.m = len(self.wls)
+        self.cm = cm
+        self.objective = objective
+        self.denses = [wl.dense for wl in self.wls]
+        self.pu_lists = [d.pus for d in self.denses]
+        self.solo = [_solo_edges(d, objective) for d in self.denses]
+        _require_all_advanceable(self.wls, [s[0] for s in self.solo])
+        self.sigs = [d.sig for d in self.denses]
+        self._tables = caches.group_tables if caches is not None else {}
+
+    def tables(self, reqs: tuple[int, ...]
+               ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        gc = self._tables.get(reqs)
+        if gc is None:
+            gc = GroupCostCache(self.cm, [self.denses[r] for r in reqs])
+            self._tables[reqs] = gc
+        return gc.edge_tables(self.objective)
+
+    def sweep(self, lo: Sequence[int], hi: Sequence[int]
+              ) -> tuple[list[ConcurrentStep], float]:
+        """Exact anti-diagonal DP over the progress sub-box
+        ``prod([lo_r, hi_r])``; returns ``(steps, energy)``.
+
+        All states with equal total progress form an anti-diagonal; every
+        transition strictly increases total progress, so diagonals are a
+        topological order and each one is relaxed in a handful of batched
+        NumPy operations per advance subset.  Within one (diagonal,
+        subset) relaxation distinct sources map to distinct successors
+        (``s + delta`` is injective), so the scatter needs no conflict
+        resolution; ties between subsets resolve to the first strict
+        improvement in (source-diagonal, subset-bitmask) order — a fixed,
+        deterministic policy.  Unlike the retained heap A*
+        (quantized-priority tie plateaus, suboptimality <= 2 quanta),
+        the sweep returns the exact FP-minimal objective.
+        """
+        m = self.m
+        sizes = [hi[r] - lo[r] for r in range(m)]
+        shape = [s + 1 for s in sizes]
+        strides = [0] * m
+        strides[m - 1] = 1
+        for r in range(m - 2, -1, -1):
+            strides[r] = strides[r + 1] * shape[r + 1]
+        n_states = strides[0] * shape[0]
+        target = n_states - 1
+        if target == 0:
+            return [], 0.0
+        flat = np.arange(n_states)
+        pos = [(flat // strides[r]) % shape[r] for r in range(m)]
+        apos = [pos[r] + lo[r] for r in range(m)]   # absolute chain position
+        tsum = pos[0].copy()
+        for r in range(1, m):
+            tsum += pos[r]
+        order = np.argsort(tsum, kind="stable")
+        counts = np.bincount(tsum, minlength=sum(sizes) + 1)
+        offs = np.concatenate(([0], np.cumsum(counts)))
+        can = [pos[r] < sizes[r] for r in range(m)]
+        sk = [self.solo[r][0] for r in range(m)]
+        subsets = []    # (bits, reqs, delta, key_table_flat, table_shape)
+        for bits in range(1, 1 << m):
+            reqs = tuple(r for r in range(m) if bits & (1 << r))
+            if any(sizes[r] == 0 for r in reqs):
+                continue        # a finished request can never advance
+            delta = sum(strides[r] for r in reqs)
+            if len(reqs) == 1:
+                subsets.append((bits, reqs, delta, None, None))
+            else:
+                tab = self.tables(reqs)[0]
+                subsets.append((bits, reqs, delta, tab.ravel(), tab.shape))
+
+        dist = np.full(n_states, np.inf)
+        act = np.zeros(n_states, dtype=np.int32)    # subset bitmask taken
+        dist[0] = 0.0
+        for t in range(len(offs) - 2):      # the last diagonal is the target
+            seg = order[offs[t]:offs[t + 1]]
+            dseg = dist[seg]
+            for bits, reqs, delta, kflat, tshape in subsets:
+                valid = can[reqs[0]][seg]
+                for r in reqs[1:]:
+                    valid = valid & can[r][seg]
+                sv = seg[valid]
+                if not sv.size:
+                    continue
+                gv = dseg[valid]
+                if kflat is None:
+                    r0 = reqs[0]
+                    key = sk[r0][apos[r0][sv]]
+                else:
+                    idx = self.sigs[reqs[0]][apos[reqs[0]][sv]]
+                    for r, sdim in zip(reqs[1:], tshape[1:]):
+                        idx = idx * sdim + self.sigs[r][apos[r][sv]]
+                    key = kflat[idx]
+                nd = gv + key
+                nst = sv + delta
+                better = nd < dist[nst]
+                if better.any():
+                    b = nst[better]
+                    dist[b] = nd[better]
+                    act[b] = bits
+        if not np.isfinite(dist[target]):  # pragma: no cover - gated above
+            raise InfeasibleScheduleError(
+                "grid sweep exhausted without reaching the all-requests-"
+                "complete state (every op passed the per-PU support gate, "
+                "so this indicates an internal inconsistency)")
+
+        # reconstruct target -> start (energy accumulated in that order,
+        # like the pair A* and the retained heap grid A*)
+        by_bits = {bits: (reqs, delta) for bits, reqs, delta, _, _ in subsets}
+        steps: list[ConcurrentStep] = []
+        energy = 0.0
+        posv = list(sizes)
+        s = target
+        while s != 0:
+            bits = int(act[s])
+            if bits == 0:  # pragma: no cover - corrupt predecessor chain
+                raise RuntimeError(f"grid sweep: no action recorded at {posv}")
+            reqs, delta = by_bits[bits]
+            for r in reqs:
+                posv[r] -= 1
+            s -= delta
+            ops: list[int | None] = [None] * m
+            pus_: list[str | None] = [None] * m
+            if len(reqs) == 1:
+                r = reqs[0]
+                ap = lo[r] + posv[r]
+                _, sarg, sw, se = self.solo[r]
+                ops[r] = self.wls[r].chain[ap]
+                pus_[r] = self.pu_lists[r][int(sarg[ap])]
+                cost = float(sw[ap])
+                energy += float(se[ap])
+            else:
+                _, ps, pe, pa = self.tables(reqs)
+                key = tuple(int(self.sigs[r][lo[r] + posv[r]]) for r in reqs)
+                cost = float(ps[key])
+                energy += float(pe[key])
+                ci = int(pa[key])
+                combo: list[int] = []
+                for r in reversed(reqs):
+                    ci, j = divmod(ci, self.denses[r].k)
+                    combo.append(j)
+                combo.reverse()
+                for r, j in zip(reqs, combo):
+                    ops[r] = self.wls[r].chain[lo[r] + posv[r]]
+                    pus_[r] = self.pu_lists[r][j]
+            steps.append(ConcurrentStep(ops=tuple(ops), pus=tuple(pus_),
+                                        cost=cost))
+        steps.reverse()
+        return steps, energy
+
+
 def _solve_concurrent_grid(
+    wls: Sequence[Workload], cm: ContentionModel, objective: str,
+    caches: ConcurrentCaches | None = None,
+) -> ConcurrentSchedule:
+    """Exact vectorized anti-diagonal sweep of the M-dimensional progress
+    grid (see :meth:`_GridContext.sweep`).  Singleton advances are priced
+    from the dense solo-edge arrays; group advances gather from the
+    per-(subset, signature-tuple) edge tables built once per solve."""
+    ctx = _GridContext(wls, cm, objective, caches)
+    steps, energy = ctx.sweep([0] * len(wls), [wl.n for wl in wls])
+    latency = sum(st.cost for st in steps)
+    return ConcurrentSchedule(steps=steps, latency=latency, energy=energy,
+                              objective=objective, mode="joint-grid")
+
+
+def _window_lengths(rem: Sequence[int], budget: int) -> list[int]:
+    """Rolling-horizon window lengths: the largest proportional scaling
+    of the remaining chain lengths whose window sub-grid fits ``budget``
+    states.  Every unfinished request advances at least one op per
+    window (the progress guarantee; with many requests and a tiny budget
+    that floor may overshoot the budget slightly)."""
+    if math.prod(r + 1 for r in rem) <= budget:
+        return list(rem)                   # final window: exact to the end
+
+    def scaled(a: float) -> list[int]:
+        return [min(r, max(1, int(a * r))) if r else 0 for r in rem]
+
+    lo_a, hi_a = 0.0, 1.0
+    for _ in range(40):
+        mid = 0.5 * (lo_a + hi_a)
+        if math.prod(x + 1 for x in scaled(mid)) <= budget:
+            lo_a = mid
+        else:
+            hi_a = mid
+    return scaled(lo_a)
+
+
+# the rolling route's shared group tables cover the requests' full
+# signature alphabets; a near-unique-signature profile (e.g. measured
+# tables where every op times differently) could make them larger than
+# the windows they serve — ``solve_concurrent`` routes such instances to
+# the pairwise merge under "auto" and rejects a forced "rolling" loudly.
+# Each signature tuple retains 2 objectives x 4 float64/int64 cells
+# (64 B) in the dominant all-requests table, so the cap bounds the
+# memoized footprint to ~64 MB — the same order as a max_states-sized
+# sweep's per-state arrays (zoo alphabets are orders of magnitude below)
+_ROLLING_TABLE_CAP = 1_000_000
+
+
+def _group_table_states(wls: Sequence[Workload]) -> int:
+    """Signature tuples of the largest (all-requests) group-edge table —
+    the dominant term of the rolling route's shared-table footprint."""
+    return math.prod(wl.dense.n_sig for wl in wls)
+
+
+def _solve_concurrent_rolling(
+    wls: Sequence[Workload], cm: ContentionModel, objective: str,
+    caches: ConcurrentCaches | None = None,
+    window_states: int = DEFAULT_WINDOW_STATES,
+) -> ConcurrentSchedule:
+    """Rolling-horizon merge for grids beyond the exact-solve ceiling.
+
+    The next window of ops across ALL M requests — window lengths
+    proportional to each request's remaining chain, bounded to
+    ``window_states`` grid states — is co-scheduled with the exact
+    vectorized sweep, and windows are stitched back-to-back.  Each
+    stitched schedule is a feasible path of the full progress grid, so
+    its cost upper-bounds the exact grid optimum; unlike the pairwise
+    merge it keeps ops of *every* request available for co-execution at
+    all times instead of serializing disjoint pairs.
+    """
+    m = len(wls)
+    ctx = _GridContext(wls, cm, objective, caches)
+    ns = [wl.n for wl in wls]
+    done = [0] * m
+    steps: list[ConcurrentStep] = []
+    energy = 0.0
+    while any(done[r] < ns[r] for r in range(m)):
+        rem = [ns[r] - done[r] for r in range(m)]
+        w = _window_lengths(rem, window_states)
+        hi = [done[r] + w[r] for r in range(m)]
+        wsteps, weng = ctx.sweep(done, hi)
+        steps.extend(wsteps)
+        energy += weng
+        done = hi
+    latency = sum(st.cost for st in steps)
+    return ConcurrentSchedule(steps=steps, latency=latency, energy=energy,
+                              objective=objective, mode="rolling")
+
+
+def _solve_concurrent_grid_astar(
     wls: Sequence[Workload], cm: ContentionModel, objective: str,
     group_memo: dict | None = None,
 ) -> ConcurrentSchedule:
-    """Exact A* on the M-dimensional progress grid.
+    """Retained heap A* on the M-dimensional progress grid (the
+    pre-vectorization implementation, kept as the equivalence oracle for
+    the anti-diagonal sweep — ``algorithm="grid_astar"``).
 
     Same structure as the pair A*: singleton advances use the per-request
     solo edges; subset advances of size >= 2 are priced by the group
@@ -988,10 +1340,7 @@ def _solve_concurrent_grid(
     denses = [wl.dense for wl in wls]
     ns = [d.n for d in denses]
     solo = [_solo_edges(d, objective) for d in denses]
-    for d, s in zip(denses, solo):
-        if not np.isfinite(s[0]).all():
-            # some op unsupported on every PU: no transition can advance it
-            raise ValueError("joint search failed to reach target state")
+    _require_all_advanceable(wls, [s[0] for s in solo])
     sigs = [d.sig.tolist() for d in denses]
     sk = [s[0].tolist() for s in solo]
     scale = cm.min_factor()
@@ -1104,8 +1453,11 @@ def _solve_concurrent_grid(
                 act[nst] = bits
                 heapq.heappush(
                     heap, (int((nd + hs[nst]) * inv_q), -nd, nst))
-    if not found:
-        raise ValueError("joint search failed to reach target state")
+    if not found:  # pragma: no cover - gated by _require_all_advanceable
+        raise InfeasibleScheduleError(
+            "grid A* exhausted without reaching the all-requests-complete "
+            "state (every op passed the per-PU support gate, so this "
+            "indicates an internal inconsistency)")
 
     # reconstruct target -> start
     steps: list[ConcurrentStep] = []
@@ -1162,10 +1514,11 @@ def _solve_concurrent_pairwise(
     co-execute) whose cost upper-bounds the exact grid optimum.
     """
     m = len(wls)
-    totals = []
-    for wl in wls:
-        skr = _solo_edges(wl.dense, objective)[0]
-        totals.append(float(np.sum(skr)))  # inf propagates -> solver raises
+    solo_keys = [_solo_edges(wl.dense, objective)[0] for wl in wls]
+    # an unadvanceable op would otherwise sort its request first (inf
+    # total) and surface later as the pair solver's opaque error
+    _require_all_advanceable(wls, solo_keys)
+    totals = [float(np.sum(skr)) for skr in solo_keys]
     order = sorted(range(m), key=lambda r: (-totals[r], r))
     steps: list[ConcurrentStep] = []
     latency = 0.0

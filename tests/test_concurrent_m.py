@@ -205,11 +205,15 @@ def test_pairwise_fallback_upper_bounds_grid(objective):
         assert [o for o, _ in pw.assignment_of(r)] == wl.chain
 
 
-def test_auto_routes_large_grids_to_pairwise():
+def test_auto_routes_large_grids_to_rolling():
+    """Grids beyond max_states now roll a bounded-window exact sweep
+    instead of serializing pairs; the exact grid still lower-bounds it."""
     rng = np.random.default_rng(8)
     wls = [random_workload(rng, 9) for _ in range(3)]
     sched = solve_concurrent(wls, ContentionModel(), max_states=100)
-    assert sched.mode == "pairwise"
+    assert sched.mode == "rolling"
+    for r, wl in enumerate(wls):        # a real schedule: every op covered
+        assert [o for o, _ in sched.assignment_of(r)] == wl.chain
     sched2 = solve_concurrent(wls, ContentionModel(), max_states=10**6)
     assert sched2.mode == "joint-grid"
     assert sched2.latency <= sched.latency * (1 + 1e-9)
@@ -251,7 +255,13 @@ def test_m1_solo_walk():
     assert sched.latency == pytest.approx(best, rel=1e-12)
 
 
-def test_unsupported_op_raises():
+def test_unsupported_op_raises_with_context():
+    """An all-PU-masked op in an M=3 workload must raise
+    ``InfeasibleScheduleError`` naming the request index, the op, and
+    its chain position — on every concurrent route — instead of the old
+    bare 'joint search failed to reach target state'."""
+    from repro.core import InfeasibleScheduleError
+
     table = CostTable(list(PUS))
     ops = [FusedOp(name="a", kind="other", out_shape=(4,)),
            FusedOp(name="b", kind="other", out_shape=(4,))]
@@ -262,8 +272,10 @@ def test_unsupported_op_raises():
                       pus=EDGE_PUS, ops=ops, table=table)
     rng = np.random.default_rng(1)
     wl_ok = random_workload(rng, 3, drop_frac=0.0)
-    with pytest.raises(ValueError, match="joint search failed"):
-        solve_concurrent([wl_bad, wl_ok, wl_ok], algorithm="grid")
+    for algo in ("grid", "grid_astar", "rolling", "pairwise"):
+        with pytest.raises(InfeasibleScheduleError,
+                           match=r"request 1: op 1 \(b\) at chain position 1"):
+            solve_concurrent([wl_ok, wl_bad, wl_ok], algorithm=algo)
 
 
 # ---------------------------------------------------------------------------
@@ -348,7 +360,7 @@ def test_shared_caches_match_fresh_solves(objective):
     cm = ContentionModel()
     rng = np.random.default_rng(33)
     wls = [random_workload(rng, int(rng.integers(2, 5))) for _ in range(3)]
-    for algo in ("grid", "pairwise"):
+    for algo in ("grid", "grid_astar", "rolling", "pairwise"):
         caches = ConcurrentCaches()
         first = solve_concurrent(wls, cm, "latency", algorithm=algo)
         warm = solve_concurrent(wls, cm, "latency", algorithm=algo,

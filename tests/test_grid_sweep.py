@@ -1,0 +1,399 @@
+"""Vectorized M-model frontier sweep + rolling-horizon merge.
+
+* The batched group co-execution laws
+  (``ContentionModel.group_step_cost_batch`` / ``group_energy_batch``)
+  and the per-(subset, signature-tuple) ``GroupCostCache`` tables must
+  match the scalar laws **element-for-element** (bitwise — same
+  accumulation order, same first-minimum PU-combo tie-break).
+* The anti-diagonal sweep (``algorithm="grid"``) must be equivalent to
+  the retained heap A* (``algorithm="grid_astar"``) on shared M=3/M=4
+  instances: bitwise objective value and identical per-request op→PU
+  routes under the latency objective; under the energy objective the
+  group laws create *structural* FP-tie plateaus (a same-PU group step
+  costs exactly the solo steps' energy sum), where the heap A* is exact
+  only to its 2-quanta priority quantization while the sweep returns the
+  exact FP minimum — there the sweep must never be worse and must agree
+  to FP noise with identical per-request assignments.
+* The rolling-horizon merge upper-bounds the exact grid optimum, covers
+  every op exactly once, collapses to the grid solve bitwise when a
+  single window suffices, and beats the back-to-back pairwise merge on
+  a constructed 4-model case with disjoint PU affinities.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (ContentionModel, CostEntry, CostTable,
+                        DenseCostTable, EDGE_PUS, FusedOp, GroupCostCache,
+                        InfeasibleScheduleError, Workload, solve_concurrent)
+
+PUS = ("CPU", "GPU", "NPU")
+
+
+def random_workload(rng, n_ops, drop_frac=0.25):
+    table = CostTable(list(PUS))
+    ops = []
+    for i in range(n_ops):
+        ops.append(FusedOp(name=f"o{i}", kind="other", out_shape=(4,)))
+        sup = [p for p in PUS if rng.random() > drop_frac]
+        if not sup:
+            sup = [PUS[int(rng.integers(len(PUS)))]]
+        for pu in sup:
+            table.set(i, pu, CostEntry(
+                kernel=float(rng.uniform(1e-6, 1e-3)),
+                dispatch=float(rng.uniform(0, 1e-5)),
+                h2d=float(rng.uniform(0, 1e-4)),
+                d2h=float(rng.uniform(0, 1e-4)),
+                power=float(rng.uniform(5.0, 30.0))))
+    return Workload.build(list(range(n_ops)), table, EDGE_PUS, ops=ops)
+
+
+def single_pu_workload(pu, n_ops, kernel, power=10.0):
+    """A chain supported on exactly one PU (strict affinity)."""
+    table = CostTable(list(PUS))
+    ops = []
+    for i in range(n_ops):
+        ops.append(FusedOp(name=f"{pu}{i}", kind="other", out_shape=(4,)))
+        table.set(i, pu, CostEntry(kernel=kernel, dispatch=0.0, h2d=0.0,
+                                   d2h=0.0, power=power))
+    return Workload.build(list(range(n_ops)), table, EDGE_PUS, ops=ops)
+
+
+def objective_key(sched, objective):
+    return sched.latency if objective == "latency" else sched.energy
+
+
+# ---------------------------------------------------------------------------
+# batched group laws == scalar group laws, element for element
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("g", [2, 3, 4])
+def test_batched_group_laws_match_scalar_elementwise(g):
+    cm = ContentionModel()
+    rng = np.random.default_rng(100 + g)
+    for _ in range(20):
+        pus_ = [PUS[int(i)] for i in rng.integers(0, 3, g)]
+        ts = rng.uniform(1e-6, 1e-3, (50, g))
+        pws = rng.uniform(5.0, 30.0, (50, g))
+        got_c = cm.group_step_cost_batch(ts, pus_)
+        got_e = cm.group_energy_batch(ts, pws, pus_)
+        for b in range(ts.shape[0]):
+            want_c = cm.group_step_cost(list(ts[b]), pus_)
+            want_e = cm.group_energy(list(ts[b]), list(pws[b]), pus_)
+            assert got_c[b] == want_c          # bitwise
+            assert got_e[b] == want_e          # bitwise
+
+
+def _scalar_group_edges(cm, denses):
+    """Independent scalar re-derivation of the per-signature-tuple group
+    edges (the heap A*'s per-state enumeration): first-minimum over
+    supported PU combos in lexicographic order, both objectives."""
+    rows = [d.sig_row for d in denses]
+    out = {}
+    for sig_key in itertools.product(*[range(len(r)) for r in rows]):
+        sups = []
+        for d, r, s in zip(denses, rows, sig_key):
+            sups.append(list(np.flatnonzero(d.mask[r[s]])))
+        inf = float("inf")
+        best_l = best_e = (inf, inf, inf, None)
+        for combo in itertools.product(*sups):
+            ts = [float(d.w[r[s], j])
+                  for d, r, s, j in zip(denses, rows, sig_key, combo)]
+            pws = [float(d.power[r[s], j])
+                   for d, r, s, j in zip(denses, rows, sig_key, combo)]
+            pnames = [d.pus[j] for d, j in zip(denses, combo)]
+            step = cm.group_step_cost(ts, pnames)
+            e = cm.group_energy(ts, pws, pnames)
+            if step < best_l[0]:
+                best_l = (step, step, e, combo)
+            if e < best_e[0]:
+                best_e = (e, step, e, combo)
+        out[sig_key] = (best_l, best_e)
+    return out
+
+
+@pytest.mark.parametrize("g", [2, 3])
+def test_group_cost_cache_matches_scalar_enumeration(g):
+    cm = ContentionModel()
+    rng = np.random.default_rng(200 + g)
+    wls = [random_workload(rng, int(rng.integers(3, 7))) for _ in range(g)]
+    denses = [wl.dense for wl in wls]
+    cache = GroupCostCache(cm, denses)
+    want = _scalar_group_edges(cm, denses)
+    for oi, objective in enumerate(("latency", "energy")):
+        pk, ps, pe, pa = cache.edge_tables(objective)
+        for sig_key, bests in want.items():
+            wk, wstep, weng, wcombo = bests[oi]
+            assert pk[sig_key] == wk           # bitwise
+            assert ps[sig_key] == wstep
+            assert pe[sig_key] == weng
+            ci = int(pa[sig_key])
+            combo = []
+            for d in reversed(denses):
+                ci, j = divmod(ci, d.k)
+                combo.append(j)
+            combo.reverse()
+            assert tuple(combo) == wcombo      # same first-minimum combo
+
+
+def test_group_cost_cache_rejects_singletons():
+    rng = np.random.default_rng(3)
+    wl = random_workload(rng, 3)
+    with pytest.raises(ValueError, match=">= 2"):
+        GroupCostCache(ContentionModel(), [wl.dense])
+
+
+# ---------------------------------------------------------------------------
+# vectorized sweep vs retained heap A*
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(10))
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_sweep_equivalent_to_heap_astar(seed, objective):
+    rng = np.random.default_rng(seed)
+    m = 3 if seed % 2 == 0 else 4
+    hi = 8 if m == 3 else 6
+    wls = [random_workload(rng, int(rng.integers(2, hi))) for _ in range(m)]
+    cm = ContentionModel()
+    sweep = solve_concurrent(wls, cm, objective, algorithm="grid")
+    astar = solve_concurrent(wls, cm, objective, algorithm="grid_astar")
+    assert sweep.mode == astar.mode == "joint-grid"
+    ks, ka = objective_key(sweep, objective), objective_key(astar, objective)
+    # the sweep is the exact FP optimum; the heap A* is exact up to its
+    # 2-quanta priority quantization — never better than the sweep
+    assert ks <= ka * (1 + 1e-12)
+    if objective == "latency":
+        assert sweep.latency == astar.latency          # bitwise
+        assert sweep.energy == pytest.approx(astar.energy, rel=1e-12)
+    else:
+        # energy mode has structural exact ties (a same-PU group step
+        # costs exactly the solo steps' energy sum), so equally-optimal
+        # grouping structures can differ by accumulated FP rounding
+        assert sweep.energy == pytest.approx(astar.energy, rel=1e-11)
+        assert sweep.latency == pytest.approx(astar.latency, rel=1e-11)
+    for r in range(m):
+        assert sweep.assignment_of(r) == astar.assignment_of(r)
+
+
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_sweep_latency_route_bitwise_on_tie_free_instance(objective):
+    """On a tie-free instance the two algorithms must return the same
+    schedule step for step (not just the same objective value)."""
+    rng = np.random.default_rng(77)
+    wls = [random_workload(rng, n, drop_frac=0.0) for n in (4, 3, 5)]
+    cm = ContentionModel()
+    sweep = solve_concurrent(wls, cm, objective, algorithm="grid")
+    astar = solve_concurrent(wls, cm, objective, algorithm="grid_astar")
+    if objective == "latency":
+        assert ([(s.ops, s.pus, s.cost) for s in sweep.steps]
+                == [(s.ops, s.pus, s.cost) for s in astar.steps])
+        assert (sweep.latency, sweep.energy) == (astar.latency, astar.energy)
+    for r in range(3):
+        assert sweep.assignment_of(r) == astar.assignment_of(r)
+
+
+def test_sweep_handles_m2_and_m4_shapes():
+    rng = np.random.default_rng(11)
+    cm = ContentionModel()
+    for m in (2, 4):
+        wls = [random_workload(rng, int(rng.integers(1, 5)))
+               for _ in range(m)]
+        sched = solve_concurrent(wls, cm, algorithm="grid")
+        assert sched.n_requests == m
+        for r, wl in enumerate(wls):
+            assert [o for o, _ in sched.assignment_of(r)] == wl.chain
+
+
+# ---------------------------------------------------------------------------
+# rolling-horizon merge
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_rolling_single_window_is_bitwise_the_grid_solve(objective):
+    """When one window covers all remaining ops, rolling IS the exact
+    grid sweep — bitwise."""
+    rng = np.random.default_rng(21)
+    wls = [random_workload(rng, int(rng.integers(2, 5))) for _ in range(3)]
+    cm = ContentionModel()
+    grid = solve_concurrent(wls, cm, objective, algorithm="grid")
+    roll = solve_concurrent(wls, cm, objective, algorithm="rolling")
+    assert roll.mode == "rolling"
+    assert (roll.latency, roll.energy) == (grid.latency, grid.energy)
+    assert ([(s.ops, s.pus, s.cost) for s in roll.steps]
+            == [(s.ops, s.pus, s.cost) for s in grid.steps])
+
+
+@pytest.mark.parametrize("seed", range(5))
+@pytest.mark.parametrize("objective", ["latency", "energy"])
+def test_rolling_multiwindow_upper_bounds_grid_and_covers(seed, objective):
+    rng = np.random.default_rng(400 + seed)
+    wls = [random_workload(rng, int(rng.integers(5, 10))) for _ in range(3)]
+    cm = ContentionModel()
+    grid = solve_concurrent(wls, cm, objective, algorithm="grid",
+                            max_states=10**6)
+    roll = solve_concurrent(wls, cm, objective, algorithm="rolling",
+                            window_states=60)   # forces several windows
+    assert roll.mode == "rolling"
+    assert objective_key(grid, objective) <= (
+        objective_key(roll, objective) * (1 + 1e-9))
+    for r, wl in enumerate(wls):
+        assert [o for o, _ in roll.assignment_of(r)] == wl.chain
+
+
+def test_rolling_beats_pairwise_on_disjoint_affinity_quad():
+    """Four requests with strict PU affinities (CPU, CPU, GPU, NPU): the
+    pairwise merge pairs the two long CPU-bound requests (descending
+    totals) and must serialize them on the CPU queue, then run the
+    GPU/NPU pair in a separate back-to-back stage; the rolling horizon
+    co-schedules all four, overlapping the GPU and NPU chains with the
+    serialized CPU queue.  Exact grid <= rolling < pairwise, strictly."""
+    cm = ContentionModel()
+    wls = [single_pu_workload("CPU", 8, 1.0e-3),
+           single_pu_workload("CPU", 8, 0.99e-3),
+           single_pu_workload("GPU", 8, 0.9e-3),
+           single_pu_workload("NPU", 8, 0.8e-3)]
+    grid = solve_concurrent(wls, cm, algorithm="grid", max_states=10**6)
+    roll = solve_concurrent(wls, cm, algorithm="rolling", window_states=100)
+    pw = solve_concurrent(wls, cm, algorithm="pairwise")
+    assert grid.latency <= roll.latency * (1 + 1e-9)
+    assert roll.latency < pw.latency * 0.95     # clearly, not marginally
+    for r, wl in enumerate(wls):
+        assert [o for o, _ in roll.assignment_of(r)] == wl.chain
+
+
+def test_rolling_schedule_executes_bitwise_vs_isolated():
+    """A multi-window rolling schedule run across the shared PU lanes
+    must produce outputs identical to isolated per-model execution."""
+    from repro.core import EdgeSoCCostModel, OpGraph, ScheduleExecutor
+
+    rng = np.random.default_rng(0)
+    graphs, inputs = [], []
+    for r in range(3):
+        ops = []
+        for i in range(6):
+            w = rng.standard_normal((16, 16)) / 4.0
+            ops.append(FusedOp(
+                name=f"m{r}.{i}", kind="matmul",
+                in_shapes=((4, 16), (16, 16)), out_shape=(4, 16),
+                fn=(lambda wi: lambda x: np.tanh(x @ wi))(w)))
+        graphs.append(OpGraph(ops))
+        inputs.append({0: (rng.standard_normal((4, 16)),)})
+    model = EdgeSoCCostModel()
+    wls = [Workload.build(list(range(len(g))), model.build_table(g),
+                          EDGE_PUS, ops=g.ops) for g in graphs]
+    sched = solve_concurrent(wls, ContentionModel(), algorithm="rolling",
+                             window_states=30)    # forces several windows
+    assert sched.mode == "rolling"
+    ex = ScheduleExecutor(list(EDGE_PUS))
+    conc = ex.run_concurrent(graphs, sched, inputs)
+    for g, x, got in zip(graphs, inputs, conc):
+        mono = ex.run_monolithic(g, x)
+        assert ScheduleExecutor.outputs_close(mono, got)   # bitwise
+
+
+def test_forced_algorithm_on_single_request_raises():
+    """M=1 has no concurrent search to route: forcing any algorithm must
+    raise instead of silently returning the unconstrained solo walk, and
+    unknown algorithm names must never pass the M=1/M=2 early-outs."""
+    rng = np.random.default_rng(17)
+    wl = random_workload(rng, 4, drop_frac=0.0)
+    for algo in ("grid", "grid_astar", "rolling", "pairwise"):
+        with pytest.raises(ValueError, match="solo best-PU walk"):
+            solve_concurrent([wl], algorithm=algo)
+    with pytest.raises(ValueError, match="bogus"):
+        solve_concurrent([wl], algorithm="bogus")
+    with pytest.raises(ValueError, match="bogus"):
+        solve_concurrent([wl, wl], algorithm="bogus")
+    with pytest.raises(ValueError, match="solo best-PU walk"):
+        solve_concurrent([wl], max_states=100)
+
+
+def test_max_states_on_pair_fast_path_raises():
+    """M=2 auto dispatches to the pair A*, which max_states cannot
+    bound — passing it must raise, not be silently dropped; the forced
+    state-bounded routes still honour it."""
+    rng = np.random.default_rng(18)
+    wl0, wl1 = (random_workload(rng, 5, drop_frac=0.0) for _ in range(2))
+    cm = ContentionModel()
+    with pytest.raises(ValueError, match="pair A\\* fast path"):
+        solve_concurrent([wl0, wl1], cm, max_states=10**6)
+    sched = solve_concurrent([wl0, wl1], cm, algorithm="grid",
+                             max_states=10**6)
+    assert sched.mode == "joint-grid"
+    with pytest.raises(ValueError, match="max_states"):
+        solve_concurrent([wl0, wl1], cm, algorithm="grid", max_states=5)
+
+
+def test_forced_rolling_never_silently_downgrades_to_pairwise():
+    """Near-unique per-op signatures (a measured-profile shape) make the
+    rolling route's shared group tables enormous: auto falls back to the
+    pairwise merge, but a *forced* algorithm='rolling' must raise rather
+    than silently return a pairwise schedule."""
+    rng = np.random.default_rng(31)
+    # ~170 unique signatures each -> 171^3 > 4M table cap (and > the
+    # default exact-solve state ceiling, so auto reaches the same gate)
+    wls = [random_workload(rng, 170, drop_frac=0.0) for _ in range(3)]
+    cm = ContentionModel()
+    with pytest.raises(ValueError, match="table cap"):
+        solve_concurrent(wls, cm, algorithm="rolling")
+    sched = solve_concurrent(wls, cm)          # auto: documented fallback
+    assert sched.mode == "pairwise"
+
+
+def test_rolling_rejects_custom_group_laws():
+    class Harsh(ContentionModel):
+        def co_exec(self, t_a, pu_a, t_b, pu_b):
+            return 10.0 * t_a, 10.0 * t_b
+
+    rng = np.random.default_rng(5)
+    wls = [random_workload(rng, 3, drop_frac=0.0) for _ in range(3)]
+    with pytest.raises(ValueError, match="group co-execution"):
+        solve_concurrent(wls, Harsh(), algorithm="rolling")
+
+
+def test_custom_batch_law_override_routes_away_from_sweep():
+    """Overriding only the batched law must disqualify the grid sweep
+    (it would silently disagree with the scalar laws otherwise)."""
+    class Odd(ContentionModel):
+        def group_step_cost_batch(self, ts, pus_):
+            return super().group_step_cost_batch(ts, pus_) * 2.0
+
+    rng = np.random.default_rng(6)
+    wls = [random_workload(rng, 3, drop_frac=0.0) for _ in range(3)]
+    sched = solve_concurrent(wls, Odd())
+    assert sched.mode == "pairwise"
+
+
+# ---------------------------------------------------------------------------
+# infeasibility reporting (regression: bare 'joint search failed...')
+# ---------------------------------------------------------------------------
+
+
+def test_all_pu_masked_op_names_request_op_and_position():
+    """M=3 workload whose middle request has an op masked on every PU:
+    every concurrent route raises InfeasibleScheduleError naming the
+    request index, op id/name, and chain position."""
+    table = CostTable(list(PUS))
+    ops = []
+    for i in range(4):
+        ops.append(FusedOp(name=f"x{i}", kind="other", out_shape=(4,)))
+        if i != 2:                      # op 2 unsupported everywhere
+            for pu in PUS:
+                table.set(i, pu, CostEntry(1e-4, 1e-6, 0.0, 0.0, 10.0))
+    wl_bad = Workload(chain=[0, 1, 2, 3],
+                      dense=DenseCostTable.from_chain([0, 1, 2, 3], table,
+                                                      EDGE_PUS),
+                      pus=EDGE_PUS, ops=ops, table=table)
+    rng = np.random.default_rng(9)
+    wl_ok = random_workload(rng, 3, drop_frac=0.0)
+    for algo in ("grid", "grid_astar", "rolling", "pairwise", "auto"):
+        with pytest.raises(InfeasibleScheduleError) as ei:
+            solve_concurrent([wl_ok, wl_bad, wl_ok], algorithm=algo)
+        msg = str(ei.value)
+        assert "request 1" in msg
+        assert "op 2 (x2)" in msg
+        assert "chain position 2" in msg

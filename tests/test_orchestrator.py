@@ -93,6 +93,75 @@ def test_plan_aligned_equals_direct_solve(model):
     assert plan.schedule.mode == "aligned"
 
 
+@pytest.mark.parametrize("algorithm", ["grid", "grid_astar", "rolling",
+                                       "pairwise"])
+def test_plan_algorithm_knob_equals_direct_solve(model, algorithm):
+    """The front-door algorithm/max_states knobs must reach
+    solve_concurrent verbatim — plans bitwise-identical to direct calls."""
+    graphs = [_chain_graph(6, seed=r) for r in range(3)]
+    orch = Orchestrator(model)
+    hs = [orch.register(g) for g in graphs]
+    plan = orch.plan(hs, algorithm=algorithm, max_states=10**6)
+    wls = [Workload.build(g.topo_order(), model.build_table(g), EDGE_PUS,
+                          ops=g.ops) for g in graphs]
+    direct = solve_concurrent(wls, orch.contention, algorithm=algorithm,
+                              max_states=10**6)
+    assert plan.schedule == direct
+    assert plan.schedule.mode == direct.mode
+
+
+def test_plan_caches_grid_and_pairwise_separately(model):
+    """A forced-pairwise plan must never be served a cached grid plan
+    (and vice versa): algorithm/max_states are part of the cache key."""
+    graphs = [_chain_graph(6, seed=r) for r in range(3)]
+    orch = Orchestrator(model)
+    hs = [orch.register(g) for g in graphs]
+    grid = orch.plan(hs, algorithm="grid")
+    pw = orch.plan(hs, algorithm="pairwise")
+    assert orch.stats["misses"] == 2 and orch.stats["hits"] == 0
+    assert grid.schedule.mode == "joint-grid"
+    assert pw.schedule.mode == "pairwise"
+    # repeats of either are cache hits serving the matching schedule
+    assert orch.plan(hs, algorithm="grid").schedule is grid.schedule
+    assert orch.plan(hs, algorithm="pairwise").schedule is pw.schedule
+    assert orch.stats["hits"] == 2
+    # a different max_states is a different plan too (routing boundary)
+    small = orch.plan(hs, max_states=10)
+    assert small.schedule.mode == "rolling"
+    assert orch.stats["misses"] == 3
+    # default-knob plans are yet another entry, served independently
+    auto = orch.plan(hs)
+    assert auto.schedule.mode == "joint-grid"
+    assert orch.stats["misses"] == 4
+
+
+def test_plan_rejects_concurrent_knobs_on_other_modes(model):
+    g = _chain_graph()
+    orch = Orchestrator(model)
+    h = orch.register(g)
+    with pytest.raises(ValueError, match="concurrent"):
+        orch.plan(h, algorithm="grid")               # sequential route
+    with pytest.raises(ValueError, match="concurrent"):
+        orch.plan(h, max_states=100)
+    with pytest.raises(ValueError, match="concurrent"):
+        orch.plan((h, h), mode="aligned", algorithm="pairwise")
+    with pytest.raises(ValueError, match="unknown algorithm"):
+        orch.plan((h, h), algorithm="quantum")
+    with pytest.raises(ValueError, match="max_states"):
+        orch.plan((h, h), max_states=0)
+    # a single-request "concurrent" plan is a solo walk: the knobs have
+    # nothing to route and must be rejected, not silently ignored
+    with pytest.raises(ValueError, match="solo"):
+        orch.plan(h, mode="concurrent", algorithm="grid_astar")
+    with pytest.raises(ValueError, match="solo"):
+        orch.plan(h, mode="concurrent", max_states=50)
+    # ... and the M=2 pair fast path is not state-bounded: an explicit
+    # max_states surfaces the solver's descriptive rejection
+    with pytest.raises(ValueError, match="pair A\\*"):
+        orch.plan((h, orch.register(_chain_graph(6, seed=1))),
+                  max_states=10**6)
+
+
 # ---------------------------------------------------------------------------
 # plan caching
 # ---------------------------------------------------------------------------
