@@ -1,0 +1,224 @@
+"""Executor micro-benchmark: per-op dispatch overhead, interpreted vs
+compiled lane programs.
+
+After PRs 1-4 made *planning* ms-scale, per-op execution overhead (one
+Python closure dispatch + one ``threading.Event`` wait/set per op) became
+the dominant runtime cost — exactly the overhead the paper says the
+execution orchestrator must not add.  This benchmark pins it down across
+the fig8 zoo chains plus an M=3 concurrent run:
+
+* **interpreted** — ``Orchestrator.execute(..., compile=False)``, the
+  per-op event-synced oracle;
+* **compiled cold** — first ``execute`` through the compiled path
+  (segment partitioning + per-segment ``jax.jit`` + bitwise verify);
+* **compiled warm** — repeat ``execute`` hitting the orchestrator's
+  program cache (the serving steady state).
+
+Every op carries a tiny uniform-shape JAX payload, so wall-clock divided
+by op count isolates dispatch/synchronisation overhead rather than
+kernel time.  Checks (recorded in ``BENCH_exec.json``): warm compiled
+per-op overhead must be >= 5x lower than interpreted (geomean), and
+compiled outputs must be bitwise identical to ``run_monolithic`` on
+every model exercised — the bitwise gate holds even under ``--smoke``.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import operator
+import time
+
+import jax.numpy as jnp
+
+from repro.core import (EDGE_PUS, EdgeSoCCostModel, FusedOp, OpGraph,
+                        Orchestrator, results_bitwise_equal)
+from repro.core.paperzoo import zoo
+
+from .common import geomean
+
+ZOO_MODELS = ["ResNet-50 FP16", "BitNet FP16", "LLaMA-7B(1L) FP16",
+              "Mamba-370M FP16", "ViT-B/16 FP16"]
+SMOKE_MODELS = ["BitNet FP16", "LLaMA-7B(1L) FP16"]
+DIM = 8                      # payload shape (DIM, DIM) f32 for every op
+OVERHEAD_TARGET = 5.0        # warm compiled must beat interpreted by this
+
+
+def attach_payloads(g: OpGraph) -> dict[int, tuple]:
+    """Give every op a tiny uniform-shape jittable payload.
+
+    Payload cost is deliberately negligible and identical across ops so
+    that execution wall-clock measures the *dispatch* path, not kernels.
+    Roots consume one external input; interior ops fold their
+    predecessors (matching the executor's ext-then-preds arg order).
+    Every payload ends in ``tanh`` so no ``mul`` result ever feeds an
+    ``add`` inside a fused segment — XLA would contract that pair into an
+    FMA, which changes rounding vs eager execution and would (correctly)
+    trip the lane program's bitwise probe into the Python fallback.
+    Returns the external-inputs mapping for the graph's root ops.
+    """
+    x = jnp.linspace(0.0, 1.0, DIM * DIM,
+                     dtype=jnp.float32).reshape(DIM, DIM)
+    inputs: dict[int, tuple] = {}
+    for i, op in enumerate(g.ops):
+        c = jnp.float32(1.0 + 0.01 * (i % 7))
+        if g.pred[i]:
+            op.fn = (lambda c: lambda *a: jnp.tanh(
+                functools.reduce(operator.add, a) * c))(c)
+        else:
+            op.fn = (lambda c: lambda v: jnp.tanh(v * c))(c)
+            inputs[i] = (x,)
+    return inputs
+
+
+def _concurrent_payload_models(n_ops: int = 24):
+    """Three affinity-distinct chains with jittable payloads for the
+    M=3 concurrent run (GEMM- / scan- / conv-class kinds, so the solver
+    spreads them across lanes)."""
+    graphs, inputs = [], []
+    kinds = ("matmul", "cumsum", "conv2d")
+    x = jnp.linspace(-1.0, 1.0, DIM * DIM,
+                     dtype=jnp.float32).reshape(DIM, DIM)
+    for r, kind in enumerate(kinds):
+        ops = []
+        for i in range(n_ops):
+            c = jnp.float32(1.0 + 0.005 * ((r + i) % 11))
+            if kind == "matmul":
+                fn = (lambda c: lambda a: jnp.tanh(a * c))(c)
+            elif kind == "cumsum":
+                fn = (lambda c: lambda a:
+                      jnp.cumsum(jnp.tanh(a), axis=0) * (c / DIM))(c)
+            else:
+                fn = (lambda c: lambda a: jnp.tanh(jnp.abs(a) * c))(c)
+            ops.append(FusedOp(name=f"m{r}.{kind}{i}", kind=kind,
+                               in_shapes=((DIM, DIM),), out_shape=(DIM, DIM),
+                               fn=fn))
+        graphs.append(OpGraph(ops))
+        inputs.append({0: (x,)})
+    return graphs, inputs
+
+
+def _best_of(fn, repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _bench_plan(orch: Orchestrator, plan, graphs, inputs, n_ops: int,
+                repeats: int, warm_repeats: int) -> dict:
+    """Time one plan both ways + verify bitwise identity vs monolithic."""
+    single = plan.kind in ("sequential", "parallel")
+    orch.execute(plan, inputs, compile=False)     # warm jax's eager caches
+    interp_s = _best_of(
+        lambda: orch.execute(plan, inputs, compile=False), repeats)
+    t0 = time.perf_counter()
+    compiled_out = orch.execute(plan, inputs)     # cold: partition + jit
+    cold_s = time.perf_counter() - t0
+    warm_s = _best_of(lambda: orch.execute(plan, inputs), warm_repeats)
+
+    outs = [compiled_out] if single else compiled_out
+    ins = [inputs] if single else inputs
+    bitwise = all(
+        results_bitwise_equal(orch.executor.run_monolithic(g, i), o)
+        for g, i, o in zip(graphs, ins, outs))
+    prog = orch.program_for(plan, inputs)
+    return {
+        "n_ops": n_ops,
+        "interp_ms": 1e3 * interp_s,
+        "cold_compile_ms": 1e3 * cold_s,
+        "warm_ms": 1e3 * warm_s,
+        "per_op_interp_us": 1e6 * interp_s / n_ops,
+        "per_op_warm_us": 1e6 * warm_s / n_ops,
+        "overhead_reduction": interp_s / warm_s,
+        "bitwise_vs_monolithic": bitwise,
+        "program": prog.stats,
+    }
+
+
+def run(verbose: bool = True, smoke: bool = False,
+        out_path: str | None = "BENCH_exec.json") -> dict:
+    model = EdgeSoCCostModel()
+    z = zoo()
+    names = SMOKE_MODELS if smoke else ZOO_MODELS
+    repeats = 1 if smoke else 3
+    warm_repeats = 3 if smoke else 10
+
+    out: dict = {"smoke": smoke, "models": {}, "concurrent_m": {}}
+    for name in names:
+        g = z[name]
+        inputs = attach_payloads(g)
+        orch = Orchestrator(model, EDGE_PUS)
+        plan = orch.plan(orch.register(g))
+        row = _bench_plan(orch, plan, [g], inputs, len(g),
+                          repeats, warm_repeats)
+        row["plan_kind"] = plan.kind
+        out["models"][name] = row
+
+    graphs, inputs = _concurrent_payload_models(12 if smoke else 24)
+    orch = Orchestrator(model, EDGE_PUS)
+    cplan = orch.plan([orch.register(g) for g in graphs])
+    row = _bench_plan(orch, cplan, graphs, inputs,
+                      sum(len(g) for g in graphs), repeats, warm_repeats)
+    row["mode"] = cplan.schedule.mode
+    out["concurrent_m"][f"M=3 x {len(graphs[0])} ops"] = row
+
+    rows = list(out["models"].values()) + list(out["concurrent_m"].values())
+    reduction = geomean([r["overhead_reduction"] for r in rows])
+    bitwise_ok = all(r["bitwise_vs_monolithic"] for r in rows)
+    out["overhead_reduction_geomean"] = reduction
+    out["checks"] = {
+        "warm compiled per-op overhead >= %.0fx lower than interpreted "
+        "(geomean %.1fx)" % (OVERHEAD_TARGET, reduction):
+            reduction >= OVERHEAD_TARGET,
+        "compiled outputs bitwise-identical to run_monolithic on every "
+        "model exercised": bitwise_ok,
+    }
+
+    if verbose:
+        print(f"== executor micro-benchmark ({'smoke' if smoke else 'full'}) ==")
+        for name, r in {**out["models"], **out["concurrent_m"]}.items():
+            p = r["program"]
+            print(f"  {name:24s} n={r['n_ops']:5d}  "
+                  f"interp {r['per_op_interp_us']:7.1f}us/op  "
+                  f"warm {r['per_op_warm_us']:7.1f}us/op  "
+                  f"({r['overhead_reduction']:.1f}x)  "
+                  f"cold {r['cold_compile_ms']:8.1f}ms  "
+                  f"[{p['n_segments']} seg, {p['n_jitted']} jit, "
+                  f"{p['n_python']} py]  "
+                  f"bitwise={'OK' if r['bitwise_vs_monolithic'] else 'FAIL'}")
+        for c, ok in out["checks"].items():
+            print(f"  [{'PASS' if ok else 'FAIL'}] {c}")
+
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(out, f, indent=2)
+        if verbose:
+            print(f"wrote {out_path}")
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset (CI)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path ('' to skip writing; default "
+                         "BENCH_exec.json, or BENCH_exec.smoke.json under "
+                         "--smoke so the tracked full-run trajectory is "
+                         "never clobbered by a smoke run)")
+    args = ap.parse_args()
+    out_path = args.out
+    if out_path is None:
+        out_path = "BENCH_exec.smoke.json" if args.smoke else "BENCH_exec.json"
+    out = run(smoke=args.smoke, out_path=out_path or None)
+    # the bitwise-identity check gates even --smoke (it is a correctness
+    # claim, not a timing claim); wall-clock ratio checks are
+    # informational under --smoke (single-repeat CI timings are noisy)
+    bitwise_ok = all(ok for c, ok in out["checks"].items() if "bitwise" in c)
+    raise SystemExit(0 if (bitwise_ok and (args.smoke
+                                           or all(out["checks"].values())))
+                     else 1)

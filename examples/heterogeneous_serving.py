@@ -61,6 +61,15 @@ _, base, _ = orch.workload(h).best_solo()
 print(f"\nbest single PU {base*1e3:.2f} ms -> BIDENT {plan.latency*1e3:.2f} ms "
       f"({base/plan.latency:.2f}x)   [plan cache: {orch.stats}]")
 
+# the compiled execution path: the plan's lane queues partition into
+# maximal same-PU segments with handoff events only at the cross-lane
+# cuts — the dispatch shape a real command-queue runtime would see
+prog = orch.program_for(plan)
+s = prog.stats
+print(f"compiled lane program: {s['n_ops']} ops -> {s['n_segments']} "
+      f"segments ({s['n_ops'] / max(s['n_segments'], 1):.1f} ops/segment; "
+      f"{'serial' if s['serial'] else 'multi-lane'} dispatch)")
+
 # -- actually serve requests (reduced config on this CPU container) -------
 cfg = cfg_full.reduced()
 params = M.init_params(cfg, jax.random.PRNGKey(0))
@@ -68,4 +77,7 @@ engine = Engine(cfg=cfg, params=params, policy=Policy())
 prompts = jnp.asarray(np.random.default_rng(0).integers(
     0, cfg.vocab, (args.batch, 16), dtype=np.int32))
 out = engine.generate(prompts, max_new=8)
-print(f"\nserved batch: prompts {prompts.shape} -> generated {out.shape}")
+out = engine.generate(prompts, max_new=8)   # decode step: no re-trace
+print(f"\nserved batch: prompts {prompts.shape} -> generated {out.shape} "
+      f"(decode-step traces: {sum(engine.decode_trace_counts.values())} "
+      f"across 2 generate calls)")

@@ -5,8 +5,11 @@ Three models register with one ``Orchestrator`` session; ``plan`` over
 the handle tuple routes to the M-request joint search (exact grid A*
 here; pairs keep the 2-D A*), and ``execute`` REALLY RUNS the schedule
 across the multi-lane executor (one worker lane per PU, all models
-multiplexed onto the shared lanes), verifying each model's outputs
-against isolated execution.  The serving scenario is then played out
+multiplexed onto the shared lanes) — through the **compiled lane
+program** by default (segment-fused, cached; co-scheduled steps stay
+single-op barrier segments), with the per-op interpreter retained as
+the bitwise oracle via ``compile=False`` — verifying each model's
+outputs against isolated execution.  The serving scenario is then played out
 online: two requests are admitted, make progress, and a third arrives
 mid-flight — ``admit`` re-plans the concurrent set over every active
 request's *remaining* ops.
@@ -82,15 +85,28 @@ for st in plan.schedule.steps[:6]:
     print("  " + " || ".join(f"{c:16s}" for c in cols)
           + f" ({st.cost*1e6:7.1f} us)")
 
-# really execute the M-model plan across the shared PU lanes and verify
-# every model's outputs against isolated execution
+# really execute the M-model plan across the shared PU lanes — through
+# the compiled path (the default): lane queues partition into segments,
+# segment payloads fuse (jitted where bitwise-safe), and a repeat
+# execute() hits the cached program.  Verify every model's outputs
+# against isolated execution AND against the per-op interpreter oracle.
 inputs = [{0: (x,)} for _, x in models]
-conc = orch.execute(plan, inputs)
+conc = orch.execute(plan, inputs)                       # compiled
+oracle = orch.execute(plan, inputs, compile=False)      # interpreter
 graphs = [g for g, _ in models]
-for g, x, got in zip(graphs, inputs, conc):
+for g, x, got, ref in zip(graphs, inputs, conc, oracle):
     mono = orch.executor.run_monolithic(g, x)
     assert ScheduleExecutor.outputs_close(mono, got)
-print(f"\nall {len(models)} models' orchestrated outputs == isolated: OK")
+    assert ScheduleExecutor.outputs_close(ref, got)
+prog = orch.program_for(plan, inputs)
+s = prog.stats
+orch.execute(plan, inputs)                              # program-cache hit
+print(f"\nall {len(models)} models' compiled outputs == isolated == "
+      f"interpreter oracle: OK")
+print(f"compiled lane program: {s['n_segments']} segments over "
+      f"{s['n_ops']} ops ({s['n_jitted']} jitted, {s['n_python']} python, "
+      f"{s['n_barrier']} co-scheduled barriers); "
+      f"program cache hits {orch.stats['program_hits']}")
 
 # -- the serving scenario: a request arrives mid-flight -------------------
 hA, hB, hC = handles

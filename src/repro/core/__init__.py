@@ -19,6 +19,7 @@ from .costmodel import (CPU, GPU, NPU, EDGE_PUS, DEFAULT_SF, CostEntry,
                         transition_cost)
 from .dynamic import DynamicScheduler, RuntimeCondition
 from .executor import ScheduleExecutor
+from .laneprogram import LaneProgram, compile_lane_program, results_bitwise_equal
 from .graph import (DenseChain, ExecGraph, build_dense_chain,
                     build_sequential_graph)
 from .op import Branch, FusedOp, OpGraph, Phase, chain_graph
@@ -45,7 +46,9 @@ __all__ = [
     "DynamicScheduler", "EdgeSoCCostModel", "InfeasibleScheduleError",
     "Orchestrator", "PUSpec",
     "Plan", "RuntimeCondition", "Workload", "DEFAULT_MAX_STATES",
-    "transition_cost", "ScheduleExecutor", "DenseChain", "ExecGraph",
+    "transition_cost", "ScheduleExecutor", "LaneProgram",
+    "compile_lane_program", "results_bitwise_equal",
+    "DenseChain", "ExecGraph",
     "build_dense_chain", "build_sequential_graph", "Branch", "FusedOp",
     "OpGraph", "Phase",
     "chain_graph", "AnalyticProfiler", "MeasuredProfiler",

@@ -63,6 +63,10 @@ class CostTable:
     def __init__(self, pus: Sequence[str]):
         self.pus: list[str] = list(pus)
         self._t: dict[tuple[int, str], CostEntry] = {}
+        # free-form provenance metadata attached by the producer, e.g.
+        # MeasuredProfiler records per-op measurement failures under
+        # ``meta["profile_failures"]`` instead of swallowing them
+        self.meta: dict = {}
 
     def set(self, op_idx: int, pu: str, entry: CostEntry) -> None:
         if pu not in self.pus:

@@ -3,13 +3,22 @@
 The paper's output schedule is "applied directly by the execution
 orchestrator" with zero runtime overhead.  This executor models each PU as
 an execution *lane* (a worker thread with a FIFO command queue — the
-command-queue semantics of a real PU).  Ops are enqueued onto their
-assigned lane in dependency order; cross-lane dependencies synchronise via
-events (the H2D/D2H handoff points of the unified-memory system model).
+command-queue semantics of a real PU).  Two execution paths share the lane
+model:
 
-Its purpose in this reproduction is **correctness validation**: for every
-model in the zoo, orchestrated execution must produce outputs identical to
-monolithic single-lane execution.
+* the **per-op interpreter** (``run_scheduled`` / ``run_concurrent``):
+  ops are enqueued onto their assigned lane in dependency order and
+  cross-lane dependencies synchronise via one event per op.  This is the
+  bitwise-equivalence oracle — for every model in the zoo, orchestrated
+  execution must produce outputs identical to monolithic single-lane
+  execution (``run_monolithic``);
+
+* the **compiled path** (``compile_scheduled`` / ``compile_concurrent``
+  → :class:`~repro.core.laneprogram.LaneProgram`): each lane's queue is
+  partitioned into maximal contiguous same-lane segments, each segment's
+  payloads fuse into one callable (jitted when bitwise-safe), and events
+  exist only at the cross-lane boundary cuts.  Same results, a fraction
+  of the dispatch/synchronisation overhead — see ``laneprogram``.
 """
 from __future__ import annotations
 
@@ -19,6 +28,7 @@ from typing import Any, Mapping, Sequence
 
 import numpy as np
 
+from .laneprogram import LaneProgram, compile_lane_program
 from .op import OpGraph
 
 
@@ -33,15 +43,14 @@ class ScheduleExecutor:
         """Reference: run everything on one lane in topological order."""
         return self._run(graph, external_inputs, lanes=1, assignment=None)
 
-    def run_scheduled(self, graph: OpGraph, assignment,
-                      external_inputs: Mapping[int, tuple] | None = None) -> dict[int, Any]:
-        """Run under the schedule: one worker lane per PU, event-synced.
-
-        ``assignment`` is an ``{op index: PU name}`` mapping, or any
-        schedule object exposing one (``SeqSchedule`` — via its chain —
-        or ``ParallelSchedule.assignment``), so orchestrator plans can be
-        executed without hand-building the mapping.
-        """
+    # ------------------------------------------------------------------
+    # assignment / schedule normalization (shared by both paths)
+    # ------------------------------------------------------------------
+    def _normalize_assignment(self, graph: OpGraph, assignment
+                              ) -> dict[int, str]:
+        """``{op index: PU name}`` from a mapping or any schedule object
+        exposing one (``SeqSchedule`` — via its chain — or
+        ``ParallelSchedule.assignment``), with coverage validation."""
         if hasattr(assignment, "chain") and hasattr(assignment, "assignment"):
             assignment = dict(zip(assignment.chain, assignment.assignment))
         elif hasattr(assignment, "assignment"):
@@ -52,8 +61,75 @@ class ScheduleExecutor:
                 f"assignment does not cover the graph: {len(missing)} op(s) "
                 f"unassigned (e.g. {missing[:5]}) — partial (tail/admission) "
                 "plans cannot be executed on the full graph")
+        return dict(assignment)
+
+    def _scheduled_lane_queues(self, graph: OpGraph,
+                               assignment: Mapping[int, str]
+                               ) -> dict[str, list[int]]:
+        """One FIFO lane per PU; ops enqueue in topological order."""
+        lane_queues: dict[str, list[int]] = {p: [] for p in self.pus}
+        for i in graph.topo_order():
+            lane_queues[assignment[i]].append(i)
+        return lane_queues
+
+    def _concurrent_lane_queues(self, graphs: Sequence[OpGraph], schedule
+                                ) -> tuple[dict[str, list[tuple[int, int]]],
+                                           set[tuple[int, int]]]:
+        """Lane queues in schedule-step order + the co-scheduled op set.
+
+        Validates coverage AND dependency order (a mis-ordered schedule
+        would otherwise deadlock the lane workers instead of raising).
+        Ops of a step where >= 2 requests advance together are returned
+        as *barrier* ops: the compiled path keeps them individually
+        dispatched so the co-execution granularity the contention laws
+        priced is preserved.
+        """
+        m = len(graphs)
+        if schedule.n_requests != m:
+            raise ValueError(
+                f"schedule covers {schedule.n_requests} requests, "
+                f"got {m} graphs")
+        lane_queues: dict[str, list[tuple[int, int]]] = {p: [] for p in self.pus}
+        barriers: set[tuple[int, int]] = set()
+        seen: list[set[int]] = [set() for _ in range(m)]
+        for st in schedule.steps:
+            active = [(r, oi, pu) for r, (oi, pu)
+                      in enumerate(zip(st.ops, st.pus)) if oi is not None]
+            for r, oi, pu in active:
+                missing_pred = [p for p in graphs[r].pred[oi]
+                                if p not in seen[r]]
+                if missing_pred:
+                    raise ValueError(
+                        f"schedule lists op {oi} of request {r} before its "
+                        f"predecessor(s) {missing_pred} — executing it "
+                        "would deadlock the lanes")
+                lane_queues[pu].append((r, oi))
+                seen[r].add(oi)
+                if len(active) > 1:
+                    barriers.add((r, oi))
+        for r, g in enumerate(graphs):
+            if seen[r] != set(range(len(g.ops))):
+                missing = sorted(set(range(len(g.ops))) - seen[r])
+                raise ValueError(
+                    f"schedule does not cover request {r}: missing ops "
+                    f"{missing[:5]}{'...' if len(missing) > 5 else ''}")
+        return lane_queues, barriers
+
+    # ------------------------------------------------------------------
+    # per-op interpreter (the bitwise-equivalence oracle)
+    # ------------------------------------------------------------------
+    def run_scheduled(self, graph: OpGraph, assignment,
+                      external_inputs: Mapping[int, tuple] | None = None) -> dict[int, Any]:
+        """Run under the schedule: one worker lane per PU, event-synced.
+
+        ``assignment`` is an ``{op index: PU name}`` mapping, or any
+        schedule object exposing one (``SeqSchedule`` — via its chain —
+        or ``ParallelSchedule.assignment``), so orchestrator plans can be
+        executed without hand-building the mapping.
+        """
+        assignment = self._normalize_assignment(graph, assignment)
         return self._run(graph, external_inputs, lanes=len(self.pus),
-                         assignment=dict(assignment))
+                         assignment=assignment)
 
     # ------------------------------------------------------------------
     def _run(self, graph: OpGraph, external_inputs, lanes: int,
@@ -79,22 +155,20 @@ class ScheduleExecutor:
                 results[i] = op.fn(*gather_inputs(i))
             done_ev[i].set()
 
-        order = graph.topo_order()
         if assignment is None:
-            for i in order:
+            for i in graph.topo_order():
                 exec_op(i)
             return results
 
-        # one FIFO lane per PU; ops enqueue in topological order
-        lane_queues: dict[str, list[int]] = {p: [] for p in self.pus}
-        for i in order:
-            lane_queues[assignment[i]].append(i)
+        lane_queues = self._scheduled_lane_queues(graph, assignment)
 
         def lane_worker(pu: str) -> None:
             try:
                 for i in lane_queues[pu]:
                     exec_op(i)
-            except BaseException as e:  # pragma: no cover
+            except BaseException as e:
+                # record the original failure FIRST, then release every
+                # event so no other lane can deadlock waiting on this one
                 errors.append(e)
                 for ev in done_ev.values():
                     ev.set()
@@ -123,35 +197,8 @@ class ScheduleExecutor:
         against isolated ``run_monolithic`` runs.
         """
         m = len(graphs)
-        if schedule.n_requests != m:
-            raise ValueError(
-                f"schedule covers {schedule.n_requests} requests, "
-                f"got {m} graphs")
+        lane_queues, _ = self._concurrent_lane_queues(graphs, schedule)
         ext = list(external_inputs or [None] * m)
-        # lane queues in schedule-step order; validate coverage AND
-        # dependency order (a mis-ordered schedule would otherwise
-        # deadlock the lane workers instead of raising)
-        lane_queues: dict[str, list[tuple[int, int]]] = {p: [] for p in self.pus}
-        seen: list[set[int]] = [set() for _ in range(m)]
-        for st in schedule.steps:
-            for r, (oi, pu) in enumerate(zip(st.ops, st.pus)):
-                if oi is None:
-                    continue
-                missing_pred = [p for p in graphs[r].pred[oi]
-                                if p not in seen[r]]
-                if missing_pred:
-                    raise ValueError(
-                        f"schedule lists op {oi} of request {r} before its "
-                        f"predecessor(s) {missing_pred} — executing it "
-                        "would deadlock the lanes")
-                lane_queues[pu].append((r, oi))
-                seen[r].add(oi)
-        for r, g in enumerate(graphs):
-            if seen[r] != set(range(len(g.ops))):
-                missing = sorted(set(range(len(g.ops))) - seen[r])
-                raise ValueError(
-                    f"schedule does not cover request {r}: missing ops "
-                    f"{missing[:5]}{'...' if len(missing) > 5 else ''}")
 
         results: list[dict[int, Any]] = [{} for _ in range(m)]
         done_ev: dict[tuple[int, int], threading.Event] = {
@@ -176,7 +223,7 @@ class ScheduleExecutor:
             try:
                 for r, i in lane_queues[pu]:
                     exec_op(r, i)
-            except BaseException as e:  # pragma: no cover
+            except BaseException as e:
                 errors.append(e)
                 for ev in done_ev.values():
                     ev.set()
@@ -188,6 +235,31 @@ class ScheduleExecutor:
         if errors:
             raise errors[0]
         return results
+
+    # ------------------------------------------------------------------
+    # compiled path (laneprogram)
+    # ------------------------------------------------------------------
+    def compile_scheduled(self, graph: OpGraph, assignment) -> LaneProgram:
+        """Compile a sequential/parallel plan into a :class:`LaneProgram`.
+
+        Accepts the same ``assignment`` forms as ``run_scheduled``;
+        ``program.run(external_inputs)`` then returns the same results
+        dict, with per-op dispatch/event overhead collapsed to one fused
+        call + one event per segment.
+        """
+        assignment = self._normalize_assignment(graph, assignment)
+        queues = self._scheduled_lane_queues(graph, assignment)
+        lane_items = {pu: [(0, i) for i in q] for pu, q in queues.items()}
+        return compile_lane_program([graph], lane_items, single=True)
+
+    def compile_concurrent(self, graphs: Sequence[OpGraph],
+                           schedule) -> LaneProgram:
+        """Compile an M-model ``ConcurrentSchedule`` into a
+        :class:`LaneProgram` (co-scheduled steps become single-op barrier
+        segments); ``program.run(inputs)`` matches ``run_concurrent``."""
+        lane_queues, barriers = self._concurrent_lane_queues(graphs, schedule)
+        return compile_lane_program(list(graphs), lane_queues,
+                                    barriers=barriers, single=False)
 
     # ------------------------------------------------------------------
     @staticmethod

@@ -1,0 +1,399 @@
+"""Compiled lane programs: the segment-fused execution path.
+
+The interpreter in :mod:`repro.core.executor` dispatches every op as a
+Python closure call plus a ``threading.Event`` wait/set — faithful to the
+command-queue model, but after the planning side went ms-scale that per-op
+overhead *is* the runtime cost the paper says the orchestrator avoids
+("the output schedule ... is applied directly by the execution
+orchestrator").  A :class:`LaneProgram` removes it in two moves:
+
+* **Segment partitioning.**  Each PU lane's FIFO queue is cut into
+  *maximal contiguous same-lane segments*: a new segment starts only at a
+  cross-lane boundary (an op whose predecessor ran on another lane — the
+  D2H/H2D handoff points), at a request switch on a shared lane, or at a
+  co-scheduled concurrent step (co-scheduled ops stay individually
+  dispatched so the granularity the contention laws priced is preserved —
+  they become single-op *barrier* segments).  Synchronisation collapses
+  from one event per op to one event per segment, waited on only across
+  the boundary cuts.
+
+* **Segment fusion.**  Each segment's op payloads compose into one
+  callable.  On the first run the segment executes composed-but-eager
+  (the *probe*), then attempts ``jax.jit`` of the composition and keeps
+  the jitted version **only if its outputs are bitwise identical** to
+  eager execution — checked on the probe inputs and on a perturbed
+  same-shape input set, so a value coincidence cannot certify it —
+  payloads that are not JAX-traceable (NumPy closures, ``None``
+  payloads) or whose dtypes a jit round-trip would alter fall back to the
+  composed-Python form automatically.  Either way the per-op event churn
+  is gone; the jitted form additionally collapses a whole segment into a
+  single XLA dispatch.
+
+Programs are built once per (plan, input-signature) by
+``ScheduleExecutor.compile_scheduled`` / ``compile_concurrent`` and cached
+by ``Orchestrator.execute`` (see the ``program_for`` hook), mirroring the
+plan cache: a repeat ``execute`` call skips partitioning and compilation
+entirely.  The per-op interpreter remains the bitwise-equivalence oracle
+(``Orchestrator.execute(..., compile=False)``).
+
+A program's first ``run`` mutates segment state (probe → jit/python mode
+settling), so a single program must not be run from two threads
+concurrently until warm; the orchestrator's cache serialises this in
+practice (one program per plan/input key).
+
+Op payloads must be **pure** on this path: compile verification executes
+each payload a few extra times (the jit probe, plus an eager + jitted
+pass over perturbed same-shape inputs), and warm runs replay the fused
+callable — a payload with internal state (counters, cache mutation,
+appended buffers) would advance differently than under the per-op
+interpreter.  Stateful or side-effecting payloads belong on the
+interpreter oracle (``Orchestrator.execute(..., compile=False)``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from concurrent.futures import ThreadPoolExecutor
+from typing import Any, Callable, Mapping, Sequence
+
+import numpy as np
+
+from .op import OpGraph
+
+try:  # the compiled path degrades to composed-Python without jax
+    import jax
+except Exception:  # pragma: no cover - jax is baked into this container
+    jax = None
+
+# segment execution modes
+COLD = "cold"        # not yet run: next run probes eagerly, then compiles
+JIT = "jit"          # fused callable is jitted (bitwise-verified vs probe)
+PYTHON = "python"    # composed-Python fallback (non-traceable payloads)
+
+
+def _bitwise_equal(a, b) -> bool:
+    """True iff two payload outputs are bitwise identical (dtype, shape,
+    and raw bytes — ``allclose`` is deliberately not used here)."""
+    if a is None or b is None:
+        return a is None and b is None
+    xa, xb = np.asarray(a), np.asarray(b)
+    return (xa.dtype == xb.dtype and xa.shape == xb.shape
+            and xa.tobytes() == xb.tobytes())
+
+
+def _perturb(x):
+    """A same-shape/dtype input with different float values, for the
+    second leg of compile verification (non-floats pass through)."""
+    a = np.asarray(x)
+    if np.issubdtype(a.dtype, np.floating):
+        return ((a * np.asarray(0.7371, a.dtype)
+                 + np.asarray(0.1113, a.dtype)).astype(a.dtype, copy=False))
+    return x
+
+
+def results_bitwise_equal(a: Mapping[int, Any], b: Mapping[int, Any]) -> bool:
+    """Bitwise comparison of two executor results dicts (the strict form
+    of ``ScheduleExecutor.outputs_close``: dtypes and bytes must match)."""
+    if set(a) != set(b):
+        return False
+    return all(_bitwise_equal(a[k], b[k]) for k in a)
+
+
+@dataclasses.dataclass
+class Segment:
+    """A maximal run of same-lane ops fused into one callable.
+
+    ``items`` are ``(request, op)`` pairs in lane-queue order; ``deps``
+    are indices of segments on *other* lanes whose outputs this segment
+    reads (same-lane predecessors are implicit in FIFO order).  A
+    ``barrier`` segment holds exactly one co-scheduled concurrent-step op
+    and is never fused with its neighbours.
+    """
+
+    index: int
+    lane: str
+    barrier: bool = False
+    items: list[tuple[int, int]] = dataclasses.field(default_factory=list)
+    fns: list[Callable | None] = dataclasses.field(default_factory=list)
+    deps: list[int] = dataclasses.field(default_factory=list)
+    # results of other segments this segment reads, in flat order
+    flat_refs: list[tuple[int, int]] = dataclasses.field(default_factory=list)
+    # per item: arg sources after the op's external inputs — ("f", j) is
+    # flat input j (another segment's output), ("o", t) is item t's output
+    argspecs: list[list[tuple[str, int]]] = dataclasses.field(
+        default_factory=list)
+    mode: str = COLD
+    _jfn: Any = dataclasses.field(default=None, repr=False)
+
+    # -- composition --------------------------------------------------------
+    def _composed(self, flat: tuple, ext_lists: tuple) -> tuple:
+        """Run every op of the segment; the one callable that gets jitted.
+
+        ``flat`` holds the cross-segment input values (in ``flat_refs``
+        order), ``ext_lists`` the per-item external-input tuples.  Arg
+        order per op matches the interpreter exactly: external inputs
+        first, then predecessor outputs in ``graph.pred`` order.
+        """
+        outs: list[Any] = []
+        for t, spec in enumerate(self.argspecs):
+            fn = self.fns[t]
+            if fn is None:
+                outs.append(None)
+                continue
+            deps = tuple(flat[j] if kind == "f" else outs[j]
+                         for kind, j in spec)
+            outs.append(fn(*(tuple(ext_lists[t]) + deps)))
+        return tuple(outs)
+
+    def _gather(self, results: Sequence[dict], ext: Sequence[dict]):
+        flat = tuple(results[r][p] for r, p in self.flat_refs)
+        ext_lists = tuple(tuple(ext[r].get(i, ())) for r, i in self.items)
+        return flat, ext_lists
+
+    def execute(self, results: Sequence[dict], ext: Sequence[dict]) -> None:
+        flat, ext_lists = self._gather(results, ext)
+        if self.mode == JIT:
+            outs = self._jfn(flat, ext_lists)
+        else:
+            outs = self._composed(flat, ext_lists)
+            if self.mode == COLD:
+                self._maybe_compile(flat, ext_lists, outs)
+        for (r, i), o in zip(self.items, outs):
+            results[r][i] = o
+
+    def _maybe_compile(self, flat, ext_lists, outs) -> None:
+        """Probe-and-verify compilation: jit the composition and keep it
+        only if its outputs match the eager probe bitwise — on the probe
+        inputs AND on an independently perturbed same-shape input set,
+        so a value coincidence on the probe (e.g. an FMA contraction
+        that happens to round identically there) cannot certify a jit
+        that diverges on later inputs.  Anything else (trace failures on
+        NumPy payloads, f64→f32 dtype drift under a jit round-trip,
+        non-array outputs) keeps the Python form."""
+        self.mode = PYTHON
+        if jax is None or any(fn is None for fn in self.fns):
+            return
+        if not all(isinstance(o, jax.Array) for o in outs):
+            return
+        try:
+            jfn = jax.jit(self._composed)
+            got = tuple(jfn(flat, ext_lists))
+            ok = (len(got) == len(outs)
+                  and all(_bitwise_equal(a, b) for a, b in zip(outs, got)))
+            if ok:
+                flat2 = tuple(_perturb(v) for v in flat)
+                ext2 = tuple(tuple(_perturb(v) for v in e)
+                             for e in ext_lists)
+                ref2 = self._composed(flat2, ext2)
+                got2 = tuple(jfn(flat2, ext2))
+                ok = all(_bitwise_equal(a, b) for a, b in zip(ref2, got2))
+        except Exception:
+            return
+        if ok:
+            self._jfn = jfn
+            self.mode = JIT
+
+
+class LaneProgram:
+    """A compiled plan: per-lane segment lists + cross-lane handoff deps.
+
+    Build with :func:`compile_lane_program` (or the ``ScheduleExecutor``
+    ``compile_*`` wrappers); ``run(external_inputs)`` executes with one
+    worker thread per lane and returns the same results shape as the
+    interpreter (``run_scheduled`` for single-graph programs,
+    ``run_concurrent`` for M-request programs).
+    """
+
+    def __init__(self, graphs: Sequence[OpGraph],
+                 segments: list[Segment],
+                 lane_segments: dict[str, list[Segment]],
+                 single: bool):
+        self.graphs = list(graphs)
+        self.segments = segments
+        self.lane_segments = lane_segments
+        self.lanes = [pu for pu, segs in lane_segments.items() if segs]
+        self.single = single
+        self.n_requests = len(self.graphs)
+        self.runs = 0
+        # a program whose segment DAG (handoff deps + per-lane FIFO
+        # order) admits exactly ONE topological order is inherently
+        # serial: no two segments can ever overlap, so run() executes it
+        # inline — no worker threads, no events at all.  Sequential
+        # chains always qualify; programs with real co-execution
+        # (parallel branches, concurrent requests) never do and keep the
+        # lane workers (pooled persistently: thread spawn per run would
+        # dwarf the dispatch overhead this path removes).
+        self.serial_order = self._serial_order()
+        self._pool: ThreadPoolExecutor | None = None
+
+    def payloads_current(self) -> bool:
+        """True while the fns baked into the segments are still the ops'
+        payloads.  A caller that rebinds ``graph.ops[i].fn`` after
+        compilation invalidates the program — the orchestrator checks
+        this on every program-cache hit and recompiles on mismatch, so
+        a stale fused callable is never served."""
+        return all(fn is self.graphs[r].ops[i].fn
+                   for seg in self.segments
+                   for (r, i), fn in zip(seg.items, seg.fns))
+
+    def close(self) -> None:
+        """Release the persistent lane-worker pool (idempotent; a later
+        ``run`` lazily recreates it).  Called on cache eviction so idle
+        worker threads don't outlive the program's cache entry."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=False)
+            self._pool = None
+
+    def _serial_order(self) -> list[Segment] | None:
+        n = len(self.segments)
+        indeg = [0] * n
+        succ: list[list[int]] = [[] for _ in range(n)]
+        for s in self.segments:
+            for d in s.deps:
+                succ[d].append(s.index)
+                indeg[s.index] += 1
+        for segs in self.lane_segments.values():
+            for a, b in zip(segs, segs[1:]):
+                succ[a.index].append(b.index)
+                indeg[b.index] += 1
+        ready = [i for i in range(n) if indeg[i] == 0]
+        order: list[int] = []
+        while ready:
+            if len(ready) > 1:
+                return None            # two segments could co-execute
+            u = ready.pop()
+            order.append(u)
+            for v in succ[u]:
+                indeg[v] -= 1
+                if indeg[v] == 0:
+                    ready.append(v)
+        return [self.segments[i] for i in order] if len(order) == n else None
+
+    @property
+    def stats(self) -> dict:
+        """Structure + compilation summary (jit counts settle after the
+        first ``run``; before it every segment reports ``cold``)."""
+        modes = [s.mode for s in self.segments]
+        return {
+            "n_ops": sum(len(s.items) for s in self.segments),
+            "n_segments": len(self.segments),
+            "n_jitted": modes.count(JIT),
+            "n_python": modes.count(PYTHON),
+            "n_cold": modes.count(COLD),
+            "n_barrier": sum(1 for s in self.segments if s.barrier),
+            "max_segment_ops": max((len(s.items) for s in self.segments),
+                                   default=0),
+            "serial": self.serial_order is not None,
+            "runs": self.runs,
+        }
+
+    def run(self, external_inputs=None):
+        if self.single:
+            ext = [dict(external_inputs or {})]
+        else:
+            ext_seq = list(external_inputs or [None] * self.n_requests)
+            if len(ext_seq) != self.n_requests:
+                raise ValueError(
+                    f"program covers {self.n_requests} requests, got "
+                    f"{len(ext_seq)} input mapping(s)")
+            ext = [dict(e or {}) for e in ext_seq]
+        results: list[dict[int, Any]] = [{} for _ in range(self.n_requests)]
+
+        if self.serial_order is not None:
+            for seg in self.serial_order:
+                seg.execute(results, ext)   # exceptions propagate directly
+            self.runs += 1
+            return results[0] if self.single else results
+
+        done = [threading.Event() for _ in self.segments]
+        errors: list[BaseException] = []
+
+        def lane_worker(pu: str) -> None:
+            try:
+                for seg in self.lane_segments[pu]:
+                    for d in seg.deps:
+                        done[d].wait()   # cross-lane handoff (boundary cut)
+                    seg.execute(results, ext)
+                    done[seg.index].set()
+            except BaseException as e:
+                errors.append(e)
+                for ev in done:
+                    ev.set()
+
+        if self._pool is None:
+            self._pool = ThreadPoolExecutor(
+                max_workers=max(len(self.lanes), 1),
+                thread_name_prefix="lane")
+        futs = [self._pool.submit(lane_worker, pu) for pu in self.lanes]
+        for f in futs:
+            f.result()
+        if errors:
+            raise errors[0]
+        self.runs += 1
+        return results[0] if self.single else results
+
+
+def compile_lane_program(graphs: Sequence[OpGraph],
+                         lane_items: Mapping[str, Sequence[tuple[int, int]]],
+                         barriers: frozenset[tuple[int, int]] | set = frozenset(),
+                         single: bool = False) -> LaneProgram:
+    """Partition per-lane op queues into segments and build the program.
+
+    ``lane_items`` maps each PU lane to its FIFO queue of ``(request,
+    op)`` pairs (already validated/ordered by the executor); ``barriers``
+    are co-scheduled concurrent-step ops that must stay single-op
+    segments.  Cut rules, applied walking each queue in order — a new
+    segment starts when:
+
+    * the op (or the previous op) is a barrier op,
+    * the request changes (segments never span requests), or
+    * any predecessor ran on a *different* lane (the handoff cut: waits
+      happen only at segment starts, so a cross-lane input is only legal
+      for a segment's first op).
+
+    Same-lane predecessors never cut (earlier queue position ⇒ an earlier
+    segment on the same FIFO lane ⇒ already complete).
+    """
+    lane_of: dict[tuple[int, int], str] = {}
+    for pu, items in lane_items.items():
+        for it in items:
+            lane_of[it] = pu
+
+    segments: list[Segment] = []
+    lane_segments: dict[str, list[Segment]] = {pu: [] for pu in lane_items}
+    seg_of: dict[tuple[int, int], Segment] = {}
+    for pu, items in lane_items.items():
+        cur: Segment | None = None
+        for (r, i) in items:
+            barrier = (r, i) in barriers
+            cross = any(lane_of[(r, p)] != pu for p in graphs[r].pred[i])
+            if (cur is None or barrier or cur.barrier
+                    or cur.items[-1][0] != r or cross):
+                cur = Segment(index=len(segments), lane=pu, barrier=barrier)
+                segments.append(cur)
+                lane_segments[pu].append(cur)
+            cur.items.append((r, i))
+            cur.fns.append(graphs[r].ops[i].fn)
+            seg_of[(r, i)] = cur
+
+    for seg in segments:
+        internal = {it: t for t, it in enumerate(seg.items)}
+        flat_index: dict[tuple[int, int], int] = {}
+        deps: set[int] = set()
+        for (r, i) in seg.items:
+            spec: list[tuple[str, int]] = []
+            for p in graphs[r].pred[i]:
+                src = (r, p)
+                t2 = internal.get(src)
+                if t2 is not None:
+                    spec.append(("o", t2))
+                    continue
+                j = flat_index.setdefault(src, len(flat_index))
+                spec.append(("f", j))
+                producer = seg_of[src]
+                if producer.lane != seg.lane:
+                    deps.add(producer.index)
+            seg.argspecs.append(spec)
+        seg.flat_refs = sorted(flat_index, key=flat_index.get)
+        seg.deps = sorted(deps)
+    return LaneProgram(graphs, segments, lane_segments, single=single)

@@ -39,7 +39,11 @@ wraps that into the register → plan → execute flow of a serving system:
   arriving or completing mid-flight are absorbed.
 * ``execute`` drives the multi-lane :class:`ScheduleExecutor` for any
   plan kind (sequential / parallel assignments, M-ary concurrent
-  multiplexing).
+  multiplexing) — through a compiled, segment-fused
+  :class:`~repro.core.laneprogram.LaneProgram` by default (cached keyed
+  by plan cache key + handles + input shapes/dtypes, mirroring the plan
+  cache), with ``compile=False`` retaining the per-op interpreter as the
+  bitwise-equivalence oracle.
 """
 from __future__ import annotations
 
@@ -48,10 +52,13 @@ import hashlib
 import json
 from typing import Any, Mapping, Sequence
 
+import numpy as np
+
 from .contention import ContentionModel
 from .costmodel import CostTable, EDGE_PUS, PUSpec
 from .dynamic import DynamicScheduler, RuntimeCondition
 from .executor import ScheduleExecutor
+from .laneprogram import LaneProgram
 from .op import FusedOp, OpGraph, chain_graph
 from .schedule import (ConcurrentSchedule, ParallelSchedule, SeqSchedule,
                        schedule_from_dict, schedule_to_dict)
@@ -77,6 +84,13 @@ class Plan:
     objective: str
     handles: tuple[int, ...] = ()
     mode: str = ""            # resolved plan mode (e.g. "aligned")
+    # the plan-cache key this plan was stored under (set by the
+    # orchestrator; the compiled-execution program cache reuses it, so a
+    # repeat execute() skips segment partitioning and compilation the
+    # same way a repeat plan() skips the solve).  Not serialized:
+    # restored plans fall back to a content hash.
+    cache_key: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def latency(self) -> float:
@@ -117,6 +131,31 @@ class Plan:
                    mode=d.get("mode", ""))
 
 
+def _arg_signature(a) -> tuple:
+    dt = getattr(a, "dtype", None)
+    if dt is None:
+        dt = np.asarray(a).dtype
+    return (tuple(np.shape(a)), str(dt))
+
+
+def _inputs_signature(inputs) -> tuple | None:
+    """Hashable shapes/dtypes signature of ``execute`` inputs: one sorted
+    ``(op, per-arg (shape, dtype))`` tuple per request mapping."""
+    if inputs is None:
+        return None
+
+    def one(mapping) -> tuple:
+        if mapping is None:
+            return ()
+        return tuple(sorted(
+            (i, tuple(_arg_signature(a) for a in args))
+            for i, args in mapping.items()))
+
+    if isinstance(inputs, Mapping):
+        return ("single", one(inputs))
+    return ("multi", tuple(one(m) for m in inputs))
+
+
 @dataclasses.dataclass
 class _Registration:
     handle: int
@@ -145,7 +184,8 @@ class Orchestrator:
 
     def __init__(self, cost, pus: Mapping[str, PUSpec] = EDGE_PUS,
                  contention: ContentionModel | None = None,
-                 max_cached_plans: int = 256, max_cache_pools: int = 32):
+                 max_cached_plans: int = 256, max_cache_pools: int = 32,
+                 max_cached_programs: int = 64):
         if not (isinstance(cost, CostTable) or hasattr(cost, "build_table")
                 or hasattr(cost, "profile")):
             raise TypeError(
@@ -157,9 +197,12 @@ class Orchestrator:
         self.contention = contention or ContentionModel()
         self.executor = ScheduleExecutor(list(self.pus))
         self.condition = RuntimeCondition()
-        self.stats = {"hits": 0, "misses": 0, "invalidated": 0}
+        self.stats = {"hits": 0, "misses": 0, "invalidated": 0,
+                      "program_hits": 0, "program_misses": 0}
         self._max_plans = max_cached_plans
         self._max_pools = max_cache_pools
+        self._max_programs = max_cached_programs
+        self._programs: dict[tuple, LaneProgram] = {}  # insertion-ordered LRU
         self._regs: dict[int, _Registration] = {}
         self._by_graph: dict[int, int] = {}          # id(graph) -> handle
         self._plans: dict[tuple, Plan] = {}          # insertion-ordered LRU
@@ -411,6 +454,7 @@ class Orchestrator:
         self.stats["misses"] += 1
         plan = self._solve(regs_progress, hs, objective, mode,
                            algorithm, max_states)
+        plan.cache_key = key
         self._plans[key] = plan
         while len(self._plans) > self._max_plans:
             self._plans.pop(next(iter(self._plans)))
@@ -508,7 +552,7 @@ class Orchestrator:
                                  objective, "concurrent")
 
     # -- execute ------------------------------------------------------------
-    def execute(self, plan: Plan, inputs=None) -> Any:
+    def execute(self, plan: Plan, inputs=None, *, compile: bool = True) -> Any:
         """Run a plan on the multi-lane executor.
 
         Sequential/parallel plans take one ``{op: (args...)}`` mapping
@@ -516,15 +560,74 @@ class Orchestrator:
         sequence of such mappings (one per request, in handle order) and
         return a list of results dicts.  Partial plans (admission tails)
         cannot be executed — re-plan from progress 0 first.
+
+        By default execution goes through the **compiled lane program**
+        (``program_for``): per-op closure dispatch and event churn
+        collapse into segment-fused callables (jitted where bitwise-safe)
+        with handoff events only at cross-lane cuts, and the program is
+        cached keyed by (plan cache key, handles, input shapes/dtypes) so
+        a repeat ``execute`` skips partitioning and compilation like a
+        repeat ``plan`` skips the solve.  Op payloads must be pure on
+        this path (compile verification replays them on probe and
+        perturbed inputs); ``compile=False`` runs the per-op interpreter
+        instead — the bitwise-equivalence oracle, and the right path for
+        stateful or side-effecting payloads.
         """
+        if not compile:
+            regs = self._execute_regs(plan)
+            graphs = [reg.graph for reg in regs]
+            if plan.kind in ("sequential", "parallel"):
+                return self.executor.run_scheduled(graphs[0], plan.schedule,
+                                                   inputs)
+            return self.executor.run_concurrent(graphs, plan.schedule,
+                                                inputs)
+        return self.program_for(plan, inputs).run(inputs)
+
+    def program_for(self, plan: Plan, inputs=None) -> LaneProgram:
+        """The compiled :class:`LaneProgram` for a plan (cached).
+
+        The cache key is (plan cache key — or a content hash for plans
+        restored from JSON —, the plan's handles, and the shapes/dtypes
+        of ``inputs``): equal-signature plans re-bound to different
+        handles compile separately (their op payloads differ), and a
+        shape change recompiles rather than silently retracing inside a
+        shared program.
+        """
+        regs = self._execute_regs(plan)
+        key = (self._plan_token(plan), plan.handles,
+               _inputs_signature(inputs))
+        prog = self._programs.get(key)
+        if prog is not None:
+            if prog.payloads_current():
+                self.stats["program_hits"] += 1
+                self._programs[key] = self._programs.pop(key)  # LRU refresh
+                return prog
+            # an op.fn was rebound after compilation: the baked fused
+            # callables are stale — drop and recompile, never serve them
+            self._programs.pop(key).close()
+        self.stats["program_misses"] += 1
+        graphs = [reg.graph for reg in regs]
+        if plan.kind in ("sequential", "parallel"):
+            prog = self.executor.compile_scheduled(graphs[0], plan.schedule)
+        else:
+            prog = self.executor.compile_concurrent(graphs, plan.schedule)
+        self._programs[key] = prog
+        while len(self._programs) > self._max_programs:
+            self._programs.pop(next(iter(self._programs))).close()
+        return prog
+
+    def _execute_regs(self, plan: Plan) -> list[_Registration]:
         if not plan.handles:
             raise ValueError("plan carries no handles; was it built by "
                              "this orchestrator (or restored from JSON "
                              "with handles intact)?")
-        regs = [self._reg(h) for h in plan.handles]
-        if plan.kind in ("sequential", "parallel"):
-            return self.executor.run_scheduled(regs[0].graph, plan.schedule,
-                                               inputs)
-        graphs = [reg.graph for reg in regs]
-        return self.executor.run_concurrent(graphs, plan.schedule,
-                                            inputs)
+        return [self._reg(h) for h in plan.handles]
+
+    def _plan_token(self, plan: Plan):
+        if plan.cache_key is None:
+            # JSON-restored / hand-built plan: memoize the content hash
+            # on the plan so repeat executes stay O(1) like
+            # orchestrator-built plans
+            plan.cache_key = ("content", hashlib.blake2b(
+                plan.to_json().encode(), digest_size=16).hexdigest())
+        return plan.cache_key

@@ -18,11 +18,14 @@ callable via its jaxpr, applying a backend-compiler-like fusion rule
 """
 from __future__ import annotations
 
+import logging
 import time
 from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import numpy as np
+
+_log = logging.getLogger(__name__)
 
 from .costmodel import CostEntry, CostTable, EdgeSoCCostModel, PUSpec
 from .op import FusedOp, OpGraph
@@ -172,17 +175,27 @@ class MeasuredProfiler:
 
     For ops that carry an ``fn`` payload and example inputs in
     ``op.meta['example_inputs']`` we measure; otherwise we fall back to the
-    analytic CPU estimate.
+    analytic CPU estimate.  A measurement that *fails* (payload raises,
+    un-jittable closure, ...) is never silently swallowed: each failure is
+    logged, collected into the returned table's
+    ``meta["profile_failures"]`` (``{op index: "ExcType: message"}``), and
+    under ``strict=True`` re-raised with the op named instead of falling
+    back.
     """
 
     def __init__(self, model: EdgeSoCCostModel | None = None,
-                 warmup: int = 2, iters: int = 5):
+                 warmup: int = 2, iters: int = 5, strict: bool = False):
         self.model = model or EdgeSoCCostModel()
         self.warmup = warmup
         self.iters = iters
+        self.strict = strict
 
-    def profile(self, graph: OpGraph) -> CostTable:
+    def profile(self, graph: OpGraph,
+                strict: bool | None = None) -> CostTable:
+        strict = self.strict if strict is None else strict
+        failures: dict[int, str] = {}
         table = CostTable(list(self.model.pus))
+        table.meta["profile_failures"] = failures
         for i, op in enumerate(graph.ops):
             analytic = {name: self.model.entry(op, pu)
                         for name, pu in self.model.pus.items()}
@@ -193,7 +206,17 @@ class MeasuredProfiler:
                     measured = measure_callable(
                         op.fn, op.meta["example_inputs"],
                         warmup=self.warmup, iters=self.iters)
-                except Exception:
+                except Exception as e:
+                    if strict:
+                        raise RuntimeError(
+                            f"MeasuredProfiler: measuring op {i} "
+                            f"({op.name!r}, kind {op.kind!r}) failed"
+                        ) from e
+                    failures[i] = f"{type(e).__name__}: {e}"
+                    _log.warning(
+                        "MeasuredProfiler: op %d (%s) measurement failed "
+                        "(%s); falling back to the analytic CPU estimate",
+                        i, op.name, failures[i])
                     measured = None
             scale = (measured / cpu_est.kernel
                      if (measured and cpu_est and cpu_est.kernel > 0) else 1.0)

@@ -109,6 +109,35 @@ class Engine:
     cfg: Any
     params: Any
     policy: Policy = dataclasses.field(default_factory=Policy)
+    # one trace per distinct (batch, cache) shape signature — the decode
+    # step used to be re-wrapped in a fresh ``jax.jit`` on every
+    # ``generate`` call, which re-traced and re-compiled the whole step
+    # each time; ``decode_trace_counts`` makes the reuse observable
+    # (regression-tested: two same-shape generates == one trace)
+    decode_trace_counts: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    _jit_decode: Any = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    def decode_step_fn(self):
+        """The engine's single jitted decode step.
+
+        ``jax.jit``'s own cache keys on argument shapes/dtypes, so one
+        jitted callable per engine covers every (batch, cache-length)
+        combination — new shapes trace once, repeats hit the compile
+        cache.
+        """
+        if self._jit_decode is None:
+            def step(params, cache, batch):
+                key = (tuple(batch["tokens"].shape),
+                       tuple(tuple(getattr(l, "shape", ()))
+                             for l in jax.tree.leaves(cache)))
+                self.decode_trace_counts[key] = \
+                    self.decode_trace_counts.get(key, 0) + 1
+                return M.decode_step(self.cfg, params, cache, batch,
+                                     self.policy)
+            self._jit_decode = jax.jit(step)
+        return self._jit_decode
 
     def generate(self, prompt_tokens, max_new: int = 16,
                  max_len: int | None = None):
@@ -120,8 +149,7 @@ class Engine:
                                   max_len=max_len, shd=self.policy)
         outs = []
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        step = jax.jit(lambda p, c, b: M.decode_step(self.cfg, p, c, b,
-                                                     self.policy))
+        step = self.decode_step_fn()
         for _ in range(max_new):
             outs.append(tok)
             logits, cache = step(self.params, cache, {"tokens": tok})

@@ -81,3 +81,18 @@ def test_tpu_autoshard_claims():
     out = tpu_autoshard.run(verbose=False)
     failed = [c for c, ok in out["checks"].items() if not ok]
     assert not failed, failed
+
+
+def test_bench_exec_smoke_bitwise_gate():
+    """bench_exec smoke: the bitwise compiled-vs-monolithic check must
+    hold (it is a correctness claim; the wall-clock overhead ratio is
+    asserted only in the full run, where repeats de-noise it)."""
+    from benchmarks import bench_exec
+    out = bench_exec.run(verbose=False, smoke=True, out_path=None)
+    assert all(r["bitwise_vs_monolithic"]
+               for r in {**out["models"], **out["concurrent_m"]}.values())
+    # every segment settled into a mode (no cold leftovers) and the
+    # compiled path really fused: fewer segments than ops on the chains
+    for name, r in out["models"].items():
+        assert r["program"]["n_cold"] == 0
+        assert r["program"]["n_segments"] < r["n_ops"], name

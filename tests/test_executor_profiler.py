@@ -92,3 +92,112 @@ def test_trace_fused_ops_scan():
 
     g = trace_fused_ops(f, jnp.ones((16, 4)))
     assert any(o.kind == "scan" for o in g.ops)
+
+
+# ---------------------------------------------------------------------------
+# error propagation: a failing op must raise the original exception from
+# the lane workers without deadlocking the other lanes
+# ---------------------------------------------------------------------------
+
+
+class _PayloadError(Exception):
+    pass
+
+
+def _boom(*_a):
+    raise _PayloadError("op payload failed")
+
+
+def _failing_chain(n=5, fail_at=2):
+    ops = []
+    for i in range(n):
+        fn = _boom if i == fail_at else (lambda a=None: jnp.ones((4, 4))
+                                         if a is None else jnp.tanh(a))
+        ops.append(FusedOp(f"op{i}", "act", ((4, 4),), (4, 4), fn=fn))
+    return chain_graph(ops)
+
+
+def test_run_scheduled_propagates_original_exception_no_deadlock():
+    g = _failing_chain()
+    ex = ScheduleExecutor(list(EDGE_PUS))
+    # spread ops across all three lanes so downstream lanes really are
+    # blocked on the failing op's event when it dies
+    assignment = {0: "CPU", 1: "GPU", 2: "NPU", 3: "CPU", 4: "GPU"}
+    with pytest.raises(_PayloadError, match="op payload failed"):
+        ex.run_scheduled(g, assignment)
+
+
+def test_run_concurrent_propagates_original_exception_no_deadlock():
+    from repro.core import EdgeSoCCostModel, Orchestrator
+
+    good = chain_graph([
+        FusedOp(f"g{i}", "act", ((4, 4),), (4, 4),
+                fn=(lambda a=None: jnp.ones((4, 4)) if a is None
+                    else jnp.sin(a)))
+        for i in range(4)])
+    bad = _failing_chain(4, fail_at=1)
+    orch = Orchestrator(EdgeSoCCostModel())
+    plan = orch.plan([orch.register(good), orch.register(bad)])
+    with pytest.raises(_PayloadError, match="op payload failed"):
+        orch.executor.run_concurrent([good, bad], plan.schedule)
+
+
+# ---------------------------------------------------------------------------
+# MeasuredProfiler: measurement failures are collected, not swallowed
+# ---------------------------------------------------------------------------
+
+
+def _measurable_graph(fail_op=1):
+    def ok(x):
+        return jnp.tanh(x)
+
+    def broken(x):
+        raise _PayloadError("unmeasurable payload")
+
+    x = jnp.ones((8, 8))
+    ops = []
+    for i in range(3):
+        fn = broken if i == fail_op else ok
+        ops.append(FusedOp(f"m{i}", "act", ((8, 8),), (8, 8), fn=fn,
+                           meta={"example_inputs": (x,)}))
+    return chain_graph(ops)
+
+
+def test_measured_profiler_records_failures_and_falls_back(caplog):
+    from repro.core import MeasuredProfiler
+
+    g = _measurable_graph(fail_op=1)
+    prof = MeasuredProfiler(warmup=0, iters=1)
+    with caplog.at_level("WARNING", logger="repro.core.profiler"):
+        table = prof.profile(g)
+    failures = table.meta["profile_failures"]
+    assert set(failures) == {1}
+    assert "_PayloadError" in failures[1]
+    assert "unmeasurable payload" in failures[1]
+    assert any("measurement failed" in r.message for r in caplog.records)
+    # the failed op fell back to the pure analytic estimate (scale 1.0)
+    analytic = prof.model.build_table(g)
+    for pu in table.pus:
+        assert table.require(1, pu).kernel == analytic.require(1, pu).kernel
+    # measured ops still got a real (scaled) CPU anchor
+    assert table.require(0, "CPU").kernel > 0
+
+
+def test_measured_profiler_strict_raises_with_op_context():
+    from repro.core import MeasuredProfiler
+
+    g = _measurable_graph(fail_op=2)
+    prof = MeasuredProfiler(warmup=0, iters=1)
+    with pytest.raises(RuntimeError, match=r"op 2 \('m2'"):
+        prof.profile(g, strict=True)
+    # the knob is also a constructor default
+    with pytest.raises(RuntimeError, match="measuring op 2"):
+        MeasuredProfiler(warmup=0, iters=1, strict=True).profile(g)
+
+
+def test_measured_profiler_clean_run_has_no_failures():
+    from repro.core import MeasuredProfiler
+
+    g = _measurable_graph(fail_op=-1)          # no failing op
+    table = MeasuredProfiler(warmup=0, iters=1).profile(g)
+    assert table.meta["profile_failures"] == {}

@@ -1,0 +1,380 @@
+"""Compiled lane programs: segment partitioning, jit/python fusion modes,
+bitwise equivalence vs the per-op interpreter oracle across all three
+plan kinds, program caching, and error propagation."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (EdgeSoCCostModel, FusedOp, OpGraph, Orchestrator,
+                        Plan, ScheduleExecutor, chain_graph,
+                        results_bitwise_equal)
+from repro.core.costmodel import EDGE_PUS
+from repro.core.laneprogram import JIT, PYTHON
+from repro.core.schedule import ConcurrentSchedule, ConcurrentStep
+
+
+@pytest.fixture(scope="module")
+def model():
+    return EdgeSoCCostModel()
+
+
+def _x(dim=8, lo=0.0, hi=1.0):
+    return jnp.linspace(lo, hi, dim * dim, dtype=jnp.float32).reshape(dim, dim)
+
+
+def _jax_chain(n=8, salt=0.0, dim=8):
+    """Chain of jittable jnp payloads (tanh-terminated: no FMA-contraction
+    hazard, so segments must jit and stay bitwise)."""
+    ops = []
+    for i in range(n):
+        c = jnp.float32(1.0 + 0.01 * i + salt)
+        if i == 0:
+            ops.append(FusedOp(f"r{i}", "matmul", ((dim, dim), (dim, dim)),
+                               (dim, dim),
+                               fn=(lambda c: lambda v: jnp.tanh(v * c))(c)))
+        else:
+            ops.append(FusedOp(f"o{i}", "act", ((dim, dim),), (dim, dim),
+                               fn=(lambda c: lambda a: jnp.tanh(a) * c)(c)))
+    return chain_graph(ops)
+
+
+def _np_chain(n=5, dim=4):
+    """NumPy payloads: not jax-traceable -> composed-Python fallback."""
+    ops = [FusedOp(f"c{i}", "cumsum", ((dim, dim),), (dim, dim),
+                   fn=lambda a: np.cumsum(a, axis=0) / 2.0)
+           for i in range(n)]
+    return chain_graph(ops)
+
+
+def _fork_join():
+    w1 = jnp.arange(16.0, dtype=jnp.float32).reshape(4, 4) / 10.0
+    ops = [
+        FusedOp("src", "matmul", ((4, 4), (4, 4)), (4, 4),
+                fn=lambda: jnp.eye(4) @ w1),
+        FusedOp("a1", "act", ((4, 4),), (4, 4), fn=jnp.tanh),
+        FusedOp("a2", "act", ((4, 4),), (4, 4), fn=jnp.sin),
+        FusedOp("join", "add", ((4, 4), (4, 4)), (4, 4),
+                fn=lambda x, y: x + y),
+    ]
+    return OpGraph(ops, edges=[(0, 1), (0, 2), (1, 3), (2, 3)])
+
+
+# ---------------------------------------------------------------------------
+# segment partitioning
+# ---------------------------------------------------------------------------
+
+
+def test_same_lane_runs_become_single_segments(model):
+    g = _jax_chain(6)
+    ex = ScheduleExecutor(list(EDGE_PUS))
+    prog = ex.compile_scheduled(g, {0: "CPU", 1: "CPU", 2: "CPU",
+                                    3: "GPU", 4: "GPU", 5: "CPU"})
+    s = prog.stats
+    assert s["n_segments"] == 3          # CPU run | GPU run | CPU run
+    assert s["n_ops"] == 6
+    assert [seg.items for seg in prog.segments if seg.lane == "GPU"] \
+        == [[(0, 3), (0, 4)]]
+    # the GPU segment waits on the first CPU segment; the final CPU
+    # segment waits on the GPU one (cross-lane handoff cuts only)
+    by_lane = {seg.lane: seg for seg in prog.segments}
+    gpu = by_lane["GPU"]
+    assert prog.segments[gpu.deps[0]].lane == "CPU"
+
+
+def test_single_pu_assignment_is_one_segment(model):
+    g = _jax_chain(10)
+    ex = ScheduleExecutor(list(EDGE_PUS))
+    prog = ex.compile_scheduled(g, {i: "CPU" for i in range(10)})
+    assert prog.stats["n_segments"] == 1
+    assert prog.stats["max_segment_ops"] == 10
+
+
+def test_coscheduled_steps_force_single_op_barrier_segments(model):
+    """Every co-scheduled concurrent step must stay individually
+    dispatched (the granularity the contention laws priced)."""
+    g0, g1 = _jax_chain(2), _jax_chain(2, salt=0.3)
+    sched = ConcurrentSchedule(
+        steps=[ConcurrentStep(ops=(0, 0), pus=("CPU", "GPU"), cost=1.0),
+               ConcurrentStep(ops=(1, 1), pus=("CPU", "GPU"), cost=1.0)],
+        latency=2.0, energy=2.0, objective="latency", mode="joint")
+    ex = ScheduleExecutor(list(EDGE_PUS))
+    prog = ex.compile_concurrent([g0, g1], sched)
+    s = prog.stats
+    assert s["n_segments"] == 4 and s["n_barrier"] == 4
+    assert s["max_segment_ops"] == 1
+    ins = [{0: (_x(),)}, {0: (_x(lo=-1.0),)}]
+    got = prog.run(ins)
+    for g, i, o in zip((g0, g1), ins, got):
+        assert results_bitwise_equal(ex.run_monolithic(g, i), o)
+
+
+def test_solo_steps_fuse_coscheduled_steps_cut(model):
+    """A schedule where request 0 advances alone for 3 ops then both
+    requests co-schedule: the solo run fuses, the co-scheduled tail is
+    single-op segments."""
+    g0, g1 = _jax_chain(4), _jax_chain(1, salt=0.2)
+    steps = [ConcurrentStep(ops=(0, None), pus=("CPU", None), cost=1.0),
+             ConcurrentStep(ops=(1, None), pus=("CPU", None), cost=1.0),
+             ConcurrentStep(ops=(2, None), pus=("CPU", None), cost=1.0),
+             ConcurrentStep(ops=(3, 0), pus=("CPU", "GPU"), cost=1.0)]
+    sched = ConcurrentSchedule(steps=steps, latency=4.0, energy=4.0,
+                               objective="latency", mode="joint")
+    ex = ScheduleExecutor(list(EDGE_PUS))
+    prog = ex.compile_concurrent([g0, g1], sched)
+    s = prog.stats
+    assert s["n_segments"] == 3          # fused [0,1,2] | barrier 3 | barrier
+    assert s["n_barrier"] == 2
+    assert s["max_segment_ops"] == 3
+
+
+# ---------------------------------------------------------------------------
+# fusion modes: jit where bitwise-safe, python fallback otherwise
+# ---------------------------------------------------------------------------
+
+
+def test_jax_payloads_jit_after_first_run(model):
+    orch = Orchestrator(model)
+    g = _jax_chain(8)
+    plan = orch.plan(orch.register(g))
+    inputs = {0: (_x(),)}
+    orch.execute(plan, inputs)
+    prog = orch.program_for(plan, inputs)
+    assert prog.stats["n_cold"] == 0
+    assert prog.stats["n_jitted"] >= 1
+    assert all(seg.mode == JIT for seg in prog.segments)
+
+
+def test_numpy_payloads_fall_back_to_python(model):
+    orch = Orchestrator(model)
+    g = _np_chain()
+    plan = orch.plan(orch.register(g))
+    inputs = {0: (np.random.default_rng(0).standard_normal((4, 4)),)}
+    got = orch.execute(plan, inputs)
+    prog = orch.program_for(plan, inputs)
+    assert all(seg.mode == PYTHON for seg in prog.segments)
+    assert results_bitwise_equal(
+        orch.executor.run_monolithic(g, inputs), got)
+
+
+def test_fma_contraction_hazard_falls_back_not_wrong(model):
+    """A payload whose mul feeds an add gets FMA-contracted under jit on
+    this backend *or* stays bitwise — either way the probe keeps the
+    program bitwise-identical to the interpreter."""
+    ops = []
+    for i in range(6):
+        c = jnp.float32(1.0 + 0.01 * i)
+        ops.append(FusedOp(f"fma{i}", "act", ((8, 8),), (8, 8),
+                           fn=(lambda c: lambda a: a * c + 0.125)(c)))
+    g = chain_graph(ops)
+    orch = Orchestrator(model)
+    plan = orch.plan(orch.register(g))
+    inputs = {0: (_x(),)}
+    got = orch.execute(plan, inputs)
+    assert results_bitwise_equal(
+        orch.executor.run_monolithic(g, inputs), got)
+
+
+def test_none_payload_ops_stay_python_and_return_none(model):
+    ops = [FusedOp("a", "act", ((4, 4),), (4, 4), fn=jnp.tanh),
+           FusedOp("b", "other", (), (), fn=None),
+           FusedOp("c", "act", (), (4, 4), fn=lambda _: jnp.ones((4, 4)))]
+    g = chain_graph(ops)
+    orch = Orchestrator(model)
+    plan = orch.plan(orch.register(g))
+    inputs = {0: (_x(4),)}
+    got = orch.execute(plan, inputs)
+    mono = orch.executor.run_monolithic(g, inputs)
+    assert got[1] is None and mono[1] is None
+    assert results_bitwise_equal(mono, got)
+
+
+# ---------------------------------------------------------------------------
+# compiled-vs-interpreted bitwise equivalence across all three plan kinds
+# ---------------------------------------------------------------------------
+
+
+def test_sequential_plan_compiled_bitwise_vs_oracle(model):
+    orch = Orchestrator(model)
+    g = _jax_chain(12)
+    plan = orch.plan(orch.register(g))
+    assert plan.kind == "sequential"
+    inputs = {0: (_x(),)}
+    compiled = orch.execute(plan, inputs)
+    interp = orch.execute(plan, inputs, compile=False)
+    mono = orch.executor.run_monolithic(g, inputs)
+    assert results_bitwise_equal(mono, compiled)
+    assert results_bitwise_equal(interp, compiled)
+
+
+def test_parallel_plan_compiled_bitwise_vs_oracle(model):
+    orch = Orchestrator(model)
+    g = _fork_join()
+    plan = orch.plan(orch.register(g))
+    assert plan.kind == "parallel"
+    compiled = orch.execute(plan)
+    interp = orch.execute(plan, compile=False)
+    mono = orch.executor.run_monolithic(g)
+    assert results_bitwise_equal(mono, compiled)
+    assert results_bitwise_equal(interp, compiled)
+    np.testing.assert_array_equal(np.asarray(compiled[3]),
+                                  np.asarray(mono[3]))
+
+
+def test_concurrent_plan_compiled_bitwise_vs_isolated(model):
+    orch = Orchestrator(model)
+    graphs = [_jax_chain(6), _np_chain(5), _jax_chain(4, salt=0.5)]
+    plan = orch.plan([orch.register(g) for g in graphs])
+    assert plan.kind == "concurrent"
+    rng = np.random.default_rng(1)
+    ins = [{0: (_x(),)}, {0: (rng.standard_normal((4, 4)),)},
+           {0: (_x(lo=-2.0, hi=2.0),)}]
+    compiled = orch.execute(plan, ins)
+    interp = orch.execute(plan, ins, compile=False)
+    for g, i, c, it in zip(graphs, ins, compiled, interp):
+        mono = orch.executor.run_monolithic(g, i)
+        assert results_bitwise_equal(mono, c)
+        assert results_bitwise_equal(it, c)
+
+
+# ---------------------------------------------------------------------------
+# program caching on the orchestrator
+# ---------------------------------------------------------------------------
+
+
+def test_repeat_execute_hits_program_cache(model):
+    orch = Orchestrator(model)
+    g = _jax_chain(6)
+    plan = orch.plan(orch.register(g))
+    inputs = {0: (_x(),)}
+    orch.execute(plan, inputs)
+    assert orch.stats["program_misses"] == 1
+    prog = orch.program_for(plan, inputs)       # cache hit, same object
+    orch.execute(plan, inputs)
+    assert orch.stats["program_misses"] == 1
+    assert orch.stats["program_hits"] == 2
+    assert orch.program_for(plan, inputs) is prog
+    assert prog.runs == 2
+
+
+def test_input_shape_change_compiles_a_new_program(model):
+    orch = Orchestrator(model)
+    g = _jax_chain(4)
+    plan = orch.plan(orch.register(g))
+    orch.execute(plan, {0: (_x(8),)})
+    orch.execute(plan, {0: (_x(16),)})
+    assert orch.stats["program_misses"] == 2
+
+
+def test_equal_signature_plans_compile_per_handle(model):
+    """Two graphs with identical cost signatures but different payloads
+    share a cached *plan*; their compiled programs must not be shared
+    (the payloads differ)."""
+    orch = Orchestrator(model)
+    g1, g2 = _jax_chain(5), _jax_chain(5, salt=0.25)
+    h1, h2 = orch.register(g1), orch.register(g2)
+    p1 = orch.plan(h1)
+    p2 = orch.plan(h2)                  # plan-cache hit, handles re-bound
+    assert orch.stats["hits"] >= 1
+    inputs = {0: (_x(),)}
+    out1 = orch.execute(p1, inputs)
+    out2 = orch.execute(p2, inputs)
+    assert orch.stats["program_misses"] == 2
+    assert results_bitwise_equal(
+        orch.executor.run_monolithic(g1, inputs), out1)
+    assert results_bitwise_equal(
+        orch.executor.run_monolithic(g2, inputs), out2)
+    assert not results_bitwise_equal(out1, out2)
+
+
+def test_rebound_payload_recompiles_instead_of_serving_stale_program(model):
+    """Rebinding graph.ops[i].fn after compilation must invalidate the
+    cached program — compiled results always match the current payloads
+    (and so the compile=False interpreter)."""
+    orch = Orchestrator(model)
+    g = _jax_chain(5)
+    plan = orch.plan(orch.register(g))
+    inputs = {0: (_x(),)}
+    orch.execute(plan, inputs)
+    g.ops[2].fn = lambda a: jnp.sin(a) * 2.0      # new weights, same shape
+    got = orch.execute(plan, inputs)
+    assert orch.stats["program_misses"] == 2      # recompiled, not served
+    assert results_bitwise_equal(
+        orch.executor.run_monolithic(g, inputs), got)
+    assert results_bitwise_equal(
+        orch.execute(plan, inputs, compile=False), got)
+
+
+def test_program_cache_eviction_closes_worker_pool(model):
+    orch = Orchestrator(model, max_cached_programs=1)
+    graphs = [_jax_chain(3), _jax_chain(3, salt=0.4)]
+    plan = orch.plan([orch.register(g) for g in graphs])
+    ins1 = [{0: (_x(8),)}, {0: (_x(8, lo=-1.0),)}]
+    ins2 = [{0: (_x(16),)}, {0: (_x(16, lo=-1.0),)}]
+    first = orch.program_for(plan, ins1)
+    orch.execute(plan, ins1)                      # spins up the pool
+    assert first._pool is not None or first.serial_order is not None
+    orch.execute(plan, ins2)                      # evicts the first program
+    assert len(orch._programs) == 1
+    assert first._pool is None                    # pool shut down on evict
+    # an evicted program that a caller still holds keeps working
+    got = first.run(ins1)
+    assert results_bitwise_equal(
+        orch.executor.run_monolithic(graphs[0], ins1[0]), got[0])
+
+
+def test_plan_restored_from_json_executes_compiled(model):
+    orch = Orchestrator(model)
+    g = _jax_chain(5)
+    plan = orch.plan(orch.register(g))
+    restored = Plan.from_json(plan.to_json())
+    assert restored.cache_key is None   # content-token fallback path
+    inputs = {0: (_x(),)}
+    got = orch.execute(restored, inputs)
+    assert results_bitwise_equal(
+        orch.executor.run_monolithic(g, inputs), got)
+    # same restored plan again: content token is stable -> cache hit
+    orch.execute(restored, inputs)
+    assert orch.stats["program_misses"] == 1
+    assert orch.stats["program_hits"] == 1
+
+
+def test_partial_plan_still_rejected_on_compiled_path(model):
+    orch = Orchestrator(model)
+    g = _jax_chain(6)
+    h = orch.register(g)
+    orch.admit(h)
+    orch.advance(h, 2)
+    tail = orch.admit(h)
+    with pytest.raises(ValueError,
+                       match="does not cover|before its predecessor"):
+        orch.execute(tail, [{0: (_x(),)}])
+
+
+# ---------------------------------------------------------------------------
+# error propagation (no deadlock, original exception surfaces)
+# ---------------------------------------------------------------------------
+
+
+def _boom_graph():
+    ops = [FusedOp("a", "act", ((4, 4),), (4, 4), fn=jnp.tanh),
+           FusedOp("boom", "act", ((4, 4),), (4, 4),
+                   fn=lambda a: (_ for _ in ()).throw(
+                       RuntimeError("payload exploded"))),
+           FusedOp("c", "act", ((4, 4),), (4, 4), fn=jnp.sin)]
+    return chain_graph(ops)
+
+
+def test_compiled_run_propagates_original_exception(model):
+    orch = Orchestrator(model)
+    g = _boom_graph()
+    plan = orch.plan(orch.register(g))
+    with pytest.raises(RuntimeError, match="payload exploded"):
+        orch.execute(plan, {0: (_x(4),)})
+
+
+def test_compiled_concurrent_error_does_not_deadlock_other_lanes(model):
+    orch = Orchestrator(model)
+    graphs = [_jax_chain(4), _boom_graph()]
+    plan = orch.plan([orch.register(g) for g in graphs])
+    with pytest.raises(RuntimeError, match="payload exploded"):
+        orch.execute(plan, [{0: (_x(),)}, {0: (_x(4),)}])

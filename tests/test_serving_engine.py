@@ -1,0 +1,55 @@
+"""Engine.generate decode-step compilation reuse.
+
+Regression for the re-jitting bug: ``generate`` used to build
+``jax.jit(lambda ...)`` *inside* the method, so every call owned a fresh
+jit cache and re-traced + re-compiled the decode step.  The step is now
+cached on the engine; the traced-call counter (incremented only when jax
+actually traces) proves two same-shape ``generate`` calls share one
+compilation.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving.engine import Engine
+from repro.sharding import Policy
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = get_config("llama3.2-1b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return Engine(cfg=cfg, params=params, policy=Policy())
+
+
+def _prompts(engine, batch=2, seq=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, engine.cfg.vocab, (batch, seq),
+                                    dtype=np.int32))
+
+
+def test_two_generates_reuse_one_decode_compilation(engine):
+    toks = _prompts(engine)
+    out1 = engine.generate(toks, max_new=3)
+    assert sum(engine.decode_trace_counts.values()) == 1
+    out2 = engine.generate(toks, max_new=3)
+    # same shapes -> still exactly one trace, and greedy decode is
+    # deterministic, so the outputs must agree
+    assert sum(engine.decode_trace_counts.values()) == 1
+    assert len(engine.decode_trace_counts) == 1
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert out1.shape == (2, 3)
+
+
+def test_new_shapes_trace_once_each(engine):
+    engine.generate(_prompts(engine), max_new=3)
+    base = sum(engine.decode_trace_counts.values())
+    # a different max_len changes the cache shapes -> exactly one new
+    # trace, reused by the repeat call
+    engine.generate(_prompts(engine), max_new=3, max_len=24)
+    assert sum(engine.decode_trace_counts.values()) == base + 1
+    engine.generate(_prompts(engine), max_new=3, max_len=24)
+    assert sum(engine.decode_trace_counts.values()) == base + 1
