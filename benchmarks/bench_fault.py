@@ -1,0 +1,188 @@
+"""Fault-runtime benchmark: watchdog overhead on the fault-free path and
+mid-run PU-loss recovery latency.
+
+Two claims of the fault-tolerant execution runtime are quantitative, so
+they get measured, recorded in ``BENCH_exec.json`` (under ``"fault"``),
+and gated:
+
+* **Fault-free overhead** — the watchdog instrumentation (deadline-bounded
+  waits, abort checks, ``RunContext`` bookkeeping) must cost <= 10% on
+  the warm-compiled path vs the pre-fault-runtime semantics, which remain
+  available as ``ExecutionPolicy(watchdog=False)`` — the PR 5 baseline,
+  measured in the same process so the ratio is machine-honest.  Serial
+  programs skip the runtime entirely when fault-free (ratio ~1.0); the
+  M=3 concurrent program exercises the real bounded-wait lane path.
+
+* **Recovery latency** — a permanent PU loss injected mid-run must
+  recover (re-plan remaining ops on surviving PUs + resume from the
+  frontier) with outputs bitwise-identical to the fault-free run; the
+  wall-clock cost of that loss → re-plan → resume cycle is recorded.
+
+Both gates (overhead ratio geomean <= 1.10, bitwise recovery) are
+enforced even under ``--smoke`` — they are the acceptance criteria of the
+fault runtime, not informational timings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import (EDGE_PUS, EdgeSoCCostModel, ExecutionPolicy,
+                        FaultPlan, Orchestrator, results_bitwise_equal)
+from repro.core.paperzoo import zoo
+
+from .bench_exec import (SMOKE_MODELS, ZOO_MODELS, _best_of,
+                         _concurrent_payload_models, attach_payloads)
+from .common import geomean
+
+OVERHEAD_GATE = 1.10          # watchdog-on / watchdog-off, warm path
+BASELINE = ExecutionPolicy(watchdog=False)    # PR 5 execution semantics
+
+
+def _overhead_row(orch: Orchestrator, plan, inputs, repeats: int) -> dict:
+    """Warm-path wall-clock with the watchdog on vs off (same process,
+    same program cache — only the runtime instrumentation differs)."""
+    orch.execute(plan, inputs)                      # compile + warm
+    orch.execute(plan, inputs, policy=BASELINE)
+    off_s = _best_of(
+        lambda: orch.execute(plan, inputs, policy=BASELINE), repeats)
+    on_s = _best_of(lambda: orch.execute(plan, inputs), repeats)
+    return {
+        "warm_off_ms": 1e3 * off_s,
+        "warm_on_ms": 1e3 * on_s,
+        "overhead_ratio": on_s / off_s,
+    }
+
+
+def _recovery_row(smoke: bool) -> dict:
+    """Inject a permanent PU loss mid-run on an M=3 concurrent plan and
+    time the loss → re-plan → resume cycle (interpreter path: the resume
+    runs there, and the frontier semantics are identical on both)."""
+    graphs, inputs = _concurrent_payload_models(8 if smoke else 16)
+    orch = Orchestrator(EdgeSoCCostModel(), EDGE_PUS)
+    plan = orch.plan([orch.register(g) for g in graphs])
+    ref = orch.execute(plan, inputs, compile=False)
+    ff_s = _best_of(lambda: orch.execute(plan, inputs, compile=False),
+                    2 if smoke else 3)
+
+    # fresh session per injected loss (recovery mutates the condition)
+    orch2 = Orchestrator(EdgeSoCCostModel(), EDGE_PUS)
+    plan2 = orch2.plan([orch2.register(g) for g in graphs])
+    orch2.execute(plan2, inputs, compile=False)     # warm eager caches
+    faults = FaultPlan.single("pu_lost", request=1,
+                              op=len(graphs[1]) // 2)
+    t0 = time.perf_counter()
+    out = orch2.execute(plan2, inputs, compile=False, faults=faults)
+    rec_s = time.perf_counter() - t0
+    bitwise = all(results_bitwise_equal(a, b) for a, b in zip(out, ref))
+
+    # transient retry cost: one injected transient, default backoff
+    orch3 = Orchestrator(EdgeSoCCostModel(), EDGE_PUS)
+    plan3 = orch3.plan([orch3.register(g) for g in graphs])
+    orch3.execute(plan3, inputs, compile=False)
+    tf = FaultPlan.single("transient", request=0, op=1)
+    t0 = time.perf_counter()
+    out_t = orch3.execute(plan3, inputs, compile=False, faults=tf)
+    retry_s = time.perf_counter() - t0
+    bitwise_t = all(results_bitwise_equal(a, b) for a, b in zip(out_t, ref))
+
+    return {
+        "n_ops": sum(len(g) for g in graphs),
+        "fault_free_ms": 1e3 * ff_s,
+        "pu_lost_recovered_ms": 1e3 * rec_s,
+        "recovery_overhead_ms": 1e3 * (rec_s - ff_s),
+        "recoveries": orch2.stats["recoveries"],
+        "lost_pu": sorted(faults.lost),
+        "bitwise_recovered": bitwise,
+        "transient_retry_ms": 1e3 * retry_s,
+        "bitwise_after_retry": bitwise_t,
+    }
+
+
+def run(verbose: bool = True, smoke: bool = False,
+        out_path: str | None = None) -> dict:
+    model = EdgeSoCCostModel()
+    z = zoo()
+    names = SMOKE_MODELS if smoke else ZOO_MODELS
+    repeats = 15 if smoke else 40
+
+    fault: dict = {"smoke": smoke, "overhead": {}, "recovery": {}}
+    for name in names:
+        g = z[name]
+        inputs = attach_payloads(g)
+        orch = Orchestrator(model, EDGE_PUS)
+        plan = orch.plan(orch.register(g))
+        fault["overhead"][name] = _overhead_row(orch, plan, inputs, repeats)
+
+    graphs, inputs = _concurrent_payload_models(12 if smoke else 24)
+    orch = Orchestrator(model, EDGE_PUS)
+    cplan = orch.plan([orch.register(g) for g in graphs])
+    fault["overhead"][f"M=3 x {len(graphs[0])} ops"] = _overhead_row(
+        orch, cplan, inputs, repeats)
+
+    fault["recovery"] = _recovery_row(smoke)
+
+    ratios = [r["overhead_ratio"] for r in fault["overhead"].values()]
+    ratio = geomean(ratios)
+    fault["overhead_ratio_geomean"] = ratio
+    rec = fault["recovery"]
+    fault["checks"] = {
+        "fault-free warm-compiled overhead of watchdog instrumentation "
+        "<= %.0f%% vs watchdog-off baseline (geomean %.3fx)"
+        % (100 * (OVERHEAD_GATE - 1), ratio): ratio <= OVERHEAD_GATE,
+        "mid-run PU loss recovers bitwise-identical to the fault-free run":
+            bool(rec["bitwise_recovered"] and rec["recoveries"] >= 1),
+        "transient fault retries to bitwise-identical outputs":
+            bool(rec["bitwise_after_retry"]),
+    }
+
+    if verbose:
+        print(f"== fault-runtime benchmark ({'smoke' if smoke else 'full'}) ==")
+        for name, r in fault["overhead"].items():
+            print(f"  {name:24s} warm off {r['warm_off_ms']:7.3f}ms  "
+                  f"on {r['warm_on_ms']:7.3f}ms  "
+                  f"ratio {r['overhead_ratio']:.3f}x")
+        print(f"  pu_lost: fault-free {rec['fault_free_ms']:.1f}ms -> "
+              f"recovered {rec['pu_lost_recovered_ms']:.1f}ms "
+              f"(+{rec['recovery_overhead_ms']:.1f}ms, "
+              f"{rec['recoveries']} recovery, lost {rec['lost_pu']})  "
+              f"bitwise={'OK' if rec['bitwise_recovered'] else 'FAIL'}")
+        print(f"  transient retry: {rec['transient_retry_ms']:.1f}ms  "
+              f"bitwise={'OK' if rec['bitwise_after_retry'] else 'FAIL'}")
+        for c, ok in fault["checks"].items():
+            print(f"  [{'PASS' if ok else 'FAIL'}] {c}")
+
+    if out_path:
+        # merge into the executor benchmark record rather than clobbering
+        merged: dict = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                merged = json.load(f)
+        merged["fault"] = fault
+        with open(out_path, "w") as f:
+            json.dump(merged, f, indent=2)
+        if verbose:
+            print(f"wrote {out_path} (fault section)")
+    return fault
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset (CI)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path ('' to skip writing; default "
+                         "BENCH_exec.json, or BENCH_exec.smoke.json under "
+                         "--smoke so the tracked full-run trajectory is "
+                         "never clobbered by a smoke run)")
+    args = ap.parse_args()
+    out_path = args.out
+    if out_path is None:
+        out_path = "BENCH_exec.smoke.json" if args.smoke else "BENCH_exec.json"
+    out = run(smoke=args.smoke, out_path=out_path or None)
+    # every check gates, even under --smoke: the overhead ceiling and the
+    # bitwise-recovery guarantee are acceptance criteria of the runtime
+    raise SystemExit(0 if all(out["checks"].values()) else 1)

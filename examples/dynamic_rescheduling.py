@@ -10,10 +10,20 @@ stitched plan — prefix at the nominal profile, tail under the throttled
 condition.  The low-level ``DynamicScheduler.simulate`` then replays the
 whole chain to compare realised latencies against a static schedule.
 
+The second act is the mid-run case the condition hook alone can't cover:
+a PU dies *during* execution.  A scripted ``FaultPlan`` kills a lane
+partway through a real run; the executor surfaces the loss with the
+completed-results frontier attached, and ``orch.execute`` recovers —
+re-plans the remaining ops on the surviving PUs and resumes — with
+outputs bitwise-identical to the fault-free run.
+
 Run:  PYTHONPATH=src python examples/dynamic_rescheduling.py
 """
-from repro.core import (EDGE_PUS, AnalyticProfiler, OpGraph, Orchestrator,
-                        RuntimeCondition)
+import numpy as np
+
+from repro.core import (EDGE_PUS, AnalyticProfiler, FaultPlan, FusedOp,
+                        OpGraph, Orchestrator, RuntimeCondition,
+                        chain_graph, results_bitwise_equal)
 from repro.core.costmodel import make_cumsum, make_matmul
 from repro.core.dynamic import DynamicScheduler
 
@@ -59,3 +69,36 @@ print(f"\nrealised latency: static {t_static*1e3:.2f} ms, "
       f"dynamic {t_dyn*1e3:.2f} ms ({t_static/t_dyn:.2f}x)")
 assert t_dyn < t_static
 assert dyn.plan.assignment == restitched.schedule.assignment
+
+# -- mid-run PU loss: fault injection + re-plan-and-resume recovery ------
+import jax.numpy as jnp  # noqa: E402  (the fault demo runs real payloads)
+
+print("\nevent: the lane holding op 5 dies permanently DURING execution\n")
+ops2 = []
+for i in range(10):
+    c = jnp.float32(1.0 + 0.01 * i)
+    ops2.append(FusedOp(name=f"f{i}", kind="matmul", flops=1e7,
+                        bytes_moved=1e5,
+                        fn=(lambda c: lambda x: jnp.tanh(x * c))(c)))
+g2 = chain_graph(ops2)
+x0 = jnp.asarray(np.linspace(-1, 1, 64, dtype=np.float32).reshape(8, 8))
+inputs = {0: (x0,)}
+
+orch2 = Orchestrator(AnalyticProfiler())
+plan2 = orch2.plan(orch2.register(g2))
+reference = orch2.execute(plan2, inputs)          # fault-free run
+
+# kill whatever lane op 5 lands on, the moment it is dispatched
+faults = FaultPlan.single("pu_lost", request=0, op=5)
+recovered = orch2.execute(plan2, inputs, faults=faults)
+
+lost = next(iter(faults.lost))
+print(f"lost PU      : {lost} (at op 5; injected via FaultPlan)")
+print(f"recoveries   : {orch2.stats['recoveries']} "
+      f"(condition now marks {sorted(orch2.condition.unavailable)} "
+      "unavailable; stale cached plans were invalidated)")
+replanned = orch2.plan(plan2.handles)
+print(f"re-planned   : {replanned.schedule.assignment} (survivors only)")
+assert lost not in replanned.schedule.assignment
+assert results_bitwise_equal(recovered, reference)
+print("recovered outputs are bitwise-identical to the fault-free run")

@@ -18,7 +18,11 @@ from .costmodel import (CPU, GPU, NPU, EDGE_PUS, DEFAULT_SF, CostEntry,
                         CostTable, DenseCostTable, EdgeSoCCostModel, PUSpec,
                         transition_cost)
 from .dynamic import DynamicScheduler, RuntimeCondition
+from .errors import (ExecutionError, ExecutionTimeoutError,
+                     FaultRetryExceededError, PULostError)
 from .executor import ScheduleExecutor
+from .faults import (DEFAULT_POLICY, ExecutionPolicy, FaultPlan, FaultSpec,
+                     TransientFault)
 from .laneprogram import LaneProgram, compile_lane_program, results_bitwise_equal
 from .graph import (DenseChain, ExecGraph, build_dense_chain,
                     build_sequential_graph)
@@ -44,6 +48,9 @@ __all__ = [
     "uses_default_coexec", "uses_default_group", "CPU", "GPU", "NPU",
     "EDGE_PUS", "DEFAULT_SF", "CostEntry", "CostTable", "DenseCostTable",
     "DynamicScheduler", "EdgeSoCCostModel", "InfeasibleScheduleError",
+    "ExecutionError", "ExecutionTimeoutError", "FaultRetryExceededError",
+    "PULostError", "DEFAULT_POLICY", "ExecutionPolicy", "FaultPlan",
+    "FaultSpec", "TransientFault",
     "Orchestrator", "PUSpec",
     "Plan", "RuntimeCondition", "Workload", "DEFAULT_MAX_STATES",
     "transition_cost", "ScheduleExecutor", "LaneProgram",

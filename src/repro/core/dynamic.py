@@ -70,6 +70,15 @@ class RuntimeCondition:
         return not self.unavailable and all(
             float(f) == 1.0 for f in self.slowdown.values())
 
+    def lose(self, *pus: str) -> "RuntimeCondition":
+        """This condition with ``pus`` additionally unavailable — how a
+        permanent mid-run PU loss folds into the session condition
+        (``Orchestrator`` recovery: re-plan the remaining ops on the
+        surviving PUs)."""
+        return RuntimeCondition(
+            slowdown=dict(self.slowdown),
+            unavailable=frozenset(self.unavailable) | set(pus))
+
 
 # InfeasibleScheduleError historically lived here; it now sits in
 # ``repro.core.errors`` so the concurrent solvers can raise it too

@@ -1,11 +1,15 @@
-"""Shared scheduler error types.
+"""Shared scheduler + execution-runtime error types.
 
-Lives in its own leaf module so both the search engine
-(:mod:`repro.core.search`) and the dynamic scheduler
-(:mod:`repro.core.dynamic`, which imports the search engine) can raise
-the same exception without a circular import.
+Lives in its own leaf module so the search engine
+(:mod:`repro.core.search`), the dynamic scheduler
+(:mod:`repro.core.dynamic`, which imports the search engine), and the
+execution runtime (:mod:`repro.core.executor` /
+:mod:`repro.core.laneprogram` / :mod:`repro.core.faults`) can raise the
+same exceptions without circular imports.
 """
 from __future__ import annotations
+
+from typing import Any
 
 
 class InfeasibleScheduleError(ValueError):
@@ -15,3 +19,49 @@ class InfeasibleScheduleError(ValueError):
     Raised with context — which request, which op, which chain position —
     instead of a bare ``ValueError`` from deep inside a solver loop.
     """
+
+
+class ExecutionError(RuntimeError):
+    """Base class for failures of the execution runtime (as opposed to
+    planning failures, which are :class:`InfeasibleScheduleError`)."""
+
+
+class ExecutionTimeoutError(ExecutionError):
+    """A cross-lane wait (or a whole run) exceeded its watchdog budget.
+
+    Every ``threading.Event`` wait in the executor and the compiled
+    :class:`~repro.core.laneprogram.LaneProgram` is bounded by a deadline
+    derived from the plan's cost-model estimate times a configurable
+    factor (see :class:`~repro.core.faults.ExecutionPolicy`); a lane that
+    hangs raises this — naming the lane, op/segment, and elapsed vs
+    budget — instead of deadlocking the run forever.
+    """
+
+
+class PULostError(ExecutionError):
+    """A PU lane died permanently mid-run (injected via
+    :class:`~repro.core.faults.FaultPlan` kind ``"pu_lost"``, or raised
+    by a payload that detects its device is gone).
+
+    Carries the loss point and — attached by the executor before the
+    error propagates — the execution *frontier*: ``partial`` is the list
+    of per-request results dicts completed before the loss, which
+    ``Orchestrator.execute`` uses to re-plan the remaining ops on the
+    surviving PUs and resume without recomputing finished work.
+    """
+
+    def __init__(self, message: str, pu: str | None = None,
+                 request: int | None = None, op: int | None = None):
+        super().__init__(message)
+        self.pu = pu
+        self.request = request
+        self.op = op
+        # per-request {op: result} dicts completed before the loss;
+        # attached by the raising executor path
+        self.partial: list[dict[int, Any]] | None = None
+
+
+class FaultRetryExceededError(ExecutionError):
+    """A transient (``RecoverableError``) failure persisted through every
+    bounded retry attempt; raised ``from`` the final transient error with
+    the failing point and attempt count in the message."""

@@ -19,15 +19,28 @@ model:
   payloads fuse into one callable (jitted when bitwise-safe), and events
   exist only at the cross-lane boundary cuts.  Same results, a fraction
   of the dispatch/synchronisation overhead — see ``laneprogram``.
+
+Both paths run under the fault runtime of :mod:`repro.core.faults`: every
+cross-lane wait is bounded by the watchdog budget, a failure on one lane
+releases every event so sibling lanes unwind instead of parking on a dead
+producer, transient (``RecoverableError``) payload failures retry with
+backoff, and a permanent PU loss surfaces as
+:class:`~repro.core.errors.PULostError` carrying the execution frontier
+(``partial``) so the orchestrator can re-plan and resume.  Lane workers
+are daemon threads: even a payload the watchdog cannot interrupt (a
+genuine native hang) cannot block interpreter shutdown.
 """
 from __future__ import annotations
 
 import threading
-from concurrent.futures import ThreadPoolExecutor
+import time
 from typing import Any, Mapping, Sequence
 
 import numpy as np
 
+from .errors import PULostError
+from .faults import (_JOIN_GRACE, ExecutionPolicy, FaultPlan, RunContext,
+                     _Aborted, run_with_retries)
 from .laneprogram import LaneProgram, compile_lane_program
 from .op import OpGraph
 
@@ -41,21 +54,35 @@ class ScheduleExecutor:
     def run_monolithic(self, graph: OpGraph,
                        external_inputs: Mapping[int, tuple] | None = None) -> dict[int, Any]:
         """Reference: run everything on one lane in topological order."""
-        return self._run(graph, external_inputs, lanes=1, assignment=None)
+        ext = dict(external_inputs or {})
+        results: dict[int, Any] = {}
+        for i in graph.topo_order():
+            op = graph.ops[i]
+            if op.fn is None:
+                results[i] = None
+            else:
+                e = ext.get(i, ())
+                dep_vals = tuple(results[p] for p in graph.pred[i])
+                results[i] = op.fn(*(tuple(e) + dep_vals))
+        return results
 
     # ------------------------------------------------------------------
     # assignment / schedule normalization (shared by both paths)
     # ------------------------------------------------------------------
-    def _normalize_assignment(self, graph: OpGraph, assignment
+    def _normalize_assignment(self, graph: OpGraph, assignment,
+                              completed: Mapping[int, Any] | None = None
                               ) -> dict[int, str]:
         """``{op index: PU name}`` from a mapping or any schedule object
         exposing one (``SeqSchedule`` — via its chain — or
-        ``ParallelSchedule.assignment``), with coverage validation."""
+        ``ParallelSchedule.assignment``), with coverage validation.
+        Ops already present in ``completed`` (a resume frontier) need no
+        assignment."""
         if hasattr(assignment, "chain") and hasattr(assignment, "assignment"):
             assignment = dict(zip(assignment.chain, assignment.assignment))
         elif hasattr(assignment, "assignment"):
             assignment = assignment.assignment
-        missing = [i for i in range(len(graph.ops)) if i not in assignment]
+        have = set(assignment) | set(completed or ())
+        missing = [i for i in range(len(graph.ops)) if i not in have]
         if missing:
             raise ValueError(
                 f"assignment does not cover the graph: {len(missing)} op(s) "
@@ -64,15 +91,22 @@ class ScheduleExecutor:
         return dict(assignment)
 
     def _scheduled_lane_queues(self, graph: OpGraph,
-                               assignment: Mapping[int, str]
+                               assignment: Mapping[int, str],
+                               completed: Mapping[int, Any] | None = None
                                ) -> dict[str, list[int]]:
-        """One FIFO lane per PU; ops enqueue in topological order."""
+        """One FIFO lane per PU; ops enqueue in topological order.
+        Completed (frontier) ops are not re-enqueued."""
         lane_queues: dict[str, list[int]] = {p: [] for p in self.pus}
+        done = completed or ()
         for i in graph.topo_order():
+            if i in done:
+                continue
             lane_queues[assignment[i]].append(i)
         return lane_queues
 
-    def _concurrent_lane_queues(self, graphs: Sequence[OpGraph], schedule
+    def _concurrent_lane_queues(self, graphs: Sequence[OpGraph], schedule,
+                                completed: Sequence[Mapping[int, Any]] | None
+                                = None
                                 ) -> tuple[dict[str, list[tuple[int, int]]],
                                            set[tuple[int, int]]]:
         """Lane queues in schedule-step order + the co-scheduled op set.
@@ -82,7 +116,9 @@ class ScheduleExecutor:
         Ops of a step where >= 2 requests advance together are returned
         as *barrier* ops: the compiled path keeps them individually
         dispatched so the co-execution granularity the contention laws
-        priced is preserved.
+        priced is preserved.  ``completed`` (a resume frontier) seeds the
+        per-request done sets: frontier ops need no schedule step and
+        satisfy dependency/coverage checks.
         """
         m = len(graphs)
         if schedule.n_requests != m:
@@ -91,11 +127,14 @@ class ScheduleExecutor:
                 f"got {m} graphs")
         lane_queues: dict[str, list[tuple[int, int]]] = {p: [] for p in self.pus}
         barriers: set[tuple[int, int]] = set()
-        seen: list[set[int]] = [set() for _ in range(m)]
+        seen: list[set[int]] = [set(completed[r]) if completed else set()
+                                for r in range(m)]
         for st in schedule.steps:
             active = [(r, oi, pu) for r, (oi, pu)
                       in enumerate(zip(st.ops, st.pus)) if oi is not None]
             for r, oi, pu in active:
+                if completed and oi in seen[r] and oi in completed[r]:
+                    continue  # frontier op re-listed by a stale schedule
                 missing_pred = [p for p in graphs[r].pred[oi]
                                 if p not in seen[r]]
                 if missing_pred:
@@ -119,72 +158,44 @@ class ScheduleExecutor:
     # per-op interpreter (the bitwise-equivalence oracle)
     # ------------------------------------------------------------------
     def run_scheduled(self, graph: OpGraph, assignment,
-                      external_inputs: Mapping[int, tuple] | None = None) -> dict[int, Any]:
+                      external_inputs: Mapping[int, tuple] | None = None, *,
+                      policy: ExecutionPolicy | None = None,
+                      faults: FaultPlan | None = None,
+                      completed: Mapping[int, Any] | None = None,
+                      estimate: float | None = None) -> dict[int, Any]:
         """Run under the schedule: one worker lane per PU, event-synced.
 
         ``assignment`` is an ``{op index: PU name}`` mapping, or any
         schedule object exposing one (``SeqSchedule`` — via its chain —
         or ``ParallelSchedule.assignment``), so orchestrator plans can be
         executed without hand-building the mapping.
+
+        ``policy`` tunes the watchdog/retry runtime (see
+        :class:`~repro.core.faults.ExecutionPolicy`; ``estimate`` — e.g.
+        the plan's cost-model latency — scales the watchdog budget),
+        ``faults`` injects a scripted :class:`FaultPlan`, and
+        ``completed`` resumes from an execution frontier: ops with a
+        recorded result are not re-run (their values seed the results
+        dict), which is how post-PU-loss recovery preserves bitwise
+        equality with the fault-free run.
         """
-        assignment = self._normalize_assignment(graph, assignment)
-        return self._run(graph, external_inputs, lanes=len(self.pus),
-                         assignment=assignment)
+        assignment = self._normalize_assignment(graph, assignment, completed)
+        lane_queues = self._scheduled_lane_queues(graph, assignment, completed)
+        lane_items = {pu: [(0, i) for i in q] for pu, q in lane_queues.items()}
+        out = self._run_lanes(
+            [graph], lane_items, [external_inputs],
+            policy=policy, faults=faults,
+            completed=[completed] if completed else None, estimate=estimate)
+        return out[0]
 
-    # ------------------------------------------------------------------
-    def _run(self, graph: OpGraph, external_inputs, lanes: int,
-             assignment: Mapping[int, str] | None) -> dict[int, Any]:
-        external_inputs = dict(external_inputs or {})
-        n = len(graph.ops)
-        results: dict[int, Any] = {}
-        done_ev: dict[int, threading.Event] = {i: threading.Event() for i in range(n)}
-        errors: list[BaseException] = []
-
-        def gather_inputs(i: int) -> tuple:
-            ext = external_inputs.get(i, ())
-            dep_vals = tuple(results[p] for p in graph.pred[i])
-            return tuple(ext) + dep_vals
-
-        def exec_op(i: int) -> None:
-            for p in graph.pred[i]:
-                done_ev[p].wait()  # cross-lane dependency (D2H/H2D handoff)
-            op = graph.ops[i]
-            if op.fn is None:
-                results[i] = None
-            else:
-                results[i] = op.fn(*gather_inputs(i))
-            done_ev[i].set()
-
-        if assignment is None:
-            for i in graph.topo_order():
-                exec_op(i)
-            return results
-
-        lane_queues = self._scheduled_lane_queues(graph, assignment)
-
-        def lane_worker(pu: str) -> None:
-            try:
-                for i in lane_queues[pu]:
-                    exec_op(i)
-            except BaseException as e:
-                # record the original failure FIRST, then release every
-                # event so no other lane can deadlock waiting on this one
-                errors.append(e)
-                for ev in done_ev.values():
-                    ev.set()
-
-        with ThreadPoolExecutor(max_workers=len(self.pus)) as pool:
-            futs = [pool.submit(lane_worker, p) for p in self.pus]
-            for f in futs:
-                f.result()
-        if errors:
-            raise errors[0]
-        return results
-
-    # ------------------------------------------------------------------
     def run_concurrent(self, graphs: Sequence[OpGraph], schedule,
                        external_inputs: Sequence[Mapping[int, tuple] | None]
-                       | None = None) -> list[dict[int, Any]]:
+                       | None = None, *,
+                       policy: ExecutionPolicy | None = None,
+                       faults: FaultPlan | None = None,
+                       completed: Sequence[Mapping[int, Any]] | None = None,
+                       estimate: float | None = None
+                       ) -> list[dict[int, Any]]:
         """Run an M-model ``ConcurrentSchedule`` across the PU lanes.
 
         All M models' ops are multiplexed onto the *shared* lanes (one
@@ -195,45 +206,109 @@ class ScheduleExecutor:
         are per-model (requests are independent); each model's results
         dict is returned in request order, for bitwise verification
         against isolated ``run_monolithic`` runs.
+
+        ``policy`` / ``faults`` / ``completed`` / ``estimate`` behave as
+        in :meth:`run_scheduled` (``completed`` is one frontier dict per
+        request).
         """
         m = len(graphs)
-        lane_queues, _ = self._concurrent_lane_queues(graphs, schedule)
+        lane_queues, _ = self._concurrent_lane_queues(graphs, schedule,
+                                                      completed)
         ext = list(external_inputs or [None] * m)
+        return self._run_lanes(list(graphs), lane_queues, ext,
+                               policy=policy, faults=faults,
+                               completed=completed, estimate=estimate)
 
-        results: list[dict[int, Any]] = [{} for _ in range(m)]
+    # ------------------------------------------------------------------
+    def _run_lanes(self, graphs: Sequence[OpGraph],
+                   lane_queues: Mapping[str, Sequence[tuple[int, int]]],
+                   ext: Sequence[Mapping[int, tuple] | None], *,
+                   policy: ExecutionPolicy | None,
+                   faults: FaultPlan | None,
+                   completed: Sequence[Mapping[int, Any]] | None,
+                   estimate: float | None) -> list[dict[int, Any]]:
+        """Shared lane runtime of both interpreter entry points.
+
+        One daemon worker thread per non-empty lane; per-op events bound
+        by the run's watchdog budget; the first failure aborts the run
+        and releases every event so no lane stays parked on a dead
+        producer.  Frontier (``completed``) results seed the results
+        dicts with their events pre-set.
+        """
+        m = len(graphs)
+        results: list[dict[int, Any]] = [
+            dict(completed[r]) if completed and completed[r] else {}
+            for r in range(m)]
         done_ev: dict[tuple[int, int], threading.Event] = {
             (r, i): threading.Event()
             for r, g in enumerate(graphs) for i in range(len(g.ops))}
-        errors: list[BaseException] = []
+        for r in range(m):
+            for i in results[r]:
+                done_ev[(r, i)].set()
 
-        def exec_op(r: int, i: int) -> None:
+        run = RunContext(policy, faults, estimate)
+
+        def release_all() -> None:
+            for ev in done_ev.values():
+                ev.set()
+
+        run.release = release_all
+
+        def exec_op(pu: str, r: int, i: int) -> None:
             g = graphs[r]
             for p in g.pred[i]:
-                done_ev[(r, p)].wait()
+                if not done_ev[(r, p)].is_set():
+                    run.wait(done_ev[(r, p)],
+                             f"op {i} of request {r} on lane {pu!r} "
+                             f"(waiting for op {p})")
+            run.check_abort()
             op = g.ops[i]
-            if op.fn is None:
-                results[r][i] = None
-            else:
+            what = f"op {i} of request {r} on lane {pu!r}"
+            run.current[pu] = what
+
+            def attempt():
+                if run.faults is not None:
+                    run.faults.fire(pu, r, i, run)
+                if op.fn is None:
+                    return None
                 e = (ext[r] or {}).get(i, ())
                 dep_vals = tuple(results[r][p] for p in g.pred[i])
-                results[r][i] = op.fn(*(tuple(e) + dep_vals))
+                return op.fn(*(tuple(e) + dep_vals))
+
+            results[r][i] = run_with_retries(run, attempt, what)
+            run.current.pop(pu, None)
             done_ev[(r, i)].set()
 
         def lane_worker(pu: str) -> None:
             try:
                 for r, i in lane_queues[pu]:
-                    exec_op(r, i)
+                    exec_op(pu, r, i)
+            except _Aborted:
+                pass  # a peer already failed; unwind silently
             except BaseException as e:
-                errors.append(e)
-                for ev in done_ev.values():
-                    ev.set()
+                run.fail(e)
 
-        with ThreadPoolExecutor(max_workers=len(self.pus)) as pool:
-            futs = [pool.submit(lane_worker, p) for p in self.pus]
-            for f in futs:
-                f.result()
-        if errors:
-            raise errors[0]
+        threads = [threading.Thread(target=lane_worker, args=(pu,),
+                                    name=f"lane-{pu}", daemon=True)
+                   for pu in lane_queues if lane_queues[pu]]
+        for t in threads:
+            t.start()
+        for t in threads:
+            if run.deadline is None:
+                t.join()
+            else:
+                t.join(max(run.deadline - time.monotonic(), 0.0) + _JOIN_GRACE)
+                if t.is_alive():
+                    # backstop: a payload the watchdog cannot interrupt
+                    # (daemon thread — it cannot block process exit)
+                    run.abort.set()
+                    release_all()
+                    raise run._timeout(f"lane worker {t.name!r}")
+        if run.errors:
+            err = run.first_error()
+            if isinstance(err, PULostError) and err.partial is None:
+                err.partial = [dict(res) for res in results]
+            raise err
         return results
 
     # ------------------------------------------------------------------

@@ -48,16 +48,28 @@ callable — a payload with internal state (counters, cache mutation,
 appended buffers) would advance differently than under the per-op
 interpreter.  Stateful or side-effecting payloads belong on the
 interpreter oracle (``Orchestrator.execute(..., compile=False)``).
+Purity is also what makes the fault runtime's *segment-granularity
+retry* safe (see :mod:`repro.core.faults`): a transiently-failed
+segment writes no results and simply re-executes; every cross-lane wait
+in ``run`` is bounded by the watchdog budget; and a permanent PU loss
+surfaces as :class:`~repro.core.errors.PULostError` carrying the
+frontier of completed segments for orchestrator-level re-plan + resume.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
 import threading
-from concurrent.futures import ThreadPoolExecutor
+import time
 from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
+from repro.fault.manager import RecoverableError
+
+from .errors import ExecutionError, PULostError
+from .faults import (_JOIN_GRACE, ExecutionPolicy, FaultPlan, RunContext,
+                     _Aborted, run_with_retries)
 from .op import OpGraph
 
 try:  # the compiled path degrades to composed-Python without jax
@@ -122,6 +134,10 @@ class Segment:
     # flat input j (another segment's output), ("o", t) is item t's output
     argspecs: list[list[tuple[str, int]]] = dataclasses.field(
         default_factory=list)
+    # one descriptive wait label per entry of ``deps``, precomputed at
+    # compile time so the watchdog can name both sides of a hung handoff
+    # without per-run string formatting
+    dep_whats: list[str] = dataclasses.field(default_factory=list)
     mode: str = COLD
     _jfn: Any = dataclasses.field(default=None, repr=False)
 
@@ -194,6 +210,53 @@ class Segment:
             self.mode = JIT
 
 
+class LanePool:
+    """Persistent lane workers: one daemon thread + FIFO task queue per
+    lane (the command-queue model, kept warm across runs so thread spawn
+    cost never lands on the dispatch path).
+
+    Threads are **daemon** deliberately: a payload that hangs in native
+    code past the watchdog budget wedges its worker, and a non-daemon
+    thread would then block interpreter exit forever (the
+    ``ThreadPoolExecutor`` atexit-join behaviour this replaces).  The
+    watchdog backstop drops the whole pool (``shutdown``) and the next
+    run builds a fresh one; wedged daemon workers leak harmlessly.
+    """
+
+    def __init__(self, lanes: Sequence[str]):
+        self._queues: dict[str, queue.SimpleQueue] = {}
+        for pu in lanes:
+            q: queue.SimpleQueue = queue.SimpleQueue()
+            self._queues[pu] = q
+            threading.Thread(target=self._worker, args=(q,),
+                             name=f"lane-{pu}", daemon=True).start()
+
+    @staticmethod
+    def _worker(q: "queue.SimpleQueue") -> None:
+        while True:
+            task = q.get()
+            if task is None:
+                return
+            fn, done = task
+            try:
+                fn()
+            except BaseException:   # submitted fns do their own reporting
+                pass
+            finally:
+                done.set()
+
+    def submit(self, lane: str, fn: Callable[[], None]) -> threading.Event:
+        """Enqueue ``fn`` on ``lane``; the returned event is set when it
+        finishes (success or not — errors are the fn's job to record)."""
+        done = threading.Event()
+        self._queues[lane].put((fn, done))
+        return done
+
+    def shutdown(self, wait: bool = False) -> None:
+        for q in self._queues.values():
+            q.put(None)
+
+
 class LaneProgram:
     """A compiled plan: per-lane segment lists + cross-lane handoff deps.
 
@@ -224,7 +287,7 @@ class LaneProgram:
         # lane workers (pooled persistently: thread spawn per run would
         # dwarf the dispatch overhead this path removes).
         self.serial_order = self._serial_order()
-        self._pool: ThreadPoolExecutor | None = None
+        self._pool: LanePool | None = None
 
     def payloads_current(self) -> bool:
         """True while the fns baked into the segments are still the ops'
@@ -287,7 +350,59 @@ class LaneProgram:
             "runs": self.runs,
         }
 
-    def run(self, external_inputs=None):
+    def _exec_segment(self, seg: Segment, results, ext,
+                      run: RunContext | None) -> None:
+        """Execute one segment under the fault runtime: injected faults
+        fire per (request, op) item, transient failures retry the whole
+        segment with backoff (payloads are pure on this path, and a
+        failed ``execute`` writes no results, so re-execution is clean),
+        and a jitted segment failing with a non-transient error falls
+        back to its composed-eager form once — mirroring the
+        compile-time probe fallback — before giving up.  ``run=None`` is
+        the fault-free serial fast path (no injection, default retry
+        policy)."""
+        what = (f"segment {seg.index} on lane {seg.lane!r} "
+                f"(ops {seg.items[0]}..{seg.items[-1]})")
+
+        def attempt():
+            if run is not None and run.faults is not None:
+                for (r, i) in seg.items:
+                    run.faults.fire(seg.lane, r, i, run)
+            seg.execute(results, ext)
+
+        if run is not None:
+            run.current[seg.lane] = what
+        try:
+            run_with_retries(run, attempt, what)
+        except (ExecutionError, RecoverableError):
+            raise
+        except Exception:
+            if seg.mode != JIT:
+                raise
+            # jitted form failed eagerly-unseen (e.g. a donated-buffer or
+            # tracing edge on later inputs): demote to composed-Python
+            # and retry once, mirroring the probe's fallback rule
+            seg.mode = PYTHON
+            seg._jfn = None
+            run_with_retries(run, attempt, what)
+        finally:
+            if run is not None:
+                run.current.pop(seg.lane, None)
+
+    def run(self, external_inputs=None, *,
+            policy: ExecutionPolicy | None = None,
+            faults: FaultPlan | None = None,
+            estimate: float | None = None):
+        """Execute the program; same results shape as the interpreter.
+
+        ``policy`` tunes the watchdog/retry runtime (``estimate`` — e.g.
+        the plan's cost-model latency — scales the watchdog budget) and
+        ``faults`` injects a scripted
+        :class:`~repro.core.faults.FaultPlan`.  Every cross-lane wait is
+        deadline-bounded; on a permanent PU loss the raised
+        :class:`~repro.core.errors.PULostError` carries the execution
+        frontier (results of every segment completed before the loss).
+        """
         if self.single:
             ext = [dict(external_inputs or {})]
         else:
@@ -300,35 +415,65 @@ class LaneProgram:
         results: list[dict[int, Any]] = [{} for _ in range(self.n_requests)]
 
         if self.serial_order is not None:
-            for seg in self.serial_order:
-                seg.execute(results, ext)   # exceptions propagate directly
+            # inherently serial: no cross-lane waits exist, so the
+            # watchdog has nothing to bound — fault-free runs skip the
+            # RunContext entirely (this is the warm fast path)
+            run = (RunContext(policy, faults, estimate)
+                   if faults is not None else None)
+            try:
+                for seg in self.serial_order:
+                    self._exec_segment(seg, results, ext, run)
+            except PULostError as e:
+                if e.partial is None:
+                    e.partial = [dict(res) for res in results]
+                raise
             self.runs += 1
             return results[0] if self.single else results
 
+        run = RunContext(policy, faults, estimate)
         done = [threading.Event() for _ in self.segments]
-        errors: list[BaseException] = []
+
+        def release_all() -> None:
+            for ev in done:
+                ev.set()
+
+        run.release = release_all
 
         def lane_worker(pu: str) -> None:
             try:
                 for seg in self.lane_segments[pu]:
-                    for d in seg.deps:
-                        done[d].wait()   # cross-lane handoff (boundary cut)
-                    seg.execute(results, ext)
+                    for d, dwhat in zip(seg.deps, seg.dep_whats):
+                        if not done[d].is_set():
+                            run.wait(done[d], dwhat)
+                    run.check_abort()
+                    self._exec_segment(seg, results, ext, run)
                     done[seg.index].set()
+            except _Aborted:
+                pass  # a peer already failed; unwind silently
             except BaseException as e:
-                errors.append(e)
-                for ev in done:
-                    ev.set()
+                run.fail(e)
 
         if self._pool is None:
-            self._pool = ThreadPoolExecutor(
-                max_workers=max(len(self.lanes), 1),
-                thread_name_prefix="lane")
-        futs = [self._pool.submit(lane_worker, pu) for pu in self.lanes]
-        for f in futs:
-            f.result()
-        if errors:
-            raise errors[0]
+            self._pool = LanePool(self.lanes)
+        tasks = [(pu, self._pool.submit(pu, lambda pu=pu: lane_worker(pu)))
+                 for pu in self.lanes]
+        for pu, task_done in tasks:
+            if run.deadline is None:
+                task_done.wait()
+            elif not task_done.wait(
+                    max(run.deadline - time.monotonic(), 0.0) + _JOIN_GRACE):
+                # backstop: a payload the watchdog cannot interrupt wedged
+                # this worker — drop the whole pool (daemon threads; the
+                # next run builds a fresh one) and surface a typed timeout
+                run.abort.set()
+                release_all()
+                self.close()
+                raise run._timeout(f"lane worker {pu!r}")
+        if run.errors:
+            err = run.first_error()
+            if isinstance(err, PULostError) and err.partial is None:
+                err.partial = [dict(res) for res in results]
+            raise err
         self.runs += 1
         return results[0] if self.single else results
 
@@ -396,4 +541,10 @@ def compile_lane_program(graphs: Sequence[OpGraph],
             seg.argspecs.append(spec)
         seg.flat_refs = sorted(flat_index, key=flat_index.get)
         seg.deps = sorted(deps)
+        seg.dep_whats = [
+            f"segment {seg.index} on lane {seg.lane!r} (first op "
+            f"{seg.items[0]}) waiting for segment {d} on lane "
+            f"{segments[d].lane!r} (ops {segments[d].items[0]}.."
+            f"{segments[d].items[-1]})"
+            for d in seg.deps]
     return LaneProgram(graphs, segments, lane_segments, single=single)

@@ -57,11 +57,13 @@ import numpy as np
 from .contention import ContentionModel
 from .costmodel import CostTable, EDGE_PUS, PUSpec
 from .dynamic import DynamicScheduler, RuntimeCondition
+from .errors import PULostError
 from .executor import ScheduleExecutor
+from .faults import ExecutionPolicy, FaultPlan
 from .laneprogram import LaneProgram
 from .op import FusedOp, OpGraph, chain_graph
-from .schedule import (ConcurrentSchedule, ParallelSchedule, SeqSchedule,
-                       schedule_from_dict, schedule_to_dict)
+from .schedule import (ConcurrentSchedule, ConcurrentStep, ParallelSchedule,
+                       SeqSchedule, schedule_from_dict, schedule_to_dict)
 from .search import (ConcurrentCaches, _pair_cache, solve_concurrent,
                      solve_concurrent_aligned, solve_parallel,
                      solve_sequential)
@@ -198,7 +200,8 @@ class Orchestrator:
         self.executor = ScheduleExecutor(list(self.pus))
         self.condition = RuntimeCondition()
         self.stats = {"hits": 0, "misses": 0, "invalidated": 0,
-                      "program_hits": 0, "program_misses": 0}
+                      "program_hits": 0, "program_misses": 0,
+                      "recoveries": 0}
         self._max_plans = max_cached_plans
         self._max_pools = max_cache_pools
         self._max_programs = max_cached_programs
@@ -552,7 +555,10 @@ class Orchestrator:
                                  objective, "concurrent")
 
     # -- execute ------------------------------------------------------------
-    def execute(self, plan: Plan, inputs=None, *, compile: bool = True) -> Any:
+    def execute(self, plan: Plan, inputs=None, *, compile: bool = True,
+                policy: ExecutionPolicy | None = None,
+                faults: FaultPlan | None = None,
+                recover: bool = True) -> Any:
         """Run a plan on the multi-lane executor.
 
         Sequential/parallel plans take one ``{op: (args...)}`` mapping
@@ -572,16 +578,151 @@ class Orchestrator:
         perturbed inputs); ``compile=False`` runs the per-op interpreter
         instead — the bitwise-equivalence oracle, and the right path for
         stateful or side-effecting payloads.
+
+        Execution runs under the fault runtime of
+        :mod:`repro.core.faults`: ``policy`` tunes the watchdog/retry
+        knobs (the watchdog budget scales with the plan's cost-model
+        latency) and ``faults`` injects a scripted
+        :class:`~repro.core.faults.FaultPlan`.  With ``recover=True``
+        (the default) a permanent mid-run PU loss is handled here: the
+        loss is folded into the session condition
+        (:meth:`on_condition` — invalidating stale cached plans), the
+        *remaining* ops are re-planned onto the surviving PUs, and
+        execution resumes from the frontier of completed results —
+        recovered outputs are bitwise identical to the fault-free run
+        (completed results are reused; the remaining pure payloads
+        compute the same values on any lane).  ``recover=False``
+        propagates the :class:`~repro.core.errors.PULostError` (frontier
+        attached as ``err.partial``) to the caller.
         """
+        try:
+            return self._execute_once(plan, inputs, compile, policy, faults)
+        except PULostError as err:
+            if not recover:
+                raise
+            return self._recover(plan, inputs, err, policy, faults)
+
+    def _execute_once(self, plan: Plan, inputs, compile: bool,
+                      policy: ExecutionPolicy | None,
+                      faults: FaultPlan | None) -> Any:
         if not compile:
-            regs = self._execute_regs(plan)
+            regs = self._execute_regs(plan, validate=True)
             graphs = [reg.graph for reg in regs]
             if plan.kind in ("sequential", "parallel"):
-                return self.executor.run_scheduled(graphs[0], plan.schedule,
-                                                   inputs)
-            return self.executor.run_concurrent(graphs, plan.schedule,
-                                                inputs)
-        return self.program_for(plan, inputs).run(inputs)
+                return self.executor.run_scheduled(
+                    graphs[0], plan.schedule, inputs,
+                    policy=policy, faults=faults, estimate=plan.latency)
+            return self.executor.run_concurrent(
+                graphs, plan.schedule, inputs,
+                policy=policy, faults=faults, estimate=plan.latency)
+        return self.program_for(plan, inputs).run(
+            inputs, policy=policy, faults=faults, estimate=plan.latency)
+
+    # -- mid-run recovery ---------------------------------------------------
+    @staticmethod
+    def _chain_progress(chain: Sequence[int],
+                        done: Mapping[int, Any]) -> int:
+        """Completed-prefix length of a chain under a frontier (results
+        record in chain order, so the frontier is always a prefix)."""
+        k = 0
+        while k < len(chain) and chain[k] in done:
+            k += 1
+        return k
+
+    def _recover(self, plan: Plan, inputs, err: PULostError,
+                 policy: ExecutionPolicy | None,
+                 faults: FaultPlan | None) -> Any:
+        """Re-plan-and-resume after a permanent mid-run PU loss.
+
+        Folds each lost PU into the session :class:`RuntimeCondition`
+        (``on_condition`` invalidates cached plans priced with it and
+        re-stitches active trackers), re-plans the ops still missing
+        from the frontier onto the surviving PUs, and resumes on the
+        interpreter path seeded with the completed results.  Loops if
+        another PU dies during the resume; raises
+        :class:`~repro.core.errors.InfeasibleScheduleError` when no
+        surviving PU can run a remaining op, and re-raises the loss when
+        it carries no usable PU identity.
+        """
+        m = len(plan.handles)
+        partials: list[dict[int, Any]] = [{} for _ in range(m)]
+        lost_seen: set[str] = set()
+        while True:
+            if err.pu is None or err.pu in lost_seen:
+                raise err   # no identity to exclude / no progress possible
+            lost_seen.add(err.pu)
+            for d, p in zip(partials, err.partial or []):
+                d.update(p)
+            self.on_condition(self.condition.lose(err.pu))
+            self.stats["recoveries"] += 1
+            try:
+                return self._resume(plan, inputs, partials, policy, faults)
+            except PULostError as e2:
+                err = e2
+
+    def _resume(self, plan: Plan, inputs,
+                partials: list[dict[int, Any]],
+                policy: ExecutionPolicy | None,
+                faults: FaultPlan | None) -> Any:
+        """Re-plan the non-frontier ops under the current (degraded)
+        condition and run them on the interpreter path, seeded with the
+        frontier results."""
+        regs = self._execute_regs(plan, validate=True)
+        graphs = [reg.graph for reg in regs]
+        objective = plan.objective
+
+        if plan.kind == "parallel":
+            # branch/phase structure is condition-independent: re-plan the
+            # whole DAG under the degraded condition; the frontier seed
+            # skips every already-completed op at execution time
+            sub = self._plan_cached([(regs[0], 0)], plan.handles, objective,
+                                    "parallel")
+            return self.executor.run_scheduled(
+                graphs[0], sub.schedule, inputs, policy=policy,
+                faults=faults, completed=partials[0],
+                estimate=sub.latency)
+
+        if plan.kind == "sequential":
+            done = partials[0]
+            prog = self._chain_progress(regs[0].chain, done)
+            if prog == len(regs[0].chain):
+                return dict(done)          # the loss hit after the last op
+            sub = self._plan_cached([(regs[0], prog)], plan.handles,
+                                    objective, "sequential")
+            amap = dict(zip(sub.schedule.chain, sub.schedule.assignment))
+            return self.executor.run_scheduled(
+                graphs[0], amap, inputs, policy=policy, faults=faults,
+                completed=done, estimate=sub.latency)
+
+        # concurrent: re-plan only the requests with remaining ops, then
+        # widen the sub-schedule back to all M request slots
+        items = [(r, reg, self._chain_progress(reg.chain, partials[r]))
+                 for r, reg in enumerate(regs)]
+        remaining = [(r, reg, prog) for r, reg, prog in items
+                     if prog < len(reg.chain)]
+        if not remaining:
+            return [dict(d) for d in partials]
+        sub = self._plan_cached(
+            [(reg, prog) for _, reg, prog in remaining],
+            tuple(plan.handles[r] for r, _, _ in remaining),
+            objective, "concurrent")
+        slot = {k: r for k, (r, _, _) in enumerate(remaining)}
+
+        def widen(vals: tuple) -> tuple:
+            out: list = [None] * len(regs)
+            for k, v in enumerate(vals):
+                out[slot[k]] = v
+            return tuple(out)
+
+        ssched = sub.schedule
+        full = ConcurrentSchedule(
+            steps=[ConcurrentStep(ops=widen(st.ops), pus=widen(st.pus),
+                                  cost=st.cost) for st in ssched.steps],
+            latency=ssched.latency, energy=ssched.energy,
+            objective=ssched.objective, mode=ssched.mode)
+        return self.executor.run_concurrent(
+            graphs, full, inputs, policy=policy, faults=faults,
+            completed=partials, estimate=full.latency)
 
     def program_for(self, plan: Plan, inputs=None) -> LaneProgram:
         """The compiled :class:`LaneProgram` for a plan (cached).
@@ -593,7 +734,6 @@ class Orchestrator:
         shape change recompiles rather than silently retracing inside a
         shared program.
         """
-        regs = self._execute_regs(plan)
         key = (self._plan_token(plan), plan.handles,
                _inputs_signature(inputs))
         prog = self._programs.get(key)
@@ -606,6 +746,10 @@ class Orchestrator:
             # callables are stale — drop and recompile, never serve them
             self._programs.pop(key).close()
         self.stats["program_misses"] += 1
+        # plan/handle validation runs on the miss path only: a cached
+        # program was already validated at compile time, and the hit path
+        # is the warm fast path the overhead gate measures
+        regs = self._execute_regs(plan, validate=True)
         graphs = [reg.graph for reg in regs]
         if plan.kind in ("sequential", "parallel"):
             prog = self.executor.compile_scheduled(graphs[0], plan.schedule)
@@ -616,12 +760,40 @@ class Orchestrator:
             self._programs.pop(next(iter(self._programs))).close()
         return prog
 
-    def _execute_regs(self, plan: Plan) -> list[_Registration]:
+    def _execute_regs(self, plan: Plan,
+                      validate: bool = False) -> list[_Registration]:
         if not plan.handles:
             raise ValueError("plan carries no handles; was it built by "
                              "this orchestrator (or restored from JSON "
                              "with handles intact)?")
-        return [self._reg(h) for h in plan.handles]
+        regs = [self._reg(h) for h in plan.handles]
+        if not validate:
+            return regs
+        # a stale/re-registered plan must fail here with the handle named,
+        # not deep inside lane-queue construction
+        routes = plan.route
+        if len(routes) != len(regs):
+            raise ValueError(
+                f"plan routes {len(routes)} request(s) but carries "
+                f"{len(regs)} handle(s) {plan.handles} — the plan does not "
+                "match this orchestrator's registrations")
+        for reg, route in zip(regs, routes):
+            n = len(reg.graph.ops)
+            bad = [i for i, _ in route if not 0 <= i < n]
+            if bad:
+                raise ValueError(
+                    f"plan does not match handle {reg.handle}: it routes "
+                    f"op {bad[0]} but the graph registered under that "
+                    f"handle has {n} op(s) — the plan is stale (was the "
+                    "workload re-registered, or the plan built against a "
+                    "different orchestrator?)")
+            unknown = sorted({p for _, p in route if p not in self.pus})
+            if unknown:
+                raise ValueError(
+                    f"plan for handle {reg.handle} routes ops to unknown "
+                    f"PU(s) {unknown}; this session's PUs are "
+                    f"{sorted(self.pus)}")
+        return regs
 
     def _plan_token(self, plan: Plan):
         if plan.cache_key is None:

@@ -21,6 +21,12 @@ train loop with three mechanisms:
   checkpoints are stored mesh-agnostic, the restarted job may come back
   with a different device count (lost pod) — the trainer rebuilds the mesh
   from ``len(jax.devices())`` and re-shards on restore.
+
+``RecoverableError`` is also the transient-fault vocabulary of the
+*inference* execution runtime (:mod:`repro.core.faults` — segment
+watchdogs, bounded retry, PU-loss recovery): both runtimes retry through
+the same exception type, so a payload/step only needs one way to say
+"this failure is transient, re-execute me".
 """
 from __future__ import annotations
 
@@ -29,10 +35,16 @@ import dataclasses
 import time
 from typing import Callable
 
+__all__ = ["RecoverableError", "FaultConfig", "HeartbeatTracker",
+           "StragglerDetector", "RecoveryStats", "run_with_recovery"]
+
 
 class RecoverableError(RuntimeError):
-    """Raised by a step when a transient/hardware fault should trigger
-    checkpoint-restart instead of job death."""
+    """Raised when a transient/hardware fault should trigger retry or
+    checkpoint-restart instead of job death.  Shared vocabulary of the
+    train-loop fault manager (this module) and the inference execution
+    runtime (:mod:`repro.core.faults`, whose injected
+    ``TransientFault`` subclasses this)."""
 
 
 @dataclasses.dataclass

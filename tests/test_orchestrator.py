@@ -173,7 +173,8 @@ def test_cache_hit_is_bitwise_equal_and_counted(model):
     h = orch.register(g)
     cold = orch.plan(h)
     assert orch.stats == {"hits": 0, "misses": 1, "invalidated": 0,
-                          "program_hits": 0, "program_misses": 0}
+                          "program_hits": 0, "program_misses": 0,
+                          "recoveries": 0}
     hit = orch.plan(h)
     assert hit is cold                       # served from cache
     assert orch.stats["hits"] == 1
