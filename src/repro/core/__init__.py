@@ -34,12 +34,16 @@ from .schedule import (ConcurrentSchedule, ConcurrentStep, ParallelSchedule,
                        SeqSchedule, evaluate_sequential,
                        evaluate_sequential_reference, schedule_from_dict,
                        schedule_to_dict, single_pu_cost)
-from .search import (ConcurrentCaches, DEFAULT_MAX_STATES, dijkstra,
-                     sequential_dp, sequential_dp_reference,
+from .search import (ConcurrentCaches, DEFAULT_HORIZON_STATES,
+                     DEFAULT_MAX_STATES, IncrementalConcurrentSolver,
+                     dijkstra, sequential_dp, sequential_dp_reference,
                      solve_concurrent, solve_concurrent_aligned,
                      solve_concurrent_aligned_reference,
+                     solve_concurrent_horizon,
                      solve_concurrent_joint, solve_concurrent_joint_reference,
                      solve_parallel, solve_sequential)
+from .serve import (Arrival, ArrivalTrace, RequestRecord, ServeReport,
+                    ServingEngine)
 from .workload import Workload
 from . import autoshard, modelgraph, paperzoo  # noqa: F401  (TPU mode + graphs)
 
@@ -64,8 +68,12 @@ __all__ = [
     "evaluate_sequential", "evaluate_sequential_reference",
     "schedule_from_dict", "schedule_to_dict",
     "single_pu_cost", "dijkstra", "sequential_dp", "sequential_dp_reference",
-    "ConcurrentCaches", "solve_concurrent", "solve_concurrent_aligned",
-    "solve_concurrent_aligned_reference",
+    "ConcurrentCaches", "DEFAULT_HORIZON_STATES",
+    "IncrementalConcurrentSolver",
+    "solve_concurrent", "solve_concurrent_aligned",
+    "solve_concurrent_aligned_reference", "solve_concurrent_horizon",
     "solve_concurrent_joint", "solve_concurrent_joint_reference",
     "solve_parallel", "solve_sequential",
+    "Arrival", "ArrivalTrace", "RequestRecord", "ServeReport",
+    "ServingEngine",
 ]

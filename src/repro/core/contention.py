@@ -221,6 +221,11 @@ class GroupCostCache:
         self._memo: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray,
                                     np.ndarray]] = {}
 
+    def nbytes(self) -> int:
+        """Bytes held by the built edge tables (0 until ``edge_tables``
+        first runs — ``ConcurrentCaches.trim`` budgets on this)."""
+        return sum(a.nbytes for arrs in self._memo.values() for a in arrs)
+
     def edge_tables(self, objective: str
                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray,
                                np.ndarray]:
@@ -325,6 +330,12 @@ class PairCostCache:
         self.same = np.array([[a == b for b in p1] for a in p0])
         self._memo: dict[str, tuple[np.ndarray, np.ndarray, np.ndarray,
                                     np.ndarray]] = {}
+
+    def nbytes(self) -> int:
+        """Bytes held by the built signature-pair matrices (0 until
+        ``edge_tables`` first runs — ``ConcurrentCaches.trim`` budgets
+        on this)."""
+        return sum(a.nbytes for arrs in self._memo.values() for a in arrs)
 
     def edge_tables(self, objective: str
                     ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:

@@ -37,6 +37,49 @@ wraps that into the register → plan → execute flow of a serving system:
   re-plans the concurrent schedule over every active request's
   *remaining* ops (``Workload.tail`` views), which is how requests
   arriving or completing mid-flight are absorbed.
+
+Serving lifecycle (what :class:`~repro.core.serve.ServingEngine` drives)::
+
+    h = orch.register(graph)     # once per model, profile + dense tables
+    orch.admit(h)                #   arrival: join the concurrent set,
+                                 #   re-plan the set from progress
+    orch.advance(h, k)           #   execution progress: completed ops
+    orch.replan_active(...)      #   plan-delta from the new frontier
+    orch.retire(h)               #   departure: drop out, re-plan the rest
+
+  Warm-start invariants of this loop:
+
+  * Every re-plan is served by a per-(workload signatures, condition)
+    :class:`~repro.core.search.IncrementalConcurrentSolver` when the
+    route allows it (``algorithm="auto"``, default ``max_states``):
+    persistent per-active-subset grid contexts plus the shared
+    content-keyed ``ConcurrentCaches`` pool mean an admit/advance/retire
+    event re-prices only subsets involving genuinely new content and
+    re-sweeps only the remaining sub-box.  Warm plans are **bitwise
+    identical** to a cold ``solve_concurrent`` on the same state — the
+    cold solver stays the oracle (``tests/test_incremental_replan.py``);
+    routes the warm layer cannot reproduce bitwise (custom contention
+    laws, the pairwise fallback) fall back to the cold path.
+    ``stats["replans_warm"]``/``stats["replans_cold"]`` count the split.
+  * ``horizon_states`` (on ``admit``/``retire``/``replan_active``)
+    bounds a re-plan to the next exact window
+    (:func:`~repro.core.search.solve_concurrent_horizon`), making
+    re-plan latency O(budget) instead of O(remaining grid) — the
+    serving engine's bounded-admission-latency knob.
+  * A condition change re-prices affected tables exactly once into the
+    new condition's pool (content signatures change under
+    ``under_condition``); subsequent re-plans under that condition are
+    warm again.
+  * ``admit``/``retire`` return ``None`` — not a ``Plan`` — when there
+    is nothing left to schedule: every active request fully advanced
+    (``admit``/``retire``) or the set emptied (``retire``).  The
+    serving loop must treat ``None`` as "no schedule to run", never
+    dereference it.
+  * All session caches (``_plans``, ``_pools``, ``_cond_views``,
+    ``_programs``, warm solvers) are insertion-ordered LRUs with hard
+    capacity bounds; evictions are counted in ``stats`` so serving
+    traffic with thousands of distinct keys degrades to re-solves, not
+    unbounded memory.
 * ``execute`` drives the multi-lane :class:`ScheduleExecutor` for any
   plan kind (sequential / parallel assignments, M-ary concurrent
   multiplexing) — through a compiled, segment-fused
@@ -64,8 +107,9 @@ from .laneprogram import LaneProgram
 from .op import FusedOp, OpGraph, chain_graph
 from .schedule import (ConcurrentSchedule, ConcurrentStep, ParallelSchedule,
                        SeqSchedule, schedule_from_dict, schedule_to_dict)
-from .search import (ConcurrentCaches, _pair_cache, solve_concurrent,
-                     solve_concurrent_aligned, solve_parallel,
+from .search import (ConcurrentCaches, IncrementalConcurrentSolver,
+                     _pair_cache, solve_concurrent, solve_concurrent_aligned,
+                     solve_concurrent_horizon, solve_parallel,
                      solve_sequential)
 from .workload import Workload
 
@@ -201,7 +245,11 @@ class Orchestrator:
         self.condition = RuntimeCondition()
         self.stats = {"hits": 0, "misses": 0, "invalidated": 0,
                       "program_hits": 0, "program_misses": 0,
-                      "recoveries": 0}
+                      "recoveries": 0,
+                      "replans_warm": 0, "replans_cold": 0,
+                      "plan_evictions": 0, "pool_evictions": 0,
+                      "cond_view_evictions": 0, "program_evictions": 0,
+                      "warm_evictions": 0}
         self._max_plans = max_cached_plans
         self._max_pools = max_cache_pools
         self._max_programs = max_cached_programs
@@ -211,8 +259,19 @@ class Orchestrator:
         self._plans: dict[tuple, Plan] = {}          # insertion-ordered LRU
         self._pools: dict[tuple, ConcurrentCaches] = {}
         self._cond_views: dict[tuple[int, tuple], Workload] = {}
+        self._warm: dict[tuple, IncrementalConcurrentSolver] = {}
         self._active: dict[int, int] = {}            # handle -> ops done
         self._dyn: dict[tuple[int, str], DynamicScheduler] = {}
+
+    def _evict_lru(self, cache: dict, cap: int, stat: str,
+                   close: bool = False) -> None:
+        """Drop oldest entries of an insertion-ordered LRU dict past
+        ``cap``, counting them under ``stats[stat]``."""
+        while len(cache) > cap:
+            victim = cache.pop(next(iter(cache)))
+            if close:
+                victim.close()
+            self.stats[stat] += 1
 
     # -- register -----------------------------------------------------------
     def register(self, graph: OpGraph | Sequence[FusedOp],
@@ -283,8 +342,8 @@ class Orchestrator:
             wl = reg.wl.under_condition(self.condition.slowdown,
                                         self.condition.unavailable)
             self._cond_views[key] = wl
-            while len(self._cond_views) > self._max_pools:
-                self._cond_views.pop(next(iter(self._cond_views)))
+            self._evict_lru(self._cond_views, self._max_pools,
+                            "cond_view_evictions")
         else:
             self._cond_views[key] = self._cond_views.pop(key)  # LRU refresh
         return wl
@@ -321,7 +380,8 @@ class Orchestrator:
         changed = {p for (p, f0), (_, f1) in zip(old, new) if f0 != f1}
         if changed:
             new_f = dict(new)
-            for cache in (self._plans, self._pools, self._cond_views):
+            for cache in (self._plans, self._pools, self._cond_views,
+                          self._warm):
                 for key in list(cache):
                     entry_cond = key[-1]
                     if any(p in changed and f != new_f[p]
@@ -430,7 +490,8 @@ class Orchestrator:
     def _plan_cached(self, regs_progress: list[tuple[_Registration, int]],
                      hs: tuple[int, ...], objective: str, mode: str,
                      algorithm: str = "auto",
-                     max_states: int | None = None) -> Plan:
+                     max_states: int | None = None,
+                     horizon_states: int | None = None) -> Plan:
         # the sequential/concurrent solvers consume only the chain + dense
         # cost views (covered by the workload signature); the parallel
         # solve additionally consumes the graph's edge structure
@@ -440,10 +501,13 @@ class Orchestrator:
                            for reg, prog in regs_progress)
         else:
             wl_key = tuple((reg.sig, prog) for reg, prog in regs_progress)
-        # algorithm/max_states are in the key: a forced-pairwise plan must
-        # never be served a cached grid schedule (and vice versa)
+        # algorithm/max_states/horizon_states are in the key: a
+        # forced-pairwise plan must never be served a cached grid
+        # schedule, nor a full plan a cached horizon window (and vice
+        # versa).  The condition stays the LAST element — on_condition
+        # invalidates by key[-1].
         key = (wl_key, objective, mode, algorithm, max_states,
-               self._cond_key())
+               horizon_states, self._cond_key())
         plan = self._plans.get(key)
         if plan is not None:
             self.stats["hits"] += 1
@@ -456,37 +520,57 @@ class Orchestrator:
             return plan
         self.stats["misses"] += 1
         plan = self._solve(regs_progress, hs, objective, mode,
-                           algorithm, max_states)
+                           algorithm, max_states, horizon_states)
         plan.cache_key = key
         self._plans[key] = plan
-        while len(self._plans) > self._max_plans:
-            self._plans.pop(next(iter(self._plans)))
+        self._evict_lru(self._plans, self._max_plans, "plan_evictions")
         return plan
 
-    def _pool(self, wl_key: tuple) -> ConcurrentCaches:
+    def _pool(self) -> ConcurrentCaches:
         """Objective-independent solver state (pair-cost matrices, group
-        edges) shared across every solve on the same workload tuple
-        under the same condition."""
-        key = (wl_key, self._cond_key())
+        edge tables) shared across every concurrent solve under the same
+        condition.  One pool per condition — NOT per workload tuple:
+        ``ConcurrentCaches`` keys everything by content signature, so
+        overlapping handle sets, re-admitted models and tail re-plans
+        all hit the same tables.  (A pool must never span conditions:
+        condition-scaled workloads get new signatures, so a per-condition
+        pool is re-priced exactly once per change.)"""
+        key = (self._cond_key(),)    # condition last: on_condition reads it
         pool = self._pools.get(key)
         if pool is None:
             pool = ConcurrentCaches()
             self._pools[key] = pool
-            while len(self._pools) > self._max_pools:
-                self._pools.pop(next(iter(self._pools)))
+            self._evict_lru(self._pools, self._max_pools, "pool_evictions")
         else:
             self._pools[key] = self._pools.pop(key)   # LRU refresh
         return pool
 
+    def _warm_solver(self, wls: list[Workload]
+                     ) -> IncrementalConcurrentSolver:
+        """Memoized warm re-planner for a (full-workload signatures,
+        condition) tuple, sharing the per-condition cache pool with the
+        cold path — cold solves warm the pool for later warm solves and
+        vice versa."""
+        key = (tuple(wl.signature() for wl in wls), self._cond_key())
+        inc = self._warm.get(key)
+        if inc is None:
+            inc = IncrementalConcurrentSolver(wls, self.contention,
+                                              caches=self._pool())
+            self._warm[key] = inc
+            self._evict_lru(self._warm, self._max_pools, "warm_evictions")
+        else:
+            self._warm[key] = self._warm.pop(key)     # LRU refresh
+        return inc
+
     def _solve(self, regs_progress: list[tuple[_Registration, int]],
                hs: tuple[int, ...], objective: str, mode: str,
                algorithm: str = "auto",
-               max_states: int | None = None) -> Plan:
+               max_states: int | None = None,
+               horizon_states: int | None = None) -> Plan:
         nominal = self.condition.nominal
-        wls = []
-        for reg, prog in regs_progress:
-            wl = self._wl(reg)
-            wls.append(wl if prog == 0 else wl.tail(prog))
+        wls_full = [self._wl(reg) for reg, _ in regs_progress]
+        wls = [wl if prog == 0 else wl.tail(prog)
+               for wl, (_, prog) in zip(wls_full, regs_progress)]
         if mode == "sequential":
             reg, wl = regs_progress[0][0], wls[0]
             sched = solve_sequential(
@@ -499,8 +583,7 @@ class Orchestrator:
                 reg.graph, reg.table if nominal else None, self.pus,
                 self.contention, objective, workload=wl)
             return Plan("parallel", sched, objective, hs, mode)
-        wl_key = tuple((reg.sig, prog) for reg, prog in regs_progress)
-        pool = self._pool(wl_key)
+        pool = self._pool()
         if mode == "aligned":
             w0, w1 = wls
             cache = _pair_cache(pool, self.contention, wls, 0, 1)
@@ -509,30 +592,65 @@ class Orchestrator:
                 self.contention, objective, dense0=w0.dense,
                 dense1=w1.dense, cache=cache)
             return Plan("concurrent", sched, objective, hs, mode)
+        if algorithm == "auto" and max_states is None:
+            # warm fast path: persistent per-tuple incremental solver
+            # (bitwise-identical to the cold routes below; returns None
+            # on routes it cannot reproduce bitwise)
+            inc = self._warm_solver(wls_full)
+            sched = inc.solve([prog for _, prog in regs_progress],
+                              objective, horizon_states=horizon_states)
+            if sched is not None:
+                self.stats["replans_warm"] += 1
+                return Plan("concurrent", sched, objective, hs, mode)
+        self.stats["replans_cold"] += 1
+        if horizon_states is not None:
+            sched = solve_concurrent_horizon(
+                wls, self.contention, objective, caches=pool,
+                horizon_states=horizon_states)
+            return Plan("concurrent", sched, objective, hs, mode)
         kw = {} if max_states is None else {"max_states": max_states}
         sched = solve_concurrent(wls, self.contention, objective,
                                  algorithm=algorithm, caches=pool, **kw)
         return Plan("concurrent", sched, objective, hs, mode)
 
     # -- online admission (the serving scenario) ----------------------------
-    def admit(self, h: int, objective: str = "latency") -> Plan | None:
+    def admit(self, h: int, objective: str = "latency",
+              horizon_states: int | None = None) -> Plan | None:
         """Admit a registered request into the active concurrent set and
         re-plan the set from every member's current progress — the
-        request-arriving-mid-flight case.  ``None`` when no active
-        request has remaining ops (everything already fully advanced)."""
+        request-arriving-mid-flight case.
+
+        **``None`` contract**: returns ``None`` — never a ``Plan`` —
+        exactly when no active request (including the admitted one) has
+        remaining ops, i.e. everything is already fully advanced.  With
+        at least one unfinished active request the return value is
+        always a ``Plan``; callers in a serving loop must branch on
+        ``None`` rather than assume a schedule exists.
+
+        ``horizon_states`` bounds the re-plan to the next exact window
+        (see :meth:`replan_active`)."""
         self._reg(h)
         self._active.setdefault(h, 0)
-        return self._replan_active(objective)
+        return self._replan_active(objective, horizon_states)
 
-    def retire(self, h: int, objective: str = "latency") -> Plan | None:
+    def retire(self, h: int, objective: str = "latency",
+               horizon_states: int | None = None) -> Plan | None:
         """Remove a request from the active set (completed or cancelled)
-        and re-plan the remainder; ``None`` when the set empties or no
-        remaining member has ops left to schedule."""
+        and re-plan the remainder.
+
+        **``None`` contract**: returns ``None`` — never a ``Plan`` —
+        exactly when there is nothing left to schedule: the active set
+        emptied, or every remaining member is fully advanced.
+        Otherwise always a ``Plan``.  Unknown handles raise ``KeyError``
+        (retiring is a bookkeeping claim about a specific admitted
+        request)."""
         if h not in self._active:
             raise KeyError(f"handle {h} is not in the active set "
                            f"({sorted(self._active)})")
         del self._active[h]
-        return self._replan_active(objective) if self._active else None
+        if not self._active:
+            return None
+        return self._replan_active(objective, horizon_states)
 
     def advance(self, h: int, n_ops: int = 1) -> int:
         """Record execution progress (completed op count) for an active
@@ -545,14 +663,32 @@ class Orchestrator:
         self._active[h] = min(self._active[h] + n_ops, reg.wl.n)
         return self._active[h]
 
-    def _replan_active(self, objective: str) -> Plan | None:
+    def replan_active(self, objective: str = "latency",
+                      horizon_states: int | None = None) -> Plan | None:
+        """Re-plan the active concurrent set from every member's current
+        progress without changing membership — the advance-driven
+        re-plan of the serving loop.  Served warm by the incremental
+        solver whenever possible (``stats["replans_warm"]``).
+
+        With ``horizon_states`` the plan covers only the next exact
+        window of ``<= horizon_states`` grid states
+        (:func:`~repro.core.search.solve_concurrent_horizon`,
+        ``schedule.mode == "horizon"``): re-plan latency becomes
+        O(budget) regardless of remaining work, and the caller re-plans
+        again at the window frontier.  Returns ``None`` exactly when no
+        active request has remaining ops."""
+        return self._replan_active(objective, horizon_states)
+
+    def _replan_active(self, objective: str,
+                       horizon_states: int | None = None) -> Plan | None:
         items = [(h, p) for h, p in sorted(self._active.items())
                  if p < self._regs[h].wl.n]
         if not items:
             return None
         regs_progress = [(self._regs[h], p) for h, p in items]
         return self._plan_cached(regs_progress, tuple(h for h, _ in items),
-                                 objective, "concurrent")
+                                 objective, "concurrent",
+                                 horizon_states=horizon_states)
 
     # -- execute ------------------------------------------------------------
     def execute(self, plan: Plan, inputs=None, *, compile: bool = True,
@@ -756,8 +892,8 @@ class Orchestrator:
         else:
             prog = self.executor.compile_concurrent(graphs, plan.schedule)
         self._programs[key] = prog
-        while len(self._programs) > self._max_programs:
-            self._programs.pop(next(iter(self._programs))).close()
+        self._evict_lru(self._programs, self._max_programs,
+                        "program_evictions", close=True)
         return prog
 
     def _execute_regs(self, plan: Plan,

@@ -828,23 +828,57 @@ def solve_concurrent_joint_reference(
 
 class ConcurrentCaches:
     """Objective-independent setup shared across repeated
-    ``solve_concurrent`` calls on the **same** workload tuple (typically
-    the latency- and energy-objective solves of one combination).
+    ``solve_concurrent`` calls under one contention model and runtime
+    condition.
 
-    ``pair`` memoizes ``PairCostCache`` instances per request-index pair
-    (the pairwise route); ``group_tables`` memoizes the vectorized grid
-    sweep's per-subset :class:`~repro.core.contention.GroupCostCache`
-    tables (both objectives' bests per entry, shared by the full-grid
-    and every rolling-horizon window solve); ``group`` memoizes the
-    retained heap A*'s scalar per-(subset, signature-tuple) edges.
-    Entries are keyed by request index / signature ids, so a pool is
-    only valid for one fixed workload tuple.
+    ``pair`` memoizes ``PairCostCache`` instances and ``group_tables``
+    the vectorized grid sweep's per-subset
+    :class:`~repro.core.contention.GroupCostCache` tables (both
+    objectives' bests per entry, shared by the full-grid and every
+    rolling-horizon window solve).  Both are keyed by the participating
+    workloads' **content signatures** (``Workload.signature()``), so a
+    single pool safely serves *different* workload tuples: overlapping
+    handle sets, tail re-plans at any progress, and re-admitted models
+    all hit the same tables — the backbone of warm-start incremental
+    re-planning (equal signatures ⇒ identical dense views ⇒ identical
+    table contents).  ``group`` memoizes the retained heap A*'s scalar
+    per-(subset, signature-tuple) edges; its inner ids are only
+    meaningful per workload tuple, so entries are scoped under the
+    tuple's signature key.
+
+    A pool must not be shared across contention models or runtime
+    conditions — both change table contents without changing the keys
+    (the orchestrator keys its pools by condition for exactly this
+    reason).
+
+    Because one pool now serves a whole serving session, it is bounded:
+    ``pair`` and ``group_tables`` are insertion-ordered LRUs trimmed to
+    ``max_table_bytes`` (half each; the newest entry always survives),
+    and ``group`` keeps the most recent ``max_group_scopes`` tuple
+    memos.  Eviction only costs a rebuild on the next miss — values are
+    content-derived, so correctness is unaffected.
     """
 
-    def __init__(self) -> None:
-        self.pair: dict[tuple[int, int], PairCostCache] = {}
-        self.group: dict[tuple, tuple] = {}
-        self.group_tables: dict[tuple[int, ...], GroupCostCache] = {}
+    def __init__(self, max_table_bytes: int = 512 * 2**20,
+                 max_group_scopes: int = 64) -> None:
+        self.pair: dict[tuple[str, str], PairCostCache] = {}
+        self.group: dict[tuple[str, ...], dict] = {}
+        self.group_tables: dict[tuple, GroupCostCache] = {}
+        self.max_table_bytes = max_table_bytes
+        self.max_group_scopes = max_group_scopes
+
+    def trim(self) -> None:
+        """Evict oldest ``pair``/``group_tables`` entries past the byte
+        budget (lazily built tables are accounted as they fill) and
+        oldest ``group`` scopes past the scope cap.  Entries still
+        referenced by an in-flight solve stay alive until it finishes."""
+        half = self.max_table_bytes // 2
+        for d in (self.pair, self.group_tables):
+            while len(d) > 1 and \
+                    sum(v.nbytes() for v in d.values()) > half:
+                d.pop(next(iter(d)))
+        while len(self.group) > self.max_group_scopes:
+            self.group.pop(next(iter(self.group)))
 
 
 def _require_oracle_tables(wls: Sequence[Workload],
@@ -866,17 +900,21 @@ def _require_oracle_tables(wls: Sequence[Workload],
                 "adjusted table instead")
 
 
-def _solo_step_walk(wl: Workload, req: int, m: int, objective: str
+def _solo_step_walk(wl: Workload, req: int, m: int, objective: str,
+                    lo: int = 0, hi: int | None = None,
+                    solo: tuple | None = None,
                     ) -> tuple[list[ConcurrentStep], float, float]:
     """Solo-advance steps for one request inside an M-request schedule:
     each op on its best PU by ``objective`` (node weights only — the
-    concurrent formulation prices no inter-op transitions)."""
+    concurrent formulation prices no inter-op transitions).  ``lo``/
+    ``hi`` bound the walked span (warm tail / bounded-horizon re-plans);
+    ``solo`` passes precomputed ``_solo_edges`` arrays."""
     d = wl.dense
-    _, sarg, sw, se = _solo_edges(d, objective)
+    _, sarg, sw, se = solo if solo is not None else _solo_edges(d, objective)
     steps: list[ConcurrentStep] = []
     lat = 0.0
     eng = 0.0
-    for i in range(d.n):
+    for i in range(lo, d.n if hi is None else hi):
         d.require_row(i)
         ops = [None] * m
         pus_: list[str | None] = [None] * m
@@ -891,6 +929,23 @@ def _solo_step_walk(wl: Workload, req: int, m: int, objective: str
 
 DEFAULT_MAX_STATES = 2_000_000     # exact-grid ceiling: a MEMORY bound
 DEFAULT_WINDOW_STATES = 65_536     # rolling-horizon per-window grid budget
+DEFAULT_HORIZON_STATES = 1_024     # bounded-lookahead serving re-plan budget
+
+# Boxes up to this many states take the sweep's hoisted relaxation path
+# (per-subset sources/keys/successors precomputed in diagonal-major
+# order, ~170 B/state peak); larger boxes stream per diagonal.  Both
+# paths are bitwise-identical — the cap trades peak memory against the
+# per-NumPy-call overhead that dominates small warm re-plan boxes.
+_SWEEP_HOIST_CAP = 131_072
+
+# Boxes up to this many states take the destination-major merged
+# relaxation: all subsets' edges are concatenated, sorted once by
+# (dst diagonal, dst, cold write order), and each diagonal resolves in
+# one batched group-min — ~9 NumPy calls per diagonal instead of ~8 per
+# (diagonal, subset).  This is the serving re-plan hot path (horizon
+# windows are <= ~2k states).  The edge sort is O(E log E) over
+# E ~ 2^m * states edges, so large boxes fall back to the hoisted path.
+_SWEEP_MERGE_CAP = 8_192
 
 
 def solve_concurrent(
@@ -998,7 +1053,15 @@ def solve_concurrent(
                 "or 'pairwise'")
         if algorithm == "grid":
             return _solve_concurrent_grid(wls, contention, objective, caches)
-        group_memo = caches.group if caches is not None else None
+        group_memo = None
+        if caches is not None:
+            # the heap A* memo's (subset, signature-id) keys are only
+            # meaningful for one workload tuple — scope them under the
+            # tuple's content signatures so a shared pool stays safe
+            scope = tuple(wl.signature() for wl in wls)
+            group_memo = caches.group.setdefault(scope, {})
+            caches.group[scope] = caches.group.pop(scope)  # LRU refresh
+            caches.trim()
         return _solve_concurrent_grid_astar(wls, contention, objective,
                                             group_memo)
     if algorithm == "rolling":
@@ -1038,15 +1101,20 @@ def solve_concurrent(
 def _pair_cache(caches: ConcurrentCaches | None, cm: ContentionModel,
                 wls: Sequence[Workload], a: int, b: int
                 ) -> PairCostCache | None:
-    """Memoized PairCostCache for requests (a, b); None when the pair
-    solver should build its own (no pool, or custom laws where the dense
-    cache is unused)."""
+    """Memoized PairCostCache for requests (a, b), keyed by the pair's
+    content signatures so any workload tuple containing an identically
+    priced pair reuses it; None when the pair solver should build its
+    own (no pool, or custom laws where the dense cache is unused)."""
     if caches is None or not uses_default_coexec(cm):
         return None
-    cache = caches.pair.get((a, b))
+    key = (wls[a].signature(), wls[b].signature())
+    cache = caches.pair.get(key)
     if cache is None:
         cache = PairCostCache(cm, wls[a].dense, wls[b].dense)
-        caches.pair[(a, b)] = cache
+        caches.pair[key] = cache
+        caches.trim()
+    else:
+        caches.pair[key] = caches.pair.pop(key)       # LRU refresh
     return cache
 
 
@@ -1070,15 +1138,18 @@ class _GridContext:
     """Per-solve vectorized inputs shared by the full-grid sweep and the
     rolling-horizon windows: per-request dense solo edges, signature-id
     arrays, and lazily built per-subset group-edge tables
-    (:class:`~repro.core.contention.GroupCostCache`).  Tables are keyed
-    by request-index tuple over the requests' *global* signature
-    alphabets, so every window of a rolling solve — and, through a
-    shared :class:`ConcurrentCaches` pool, the companion solve under the
-    other objective — reuses them.
+    (:class:`~repro.core.contention.GroupCostCache`).  When backed by a
+    shared :class:`ConcurrentCaches` pool the tables are keyed by the
+    requests' *content signatures* (``Workload.signature()``), so every
+    window of a rolling solve, the companion solve under the other
+    objective, AND any later solve over content-identical workloads —
+    a tail re-plan, an overlapping handle set, a re-admitted model —
+    reuses them; an unpooled context falls back to request-index keys.
     """
 
     def __init__(self, wls: Sequence[Workload], cm: ContentionModel,
-                 objective: str, caches: ConcurrentCaches | None = None):
+                 objective: str, caches: ConcurrentCaches | None = None,
+                 check_advanceable: bool = True):
         self.wls = list(wls)
         self.m = len(self.wls)
         self.cm = cm
@@ -1086,17 +1157,34 @@ class _GridContext:
         self.denses = [wl.dense for wl in self.wls]
         self.pu_lists = [d.pus for d in self.denses]
         self.solo = [_solo_edges(d, objective) for d in self.denses]
-        _require_all_advanceable(self.wls, [s[0] for s in self.solo])
+        if check_advanceable:
+            _require_all_advanceable(self.wls, [s[0] for s in self.solo])
         self.sigs = [d.sig for d in self.denses]
+        self._caches = caches
+        self._pooled = caches is not None
+        self._keys: list[str] | None = None   # content signatures, lazy
         self._tables = caches.group_tables if caches is not None else {}
 
     def tables(self, reqs: tuple[int, ...]
                ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-        gc = self._tables.get(reqs)
-        if gc is None:
+        if self._pooled:
+            if self._keys is None:
+                self._keys = [wl.signature() for wl in self.wls]
+            key: tuple = tuple(self._keys[r] for r in reqs)
+        else:
+            key = reqs
+        gc = self._tables.get(key)
+        created = gc is None
+        if created:
             gc = GroupCostCache(self.cm, [self.denses[r] for r in reqs])
-            self._tables[reqs] = gc
-        return gc.edge_tables(self.objective)
+            self._tables[key] = gc
+        elif self._pooled:
+            self._tables[key] = self._tables.pop(key)   # LRU refresh
+        tabs = gc.edge_tables(self.objective)
+        if created and self._pooled:
+            # trim after the build so the new entry's size is accounted
+            self._caches.trim()
+        return tabs
 
     def sweep(self, lo: Sequence[int], hi: Sequence[int]
               ) -> tuple[list[ConcurrentStep], float]:
@@ -1114,6 +1202,20 @@ class _GridContext:
         deterministic policy.  Unlike the retained heap A*
         (quantized-priority tie plateaus, suboptimality <= 2 quanta),
         the sweep returns the exact FP-minimal objective.
+
+        Three relaxation paths, all bitwise-identical (same candidate
+        values, same tie policy): boxes up to ``_SWEEP_MERGE_CAP``
+        states run destination-major — every subset's edges are
+        concatenated, sorted once by (dst diagonal, dst, cold write
+        order) and each diagonal resolves as one batched first-achiever
+        group-min, collapsing the per-(diagonal, subset) NumPy overhead
+        that dominates the small warm re-plan boxes of the serving hot
+        path.  Boxes up to ``_SWEEP_HOIST_CAP`` run the hoisted path:
+        per-subset valid-source lists, gathered edge keys and successor
+        indices precomputed over the whole box in diagonal-major order,
+        leaving a gather/add/compare/scatter per (diagonal, subset).
+        Larger boxes stream per diagonal to keep peak memory at a few
+        arrays per state.
         """
         m = self.m
         sizes = [hi[r] - lo[r] for r in range(m)]
@@ -1132,9 +1234,12 @@ class _GridContext:
         tsum = pos[0].copy()
         for r in range(1, m):
             tsum += pos[r]
-        order = np.argsort(tsum, kind="stable")
-        counts = np.bincount(tsum, minlength=sum(sizes) + 1)
-        offs = np.concatenate(([0], np.cumsum(counts)))
+        if n_states > _SWEEP_MERGE_CAP:   # diagonal-major source order —
+            # only the hoisted/streaming paths consume it
+            order = np.argsort(tsum, kind="stable")
+            offs = np.concatenate(
+                ([0], np.cumsum(np.bincount(tsum,
+                                            minlength=sum(sizes) + 1))))
         can = [pos[r] < sizes[r] for r in range(m)]
         sk = [self.solo[r][0] for r in range(m)]
         subsets = []    # (bits, reqs, delta, key_table_flat, table_shape)
@@ -1152,32 +1257,129 @@ class _GridContext:
         dist = np.full(n_states, np.inf)
         act = np.zeros(n_states, dtype=np.int32)    # subset bitmask taken
         dist[0] = 0.0
-        for t in range(len(offs) - 2):      # the last diagonal is the target
-            seg = order[offs[t]:offs[t + 1]]
-            dseg = dist[seg]
+        if n_states <= _SWEEP_MERGE_CAP:
+            # destination-major merged relaxation: dist[src] is final
+            # before any edge out of src is relaxed (every transition
+            # strictly deepens the diagonal), so dist[dst] is the plain
+            # min over incoming candidates and act[dst] the FIRST
+            # candidate attaining it in the cold write order
+            # (source-diagonal asc == popcount desc, then subset order)
+            # — strict-`<` sequential relaxation keeps exactly that
+            # first achiever, so values AND actions are bitwise-equal.
+            S_, K_, D_, B_, R_ = [], [], [], [], []
             for bits, reqs, delta, kflat, tshape in subsets:
-                valid = can[reqs[0]][seg]
+                valid = can[reqs[0]]
                 for r in reqs[1:]:
-                    valid = valid & can[r][seg]
-                sv = seg[valid]
-                if not sv.size:
-                    continue
-                gv = dseg[valid]
+                    valid = valid & can[r]
+                srcs = np.flatnonzero(valid)
                 if kflat is None:
                     r0 = reqs[0]
-                    key = sk[r0][apos[r0][sv]]
+                    keys = sk[r0][apos[r0][srcs]]
                 else:
-                    idx = self.sigs[reqs[0]][apos[reqs[0]][sv]]
+                    idx = self.sigs[reqs[0]][apos[reqs[0]][srcs]]
                     for r, sdim in zip(reqs[1:], tshape[1:]):
-                        idx = idx * sdim + self.sigs[r][apos[r][sv]]
-                    key = kflat[idx]
-                nd = gv + key
-                nst = sv + delta
-                better = nd < dist[nst]
-                if better.any():
-                    b = nst[better]
-                    dist[b] = nd[better]
-                    act[b] = bits
+                        idx = idx * sdim + self.sigs[r][apos[r][srcs]]
+                    keys = kflat[idx]
+                S_.append(srcs)
+                K_.append(keys)
+                D_.append(srcs + delta)
+                B_.append(np.full(srcs.size, bits, dtype=np.int32))
+                R_.append(np.full(srcs.size, m - len(reqs),
+                                  dtype=np.int64))
+            S = np.concatenate(S_)
+            K = np.concatenate(K_)
+            D = np.concatenate(D_)
+            B = np.concatenate(B_)
+            R = np.concatenate(R_)
+            skey = (tsum[D] * n_states + D) * (m + 1) + R
+            perm = np.argsort(skey, kind="stable")
+            S, K, D, B = S[perm], K[perm], D[perm], B[perm]
+            E = D.size
+            gs = np.flatnonzero(
+                np.concatenate(([True], D[1:] != D[:-1])))
+            uD = D[gs]
+            gcnt = np.diff(np.append(gs, E))
+            tmax = int(tsum[target])
+            eoffs = np.concatenate(
+                ([0], np.cumsum(np.bincount(tsum[D],
+                                            minlength=tmax + 1))))
+            goffs = np.concatenate(
+                ([0], np.cumsum(np.bincount(tsum[uD],
+                                            minlength=tmax + 1))))
+            lidx = np.arange(E)
+            for t in range(1, tmax + 1):
+                a, z = eoffs[t], eoffs[t + 1]
+                if a == z:
+                    continue
+                ga, gz = goffs[t], goffs[t + 1]
+                starts = gs[ga:gz] - a
+                nd = dist[S[a:z]] + K[a:z]
+                mins = np.minimum.reduceat(nd, starts)
+                cand = np.where(nd == np.repeat(mins, gcnt[ga:gz]),
+                                lidx[a:z], E)
+                first = np.minimum.reduceat(cand, starts)
+                ud = uD[ga:gz]
+                dist[ud] = mins
+                act[ud] = B[first]
+        elif n_states <= _SWEEP_HOIST_CAP:
+            # hoisted path: per-subset valid sources / keys / successors
+            # precomputed over the whole box in diagonal-major order
+            plans = []      # (bits, srcs, keys, dsts, per-diagonal offsets)
+            for bits, reqs, delta, kflat, tshape in subsets:
+                valid = can[reqs[0]]
+                for r in reqs[1:]:
+                    valid = valid & can[r]
+                vo = valid[order]
+                srcs = order[vo]
+                voffs = np.concatenate(([0], np.cumsum(vo)))[offs]
+                if kflat is None:
+                    r0 = reqs[0]
+                    keys = sk[r0][apos[r0][srcs]]
+                else:
+                    idx = self.sigs[reqs[0]][apos[reqs[0]][srcs]]
+                    for r, sdim in zip(reqs[1:], tshape[1:]):
+                        idx = idx * sdim + self.sigs[r][apos[r][srcs]]
+                    keys = kflat[idx]
+                plans.append((bits, srcs, keys, srcs + delta, voffs))
+            for t in range(len(offs) - 2):  # last diagonal is the target
+                for bits, srcs, keys, dsts, voffs in plans:
+                    a, z = voffs[t], voffs[t + 1]
+                    if a == z:
+                        continue
+                    nd = dist[srcs[a:z]] + keys[a:z]
+                    nst = dsts[a:z]
+                    better = nd < dist[nst]
+                    if better.any():
+                        b = nst[better]
+                        dist[b] = nd[better]
+                        act[b] = bits
+        else:
+            for t in range(len(offs) - 2):  # last diagonal is the target
+                seg = order[offs[t]:offs[t + 1]]
+                dseg = dist[seg]
+                for bits, reqs, delta, kflat, tshape in subsets:
+                    valid = can[reqs[0]][seg]
+                    for r in reqs[1:]:
+                        valid = valid & can[r][seg]
+                    sv = seg[valid]
+                    if not sv.size:
+                        continue
+                    gv = dseg[valid]
+                    if kflat is None:
+                        r0 = reqs[0]
+                        key = sk[r0][apos[r0][sv]]
+                    else:
+                        idx = self.sigs[reqs[0]][apos[reqs[0]][sv]]
+                        for r, sdim in zip(reqs[1:], tshape[1:]):
+                            idx = idx * sdim + self.sigs[r][apos[r][sv]]
+                        key = kflat[idx]
+                    nd = gv + key
+                    nst = sv + delta
+                    better = nd < dist[nst]
+                    if better.any():
+                        b = nst[better]
+                        dist[b] = nd[better]
+                        act[b] = bits
         if not np.isfinite(dist[target]):  # pragma: no cover - gated above
             raise InfeasibleScheduleError(
                 "grid sweep exhausted without reaching the all-requests-"
@@ -1546,3 +1748,333 @@ def _solve_concurrent_pairwise(
         energy += eng
     return ConcurrentSchedule(steps=steps, latency=latency, energy=energy,
                               objective=objective, mode="pairwise")
+
+
+# ---------------------------------------------------------------------------
+# Warm-start incremental re-planning (the serving hot path)
+# ---------------------------------------------------------------------------
+
+
+def solve_concurrent_horizon(
+    workloads: Sequence[Workload],
+    contention: ContentionModel | None = None,
+    objective: str = "latency",
+    caches: ConcurrentCaches | None = None,
+    horizon_states: int = DEFAULT_HORIZON_STATES,
+) -> ConcurrentSchedule:
+    """Exact bounded-lookahead *prefix* of a concurrent schedule.
+
+    Co-schedules only the next window of ops across all M requests —
+    window lengths proportional to each request's remaining chain,
+    bounded to ``horizon_states`` grid states — with the exact
+    vectorized sweep, and returns that window (``mode="horizon"``).
+    This is the serving engine's bounded-latency re-plan primitive: the
+    cost of a re-plan is O(``horizon_states``) regardless of how much
+    work remains, so admission never stalls behind a full-grid solve.
+    The window is a feasible prefix of a full schedule (every unfinished
+    request advances ≥ 1 op); callers execute it and re-plan at the
+    window frontier.  Requires the default group co-execution laws
+    (custom laws have no windowed exact route — use
+    ``solve_concurrent(algorithm="pairwise")``).
+    """
+    contention = contention or ContentionModel()
+    wls = list(workloads)
+    m = len(wls)
+    if m == 0:
+        raise ValueError("solve_concurrent_horizon needs at least one "
+                         "workload")
+    if horizon_states < 2:
+        raise ValueError(
+            f"horizon_states must be >= 2 (one advanced op needs a "
+            f"2-state axis), got {horizon_states}")
+    if m == 1:
+        w = _window_lengths([wls[0].n], horizon_states)[0]
+        steps, lat, eng = _solo_step_walk(wls[0], 0, 1, objective, 0, w)
+        return ConcurrentSchedule(steps=steps, latency=lat, energy=eng,
+                                  objective=objective, mode="horizon")
+    if not uses_default_group(contention):
+        raise ValueError(
+            "solve_concurrent_horizon windows the exact grid sweep, which "
+            "requires the default group co-execution laws; "
+            f"{type(contention).__name__} overrides them — use "
+            "solve_concurrent(algorithm='pairwise') for a full solve")
+    ctx = _GridContext(wls, contention, objective, caches)
+    w = _window_lengths([wl.n for wl in wls], horizon_states)
+    steps, energy = ctx.sweep([0] * m, w)
+    return ConcurrentSchedule(steps=steps,
+                              latency=sum(st.cost for st in steps),
+                              energy=energy, objective=objective,
+                              mode="horizon")
+
+
+class _PairCacheView:
+    """A parent :class:`~repro.core.contention.PairCostCache` re-exposed
+    over tail dense views that carry the *parent's* signature ids
+    (``_tail_sig_view``): table lookups by those ids return values
+    bitwise-identical to a tail-built cache's, because each entry
+    depends only on the signature's row content.  Internal to the warm
+    M = 2 re-plan path — the views must never be used to *build* a new
+    cache (their ``sig_row`` still indexes parent rows)."""
+
+    def __init__(self, cache: PairCostCache, d0: DenseCostTable,
+                 d1: DenseCostTable):
+        self._cache = cache
+        self.d0 = d0
+        self.d1 = d1
+
+    def edge_tables(self, objective: str):
+        return self._cache.edge_tables(objective)
+
+
+def _tail_sig_view(wl: Workload, pos: int) -> Workload:
+    """``wl.tail(pos)`` whose dense view keeps the parent's signature
+    ids (instead of lazily re-deriving a tail-local alphabet), so the
+    parent's signature-indexed edge tables stay directly addressable.
+    ``sig_row`` is inherited verbatim and indexes *parent* rows — valid
+    for table lookups only, never for building caches from the view."""
+    if pos == 0:
+        return wl
+    tl = wl.tail(pos)
+    d, pd = tl.dense, wl.dense
+    d._sig = pd.sig[pos:]
+    d._sig_row = pd.sig_row
+    return tl
+
+
+class IncrementalConcurrentSolver:
+    """Warm-start re-planner for a fixed concurrent workload tuple.
+
+    Built once per (workload tuple, contention model, condition) — the
+    orchestrator keeps one per active handle set — it persists the
+    per-objective grid contexts (solo edges, signature arrays) and
+    shares the content-keyed pair/group edge tables of a
+    :class:`ConcurrentCaches` pool, so that every re-plan event of the
+    serving lifecycle prices only what changed:
+
+    * **advance** — the remaining sub-box is re-swept on the persistent
+      context; no tail views, no ``np.unique`` signature derivation, no
+      edge-table builds.
+    * **retire** (a member finishes) — the surviving subset's context is
+      assembled from the same memoized per-request pieces, and every
+      group table over surviving members is a pool hit.
+    * **admit** (a new member) — the orchestrator builds a solver for
+      the widened tuple; tables over previously-seen members (and over
+      re-admitted models, keyed by content) are pool hits, so only
+      subsets involving genuinely new content are priced.
+    * **condition fold-in** — condition-scaled workloads have new
+      content signatures, so their tables re-price exactly once into
+      the new condition's pool and every subsequent re-plan under that
+      condition is warm again.
+
+    ``solve(progress, objective)`` returns a schedule **bitwise
+    identical** to ``solve_concurrent([wl.tail(p) for unfinished], ...)``
+    on the same state — same auto routing (solo walk / pair A* /
+    grid sweep / rolling merge), same relaxation order, same tie
+    policy, same FP accumulation — the cold solver remains the oracle
+    (``tests/test_incremental_replan.py`` replays random traces against
+    it).  Routes the warm layer cannot reproduce bit-for-bit (custom
+    contention laws, the pairwise fallback) return ``None`` so callers
+    fall back to the cold solver.  ``horizon_states`` bounds a re-plan
+    to the next window, mirroring :func:`solve_concurrent_horizon`.
+    """
+
+    def __init__(self, workloads: Sequence[Workload],
+                 contention: ContentionModel | None = None,
+                 caches: ConcurrentCaches | None = None,
+                 max_states: int | None = None,
+                 window_states: int = DEFAULT_WINDOW_STATES):
+        self.wls = list(workloads)
+        self.m = len(self.wls)
+        if self.m == 0:
+            raise ValueError("IncrementalConcurrentSolver needs at least "
+                             "one workload")
+        self.cm = contention or ContentionModel()
+        self.caches = caches if caches is not None else ConcurrentCaches()
+        self.max_states = (DEFAULT_MAX_STATES if max_states is None
+                           else max_states)
+        self.window_states = window_states
+        self.ns = [wl.n for wl in self.wls]
+        self.stats = {"solves": 0, "delegated": 0}
+        self._ctx: dict[tuple, _GridContext] = {}
+        self._solo: dict[tuple[int, str], tuple] = {}
+        self._last_bad: dict[tuple[int, str], int] = {}
+
+    # -- memoized per-request pieces ----------------------------------------
+    def _solo_for(self, r: int, objective: str) -> tuple:
+        key = (r, objective)
+        solo = self._solo.get(key)
+        if solo is None:
+            solo = _solo_edges(self.wls[r].dense, objective)
+            self._solo[key] = solo
+        return solo
+
+    def _context(self, active: tuple[int, ...], objective: str
+                 ) -> _GridContext:
+        key = (active, objective)
+        ctx = self._ctx.get(key)
+        if ctx is None:
+            # feasibility is progress-dependent, so it is checked per
+            # solve over the remaining tail (mirroring the cold error),
+            # not once over the full chains here
+            ctx = _GridContext([self.wls[r] for r in active], self.cm,
+                               objective, self.caches,
+                               check_advanceable=False)
+            self._ctx[key] = ctx
+        return ctx
+
+    def _check_tails(self, active: tuple[int, ...], progress: Sequence[int],
+                     objective: str) -> None:
+        """Per-solve advanceability gate over the remaining tails —
+        message-identical to ``_require_all_advanceable`` on the cold
+        path's tail workloads (request indices are positions in the
+        active tuple; chain positions are tail-relative)."""
+        for idx, r in enumerate(active):
+            key = (r, objective)
+            last = self._last_bad.get(key)
+            if last is None:
+                bad = ~np.isfinite(np.asarray(self._solo_for(r, objective)[0]))
+                last = int(bad.nonzero()[0][-1]) if bad.any() else -1
+                self._last_bad[key] = last
+            p = progress[r]
+            if last >= p:
+                skey = np.asarray(self._solo_for(r, objective)[0])
+                pos = int(np.argmax(~np.isfinite(skey[p:])))
+                raise InfeasibleScheduleError(
+                    f"request {idx}: {self.wls[r].op_name(p + pos)} at "
+                    f"chain position {pos} is unsupported on every PU — "
+                    "no concurrent transition can advance it")
+
+    def _tail_n_sig(self, r: int, p: int) -> int:
+        return int(np.unique(self.wls[r].dense.sig[p:]).size)
+
+    # -- solve routes --------------------------------------------------------
+    def _solo_tail(self, r: int, lo: int, hi: int | None, objective: str,
+                   mode: str) -> ConcurrentSchedule:
+        steps, lat, eng = _solo_step_walk(self.wls[r], 0, 1, objective,
+                                          lo, hi,
+                                          solo=self._solo_for(r, objective))
+        return ConcurrentSchedule(steps=steps, latency=lat, energy=eng,
+                                  objective=objective, mode=mode)
+
+    def _solve_pair(self, active: tuple[int, ...], progress: Sequence[int],
+                    objective: str) -> ConcurrentSchedule:
+        a, b = active
+        wa, wb = self.wls[a], self.wls[b]
+        pa, pb = progress[a], progress[b]
+        base = _pair_cache(self.caches, self.cm, self.wls, a, b)
+        ta, tb = _tail_sig_view(wa, pa), _tail_sig_view(wb, pb)
+        cache = (base if pa == 0 and pb == 0
+                 else _PairCacheView(base, ta.dense, tb.dense))
+        return solve_concurrent_joint(
+            ta.chain, ta.table, tb.chain, tb.table, wa.pus, self.cm,
+            objective, algorithm="astar", cache=cache)
+
+    def _sweep_box(self, active: tuple[int, ...], progress: Sequence[int],
+                   hi: Sequence[int], objective: str, mode: str
+                   ) -> ConcurrentSchedule:
+        ctx = self._context(active, objective)
+        steps, energy = ctx.sweep([progress[r] for r in active], hi)
+        return ConcurrentSchedule(steps=steps,
+                                  latency=sum(st.cost for st in steps),
+                                  energy=energy, objective=objective,
+                                  mode=mode)
+
+    def _solve_rolling(self, active: tuple[int, ...],
+                       progress: Sequence[int], objective: str
+                       ) -> ConcurrentSchedule:
+        ctx = self._context(active, objective)
+        budget = min(self.window_states, self.max_states)
+        ns = [self.ns[r] for r in active]
+        done = [progress[r] for r in active]
+        steps: list[ConcurrentStep] = []
+        energy = 0.0
+        while any(d < n for d, n in zip(done, ns)):
+            rem = [n - d for d, n in zip(done, ns)]
+            w = _window_lengths(rem, budget)
+            hi = [d + wi for d, wi in zip(done, w)]
+            wsteps, weng = ctx.sweep(done, hi)
+            steps.extend(wsteps)
+            energy += weng
+            done = hi
+        return ConcurrentSchedule(steps=steps,
+                                  latency=sum(st.cost for st in steps),
+                                  energy=energy, objective=objective,
+                                  mode="rolling")
+
+    def solve(self, progress: Sequence[int], objective: str = "latency",
+              horizon_states: int | None = None) -> ConcurrentSchedule | None:
+        """Warm re-plan from ``progress`` (completed-op count per
+        request; fully-advanced requests drop out of the schedule, whose
+        step tuples cover only the unfinished ones, exactly like the
+        cold path's active-set filtering).  Returns ``None`` when the
+        state routes to a path the warm layer cannot reproduce bitwise
+        (custom contention laws / pairwise) — fall back to
+        :func:`solve_concurrent`."""
+        progress = list(progress)
+        if len(progress) != self.m:
+            raise ValueError(
+                f"progress has {len(progress)} entries for {self.m} "
+                "workloads")
+        for r, (p, n) in enumerate(zip(progress, self.ns)):
+            if not 0 <= p <= n:
+                raise ValueError(
+                    f"request {r}: progress {p} outside [0, {n}]")
+        active = tuple(r for r in range(self.m) if progress[r] < self.ns[r])
+        if not active:
+            raise ValueError("solve: every request is fully advanced — "
+                             "nothing left to schedule")
+        if horizon_states is not None:
+            return self._solve_horizon(active, progress, objective,
+                                       horizon_states)
+        if len(active) == 1:
+            self.stats["solves"] += 1
+            return self._solo_tail(active[0], progress[active[0]], None,
+                                   objective, "joint")
+        if not uses_default_coexec(self.cm):
+            self.stats["delegated"] += 1
+            return None
+        if len(active) == 2:
+            self.stats["solves"] += 1
+            return self._solve_pair(active, progress, objective)
+        if not uses_default_group(self.cm):
+            self.stats["delegated"] += 1
+            return None
+        rem = [self.ns[r] - progress[r] for r in active]
+        n_states = math.prod(x + 1 for x in rem)
+        if n_states <= self.max_states:
+            self._check_tails(active, progress, objective)
+            self.stats["solves"] += 1
+            return self._sweep_box(active, progress,
+                                   [self.ns[r] for r in active],
+                                   objective, "joint-grid")
+        sig_states = math.prod(self._tail_n_sig(r, progress[r])
+                               for r in active)
+        if sig_states <= _ROLLING_TABLE_CAP:
+            self._check_tails(active, progress, objective)
+            self.stats["solves"] += 1
+            return self._solve_rolling(active, progress, objective)
+        self.stats["delegated"] += 1
+        return None
+
+    def _solve_horizon(self, active: tuple[int, ...],
+                       progress: Sequence[int], objective: str,
+                       horizon_states: int) -> ConcurrentSchedule | None:
+        if horizon_states < 2:
+            raise ValueError(
+                f"horizon_states must be >= 2 (one advanced op needs a "
+                f"2-state axis), got {horizon_states}")
+        if len(active) == 1:
+            r = active[0]
+            p = progress[r]
+            w = _window_lengths([self.ns[r] - p], horizon_states)[0]
+            self.stats["solves"] += 1
+            return self._solo_tail(r, p, p + w, objective, "horizon")
+        if not uses_default_group(self.cm):
+            self.stats["delegated"] += 1
+            return None      # cold solve_concurrent_horizon raises for this
+        self._check_tails(active, progress, objective)
+        rem = [self.ns[r] - progress[r] for r in active]
+        w = _window_lengths(rem, horizon_states)
+        hi = [progress[r] + wi for r, wi in zip(active, w)]
+        self.stats["solves"] += 1
+        return self._sweep_box(active, progress, hi, objective, "horizon")

@@ -1,0 +1,462 @@
+"""Streaming serving engine: an async front end over the Orchestrator.
+
+The orchestrator exposes the online-admission API (``admit`` /
+``advance`` / ``retire`` / ``replan_active``); this module is the
+traffic loop that drives it at load — the difference between a paper
+artifact and a scheduler that serves requests (ROADMAP item 1).
+
+* :class:`ArrivalTrace` — reproducible request streams: ``poisson``
+  (memoryless arrivals at a target rate) and ``bursty`` (Poisson
+  background plus clustered bursts, the hard case for admission).
+* :class:`ServingEngine` — an asyncio event loop feeding the
+  orchestrator: continuous admission into a bounded concurrent set,
+  **bounded re-plan latency** via windowed warm re-plans
+  (``horizon_states``; every admit/advance/retire event costs one
+  O(budget) incremental solve, never a full-grid re-solve), per-request
+  SLO deadlines with optimistic-bound shedding, and graceful shedding of
+  requests a re-plan proves infeasible
+  (:class:`~repro.core.errors.InfeasibleScheduleError`) instead of
+  taking the serving loop down.
+* :class:`ServeReport` — sustained throughput, p50/p99 *plan* latency
+  (wall-clock re-plan cost, the scheduler's own overhead) and p50/p99
+  *request* latency (virtual queueing + execution time), plus the
+  warm/cold re-plan split from ``orchestrator.stats``.
+
+Execution is virtual-time: a planned :class:`ConcurrentStep` "runs" by
+advancing the virtual clock by its cost-model latency and recording
+progress via ``advance`` — the same discrete-event convention as the
+cost-model benchmarks, so the loop exercises the full planning path at
+thousands of requests without burning hours of wall clock.  Re-plan
+latencies are the real wall-clock cost of the plan calls.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from .errors import InfeasibleScheduleError
+from .op import FusedOp, OpGraph, chain_graph
+from .orchestrator import Orchestrator, Plan
+from .search import DEFAULT_HORIZON_STATES
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    """One request arrival: which model, when (virtual seconds), and an
+    optional absolute SLO budget in virtual seconds (``None`` defers to
+    the engine's ``slo_factor`` policy, if any)."""
+    rid: int
+    model: str
+    time: float
+    slo: float | None = None
+
+
+@dataclasses.dataclass
+class ArrivalTrace:
+    """A reproducible arrival stream (sorted by time)."""
+    arrivals: list[Arrival]
+    kind: str = "custom"
+
+    def __post_init__(self) -> None:
+        self.arrivals = sorted(self.arrivals, key=lambda a: a.time)
+
+    def __len__(self) -> int:
+        return len(self.arrivals)
+
+    @classmethod
+    def poisson(cls, models: Sequence[str], rate: float, n: int,
+                seed: int = 0, slo: float | None = None) -> "ArrivalTrace":
+        """``n`` arrivals with Exp(``rate``) inter-arrival gaps, models
+        drawn uniformly — the classic open-loop load model."""
+        if rate <= 0 or n < 0:
+            raise ValueError(f"poisson: need rate > 0 and n >= 0, got "
+                             f"rate={rate}, n={n}")
+        rng = np.random.default_rng(seed)
+        ts = np.cumsum(rng.exponential(1.0 / rate, size=n))
+        picks = rng.integers(0, len(models), size=n)
+        return cls([Arrival(i, models[int(picks[i])], float(ts[i]), slo)
+                    for i in range(n)], kind="poisson")
+
+    @classmethod
+    def bursty(cls, models: Sequence[str], rate: float, n: int,
+               burst_every: int = 5, burst_size: int = 3,
+               burst_span: float = 1e-3, seed: int = 0,
+               slo: float | None = None) -> "ArrivalTrace":
+        """Poisson background where every ``burst_every``-th arrival
+        brings ``burst_size - 1`` near-simultaneous companions (within
+        ``burst_span`` virtual seconds) — clustered admissions that
+        stress bounded re-plan latency."""
+        base = cls.poisson(models, rate, n, seed=seed, slo=slo)
+        rng = np.random.default_rng(seed + 1)
+        out = list(base.arrivals)
+        rid = n
+        for k, a in enumerate(base.arrivals):
+            if burst_every and k % burst_every == 0:
+                for j in range(burst_size - 1):
+                    out.append(Arrival(
+                        rid, models[int(rng.integers(0, len(models)))],
+                        a.time + float(rng.uniform(0, burst_span)), slo))
+                    rid += 1
+        return cls(out, kind="bursty")
+
+
+@dataclasses.dataclass
+class RequestRecord:
+    """Lifecycle record of one served (or shed) request."""
+    rid: int
+    model: str
+    arrival: float
+    deadline: float | None
+    ops_total: int
+    ops_done: int = 0
+    handle: int | None = None
+    admitted_at: float | None = None
+    finished_at: float | None = None
+    shed: bool = False
+    shed_reason: str = ""
+
+    @property
+    def latency(self) -> float | None:
+        """Virtual arrival→completion latency (queueing + execution)."""
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.arrival
+
+
+def _pct(xs: Sequence[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if len(xs) else 0.0
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """What a serving run sustained, and what it cost to plan it."""
+    n_requests: int
+    completed: int
+    shed: int
+    makespan: float               # virtual seconds, first arrival -> drain
+    throughput: float             # completed requests / virtual second
+    latency_p50: float            # virtual request latency percentiles
+    latency_p99: float
+    plan_ms_p50: float            # wall-clock re-plan latency percentiles
+    plan_ms_p99: float
+    plan_events: int
+    replans_warm: int
+    replans_cold: int
+    occupancy_mean: float         # time-weighted mean concurrent set size
+    requests: list[RequestRecord] = dataclasses.field(
+        default_factory=list, repr=False)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d.pop("requests")
+        return d
+
+
+class ServingEngine:
+    """Continuous-admission serving loop over one :class:`Orchestrator`.
+
+    ``models`` maps model names to their inference graphs (or bare op
+    sequences); each is registered once and cloned per concurrent
+    in-flight request through handle aliasing (``register(graph,
+    table=...)`` always issues a fresh handle, so two in-flight requests
+    of the same model hold distinct admission slots; finished handles
+    return to a per-model free pool, keeping the registration count
+    bounded by peak concurrency).
+
+    The loop is an asyncio pipeline — a producer task feeding arrivals
+    into a queue, the scheduler task draining it — with virtual-time
+    execution (see module docstring).  Every membership or progress
+    boundary costs exactly one windowed warm re-plan of at most
+    ``horizon_states`` grid states, so admission latency stays bounded
+    no matter how much work is in flight.  ``max_concurrent`` bounds the
+    co-scheduled set (grid width); excess arrivals queue FIFO.
+
+    Shedding keeps the loop alive instead of failing a whole run:
+
+    * **SLO**: a request whose optimistic remaining-work bound (suffix
+      sum of per-op best-PU costs) can no longer meet its deadline is
+      shed at admission or at the next re-plan boundary.
+    * **Infeasibility**: when a re-plan raises
+      :class:`InfeasibleScheduleError` (e.g. a condition change left an
+      op with no supporting PU), the offending requests are shed and the
+      survivors re-planned.
+    """
+
+    def __init__(self, orch: Orchestrator,
+                 models: Mapping[str, OpGraph | Sequence[FusedOp]],
+                 objective: str = "latency",
+                 horizon_states: int | None = DEFAULT_HORIZON_STATES,
+                 max_concurrent: int = 3,
+                 slo_factor: float | None = None):
+        if not models:
+            raise ValueError("ServingEngine needs at least one model")
+        if max_concurrent < 1:
+            raise ValueError(
+                f"max_concurrent must be >= 1, got {max_concurrent}")
+        self.orch = orch
+        self.objective = objective
+        self.horizon_states = horizon_states
+        self.max_concurrent = max_concurrent
+        self.slo_factor = slo_factor
+        self._graphs: dict[str, OpGraph] = {}
+        self._base: dict[str, int] = {}       # model -> provider handle
+        self._tables: dict[str, object] = {}  # model -> profiled CostTable
+        self._free: dict[str, list[int]] = {}  # model -> reusable handles
+        self._bound: dict[str, np.ndarray] = {}  # optimistic suffix bound
+        for name, g in models.items():
+            if not isinstance(g, OpGraph):
+                g = chain_graph(list(g))
+            self._graphs[name] = g
+            h = orch.register(g)
+            self._base[name] = h
+            self._tables[name] = orch._reg(h).table
+            self._free[name] = [h]
+            wl = orch.workload(h)
+            d = wl.dense
+            best = np.where(d.mask, d.w, np.inf).min(axis=1)
+            best = np.where(np.isfinite(best), best, 0.0)  # infeasible ops
+            self._bound[name] = np.concatenate(
+                (np.cumsum(best[::-1])[::-1], [0.0]))
+
+    # -- handle aliasing -----------------------------------------------------
+    def _acquire(self, model: str) -> int:
+        free = self._free[model]
+        if free:
+            return free.pop()
+        # an explicit-table registration always gets a fresh handle: the
+        # same model can hold several concurrent admission slots
+        return self.orch.register(self._graphs[model],
+                                  table=self._tables[model])
+
+    def _release(self, model: str, h: int) -> None:
+        self._free[model].append(h)
+
+    # -- serving loop --------------------------------------------------------
+    def serve(self, trace: ArrivalTrace) -> ServeReport:
+        """Run a trace to drain (synchronous wrapper over the async
+        loop)."""
+        return asyncio.run(self.serve_async(trace))
+
+    async def serve_async(self, trace: ArrivalTrace) -> ServeReport:
+        queue: asyncio.Queue = asyncio.Queue()
+
+        async def produce() -> None:
+            for a in trace.arrivals:
+                await queue.put(a)
+            await queue.put(None)          # end of stream
+
+        producer = asyncio.create_task(produce())
+        try:
+            report = await self._schedule(queue, len(trace.arrivals))
+        finally:
+            producer.cancel()
+        return report
+
+    async def _schedule(self, queue: asyncio.Queue,
+                        n_expected: int) -> ServeReport:
+        orch = self.orch
+        now = 0.0
+        t0 = None                      # virtual time of first arrival
+        plan_ms: list[float] = []
+        records: list[RequestRecord] = []
+        inflight: dict[int, RequestRecord] = {}   # handle -> record
+        waiting: list[RequestRecord] = []         # admitted=no, FIFO
+        pending: Arrival | None = None            # next undelivered arrival
+        stream_done = False
+        busy_time = 0.0                # integral of |active| over time
+        warm0 = orch.stats["replans_warm"]
+        cold0 = orch.stats["replans_cold"]
+        plan: Plan | None = None
+        cursor = 0                     # next step of `plan` to run
+
+        def record_of(a: Arrival) -> RequestRecord:
+            wl = orch.workload(self._base[a.model])
+            slo = a.slo
+            if slo is None and self.slo_factor is not None:
+                slo = self.slo_factor * float(self._bound[a.model][0])
+            return RequestRecord(
+                rid=a.rid, model=a.model, arrival=a.time,
+                deadline=None if slo is None else a.time + slo,
+                ops_total=wl.n)
+
+        def bound(rec: RequestRecord) -> float:
+            return float(self._bound[rec.model][rec.ops_done])
+
+        def shed(rec: RequestRecord, reason: str) -> None:
+            rec.shed, rec.shed_reason = True, reason
+            if rec.handle is not None:
+                rec_h = rec.handle
+                rec.handle = None
+                self._release(rec.model, rec_h)
+
+        def timed(fn, *args, **kw):
+            t = time.perf_counter()
+            out = fn(*args, **kw)
+            plan_ms.append((time.perf_counter() - t) * 1e3)
+            return out
+
+        def admit_due() -> bool:
+            """Admit waiting requests while capacity allows; returns
+            whether membership changed (plan invalidated)."""
+            nonlocal plan
+            changed = False
+            while waiting and len(inflight) < self.max_concurrent:
+                rec = waiting.pop(0)
+                if rec.deadline is not None and \
+                        now + bound(rec) > rec.deadline:
+                    shed(rec, "slo")           # cannot make it: shed now
+                    continue
+                h = self._acquire(rec.model)
+                rec.handle = h
+                rec.admitted_at = now
+                inflight[h] = rec
+                plan = timed(orch.admit, h, self.objective,
+                             self.horizon_states)
+                changed = True
+            return changed
+
+        def replan() -> None:
+            """Windowed warm re-plan with graceful shedding."""
+            nonlocal plan, cursor
+            while True:
+                try:
+                    if plan is None and inflight:
+                        plan = timed(orch.replan_active, self.objective,
+                                     self.horizon_states)
+                    cursor = 0
+                    return
+                except InfeasibleScheduleError:
+                    bad = [h for h, rec in inflight.items()
+                           if self._infeasible(rec)]
+                    if not bad:
+                        raise          # not a per-request infeasibility
+                    for h in bad:
+                        rec = inflight.pop(h)
+                        orch.retire(h, self.objective,
+                                    self.horizon_states)
+                        shed(rec, "infeasible")
+                    plan = None
+
+        while True:
+            # -- drain the arrival stream up to the virtual clock ------------
+            while not stream_done:
+                if pending is None:
+                    if queue.empty() and (inflight or waiting):
+                        break          # nothing delivered yet; keep serving
+                    item = await queue.get()
+                    if item is None:
+                        stream_done = True
+                        break
+                    pending = item
+                if pending.time > now and (inflight or waiting):
+                    break              # future arrival; serve current work
+                now = max(now, pending.time)
+                if t0 is None:
+                    t0 = pending.time
+                rec = record_of(pending)
+                records.append(rec)
+                if rec.ops_total and not self._model_feasible(rec.model):
+                    shed(rec, "infeasible")
+                else:
+                    waiting.append(rec)
+                pending = None
+            if not inflight and not waiting:
+                if stream_done and pending is None:
+                    break              # drained
+                continue
+
+            # -- membership / progress boundary: admit + (re)plan ------------
+            if admit_due():
+                cursor = 0
+            if plan is None:
+                replan()
+            if plan is None:           # everything fully advanced
+                for h, rec in list(inflight.items()):
+                    rec.finished_at = now
+                    inflight.pop(h)
+                    orch.retire(h, self.objective, self.horizon_states)
+                    self._release(rec.model, h)
+                continue
+
+            # -- run planned steps in virtual time ---------------------------
+            steps = plan.schedule.steps
+            handles = plan.handles
+            horizon = pending.time if pending is not None else None
+            finished: list[int] = []
+            while cursor < len(steps):
+                if horizon is not None and now >= horizon:
+                    break              # an arrival is due: admit first
+                step = steps[cursor]
+                cursor += 1
+                busy_time += len(inflight) * step.cost
+                now += step.cost
+                for slot, op in enumerate(step.ops):
+                    if op is None:
+                        continue
+                    h = handles[slot]
+                    rec = inflight[h]
+                    orch.advance(h, 1)
+                    rec.ops_done += 1
+                    if rec.ops_done >= rec.ops_total:
+                        finished.append(h)
+                if finished:
+                    break              # membership change: re-plan
+            for h in finished:
+                rec = inflight.pop(h)
+                rec.finished_at = now
+                plan = timed(orch.retire, h, self.objective,
+                             self.horizon_states)
+                cursor = 0
+                self._release(rec.model, h)
+            if not finished and cursor >= len(steps):
+                plan = None            # window exhausted: warm re-plan
+            # mid-flight SLO check at the boundary
+            for h, rec in list(inflight.items()):
+                if rec.deadline is not None and \
+                        now + bound(rec) > rec.deadline:
+                    inflight.pop(h)
+                    orch.retire(h, self.objective, self.horizon_states)
+                    shed(rec, "slo")
+                    plan = None
+            await asyncio.sleep(0)     # cooperative yield per boundary
+
+        lats = [r.latency for r in records if r.latency is not None]
+        completed = len(lats)
+        makespan = max(now - (t0 or 0.0), 0.0)
+        return ServeReport(
+            n_requests=len(records),
+            completed=completed,
+            shed=sum(r.shed for r in records),
+            makespan=makespan,
+            throughput=completed / makespan if makespan > 0 else 0.0,
+            latency_p50=_pct(lats, 50), latency_p99=_pct(lats, 99),
+            plan_ms_p50=_pct(plan_ms, 50), plan_ms_p99=_pct(plan_ms, 99),
+            plan_events=len(plan_ms),
+            replans_warm=orch.stats["replans_warm"] - warm0,
+            replans_cold=orch.stats["replans_cold"] - cold0,
+            occupancy_mean=busy_time / makespan if makespan > 0 else 0.0,
+            requests=records)
+
+    # -- feasibility probes --------------------------------------------------
+    def _avail_cols(self, model: str) -> list[int]:
+        d = self.orch.workload(self._base[model]).dense
+        gone = self.orch.condition.unavailable
+        return [i for i, pu in enumerate(d.pus) if pu not in gone]
+
+    def _model_feasible(self, model: str) -> bool:
+        d = self.orch.workload(self._base[model]).dense
+        cols = self._avail_cols(model)
+        if not cols:
+            return False
+        return bool(d.mask[:, cols].any(axis=1).all())
+
+    def _infeasible(self, rec: RequestRecord) -> bool:
+        d = self.orch.workload(self._base[rec.model]).dense
+        cols = self._avail_cols(rec.model)
+        if not cols:
+            return True
+        return not bool(d.mask[rec.ops_done:, cols].any(axis=1).all())

@@ -172,9 +172,9 @@ def test_cache_hit_is_bitwise_equal_and_counted(model):
     orch = Orchestrator(model)
     h = orch.register(g)
     cold = orch.plan(h)
-    assert orch.stats == {"hits": 0, "misses": 1, "invalidated": 0,
-                          "program_hits": 0, "program_misses": 0,
-                          "recoveries": 0}
+    assert orch.stats["hits"] == 0 and orch.stats["misses"] == 1
+    assert all(orch.stats[k] == 0 for k in orch.stats
+               if k not in ("misses",))
     hit = orch.plan(h)
     assert hit is cold                       # served from cache
     assert orch.stats["hits"] == 1

@@ -1,0 +1,164 @@
+"""Streaming serving engine: traces, the serving loop, SLO and
+infeasibility shedding, and handle-alias pooling.
+
+The companion warm-start correctness suite is
+``test_incremental_replan.py``; here we test the traffic layer built on
+top of it: reproducible arrival traces, a full run-to-drain over the
+orchestrator's admission API, the report's accounting, and that the
+loop degrades by shedding (never by crashing) under deadlines and
+conditions that strand a model.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (Arrival, ArrivalTrace, CostEntry, CostTable,
+                        EDGE_PUS, FusedOp, Orchestrator, RuntimeCondition,
+                        ServingEngine, chain_graph)
+
+PUS = ("CPU", "GPU", "NPU")
+
+
+def make_engine(rng, lengths=(4, 5, 3), npu_only_idx=None, **engine_kw):
+    """Chain models of the given lengths over one shared cost table
+    (``CostTable`` keys by op index, so all models price through it);
+    ``npu_only_idx`` strands one index on the NPU for the
+    condition-shedding test."""
+    table = CostTable(list(PUS))
+    for i in range(max(lengths)):
+        sup = ("NPU",) if i == npu_only_idx else PUS
+        for pu in sup:
+            table.set(i, pu, CostEntry(
+                kernel=float(rng.uniform(1e-5, 1e-3)),
+                dispatch=float(rng.uniform(0, 1e-5)),
+                h2d=float(rng.uniform(0, 1e-4)),
+                d2h=float(rng.uniform(0, 1e-4)),
+                power=float(rng.uniform(5.0, 30.0))))
+    models = {
+        f"model{k}": chain_graph([FusedOp(name=f"m{k}o{i}", kind="other",
+                                          out_shape=(4,))
+                                  for i in range(n)])
+        for k, n in enumerate(lengths)}
+    orch = Orchestrator(table)
+    return orch, ServingEngine(orch, models, **engine_kw)
+
+
+# -- arrival traces ---------------------------------------------------------
+
+def test_poisson_trace_is_reproducible_and_sorted():
+    a = ArrivalTrace.poisson(["x", "y"], rate=5.0, n=20, seed=3)
+    b = ArrivalTrace.poisson(["x", "y"], rate=5.0, n=20, seed=3)
+    assert a.arrivals == b.arrivals
+    assert len(a) == 20 and a.kind == "poisson"
+    ts = [v.time for v in a.arrivals]
+    assert ts == sorted(ts) and all(t > 0 for t in ts)
+    assert {v.model for v in a.arrivals} <= {"x", "y"}
+
+
+def test_bursty_trace_adds_companions():
+    base = ArrivalTrace.poisson(["x"], rate=5.0, n=10, seed=0)
+    burst = ArrivalTrace.bursty(["x"], rate=5.0, n=10, burst_every=5,
+                                burst_size=3, seed=0)
+    assert len(burst) == len(base) + 2 * 2   # 2 bursts x 2 companions
+    ts = [v.time for v in burst.arrivals]
+    assert ts == sorted(ts)
+    assert burst.kind == "bursty"
+
+
+def test_trace_validation():
+    with pytest.raises(ValueError):
+        ArrivalTrace.poisson(["x"], rate=0.0, n=3)
+    with pytest.raises(ValueError):
+        ArrivalTrace.poisson(["x"], rate=1.0, n=-1)
+
+
+def test_custom_trace_sorts_on_init():
+    tr = ArrivalTrace([Arrival(1, "x", 2.0), Arrival(0, "x", 1.0)])
+    assert [a.rid for a in tr.arrivals] == [0, 1]
+
+
+# -- serving loop -----------------------------------------------------------
+
+def test_serve_completes_all_without_deadlines():
+    rng = np.random.default_rng(0)
+    orch, eng = make_engine(rng, max_concurrent=3)
+    trace = ArrivalTrace.poisson(list(eng._graphs), rate=50.0, n=15, seed=1)
+    rep = eng.serve(trace)
+    assert rep.n_requests == 15
+    assert rep.completed == 15 and rep.shed == 0
+    assert rep.throughput > 0 and rep.makespan > 0
+    assert rep.latency_p99 >= rep.latency_p50 > 0
+    assert rep.plan_events > 0 and rep.plan_ms_p99 >= rep.plan_ms_p50 >= 0
+    # every serving-loop re-plan took the incremental path
+    assert rep.replans_warm > 0 and rep.replans_cold == 0
+    for r in rep.requests:
+        assert r.ops_done == r.ops_total and r.finished_at is not None
+        assert r.latency >= 0
+
+
+def test_serve_queues_beyond_capacity():
+    rng = np.random.default_rng(1)
+    orch, eng = make_engine(rng, max_concurrent=1)
+    # everything arrives at once: strictly serialized service
+    tr = ArrivalTrace([Arrival(i, f"model{i % 3}", 0.0) for i in range(6)])
+    rep = eng.serve(tr)
+    assert rep.completed == 6
+    assert rep.occupancy_mean <= 1.0 + 1e-9
+    # handle aliasing stays bounded by peak concurrency per model
+    assert len(orch._regs) <= 3 * eng.max_concurrent
+
+
+def test_serve_sheds_on_impossible_slo():
+    rng = np.random.default_rng(2)
+    orch, eng = make_engine(rng, max_concurrent=2)
+    tr = ArrivalTrace([Arrival(i, "model0", float(i), slo=1e-12)
+                       for i in range(4)])
+    rep = eng.serve(tr)
+    assert rep.completed == 0 and rep.shed == 4
+    assert all(r.shed_reason == "slo" for r in rep.requests)
+
+
+def test_serve_sheds_infeasible_model_under_condition():
+    rng = np.random.default_rng(3)
+    # index 4 exists only in model1's chain and is NPU-only
+    orch, eng = make_engine(rng, lengths=(4, 5, 3), npu_only_idx=4,
+                            max_concurrent=3)
+    orch.on_condition(RuntimeCondition(unavailable={"NPU"}))
+    tr = ArrivalTrace([Arrival(0, "model0", 0.0), Arrival(1, "model1", 0.0),
+                       Arrival(2, "model2", 0.0)])
+    rep = eng.serve(tr)
+    shed = {r.model: r for r in rep.requests if r.shed}
+    assert set(shed) == {"model1"}
+    assert shed["model1"].shed_reason == "infeasible"
+    assert rep.completed == 2 and rep.shed == 1
+
+
+def test_serve_engine_validation():
+    rng = np.random.default_rng(4)
+    with pytest.raises(ValueError):
+        make_engine(rng, max_concurrent=0)
+    orch = Orchestrator(CostTable(list(PUS)))
+    with pytest.raises(ValueError):
+        ServingEngine(orch, {})
+
+
+def test_report_dict_round_trips_without_requests():
+    rng = np.random.default_rng(5)
+    orch, eng = make_engine(rng)
+    rep = eng.serve(ArrivalTrace.poisson(list(eng._graphs), rate=20.0, n=5,
+                                         seed=2))
+    d = rep.to_dict()
+    assert "requests" not in d
+    assert d["n_requests"] == 5
+    assert d["completed"] + d["shed"] == 5
+
+
+def test_handle_free_list_reuses_handles():
+    rng = np.random.default_rng(6)
+    orch, eng = make_engine(rng, max_concurrent=2)
+    n_before = None
+    for _ in range(3):      # repeated drains must not grow registrations
+        eng.serve(ArrivalTrace.poisson(list(eng._graphs), rate=30.0, n=6,
+                                       seed=7))
+        if n_before is None:
+            n_before = len(orch._regs)
+    assert len(orch._regs) == n_before
