@@ -34,7 +34,7 @@ from repro.core import (EDGE_PUS, EdgeSoCCostModel, FusedOp, OpGraph,
                         Orchestrator, results_bitwise_equal)
 from repro.core.paperzoo import zoo
 
-from .common import geomean
+from .common import env_meta, geomean
 
 ZOO_MODELS = ["ResNet-50 FP16", "BitNet FP16", "LLaMA-7B(1L) FP16",
               "Mamba-370M FP16", "ViT-B/16 FP16"]
@@ -192,6 +192,7 @@ def run(verbose: bool = True, smoke: bool = False,
             print(f"  [{'PASS' if ok else 'FAIL'}] {c}")
 
     if out_path:
+        out["meta"] = env_meta()
         with open(out_path, "w") as f:
             json.dump(out, f, indent=2)
         if verbose:

@@ -34,7 +34,7 @@ from repro.core.paperzoo import zoo
 
 from .bench_exec import (SMOKE_MODELS, ZOO_MODELS, _best_of,
                          _concurrent_payload_models, attach_payloads)
-from .common import geomean
+from .common import env_meta, geomean
 
 OVERHEAD_GATE = 1.10          # watchdog-on / watchdog-off, warm path
 BASELINE = ExecutionPolicy(watchdog=False)    # PR 5 execution semantics
@@ -160,6 +160,7 @@ def run(verbose: bool = True, smoke: bool = False,
             with open(out_path) as f:
                 merged = json.load(f)
         merged["fault"] = fault
+        merged["meta"] = env_meta()
         with open(out_path, "w") as f:
             json.dump(merged, f, indent=2)
         if verbose:

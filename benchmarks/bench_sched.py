@@ -38,7 +38,7 @@ from repro.core import (ContentionModel, DEFAULT_MAX_STATES, EDGE_PUS,
                         solve_sequential)
 from repro.core.paperzoo import zoo
 
-from .common import geomean, segment_table
+from .common import env_meta, geomean, segment_table
 
 SEQ_MODELS = ["ViT-B/16 FP16", "Hyena FP16", "pi0.5"]
 PAR_MODELS = ["ViT-B/16 FP16", "SNN-VGG9 FP16"]
@@ -245,6 +245,7 @@ def run(verbose: bool = True, smoke: bool = False,
             print(f"  [{'PASS' if ok else 'FAIL'}] {c}")
 
     if out_path:
+        out["meta"] = env_meta()
         with open(out_path, "w") as f:
             json.dump(out, f, indent=2)
         if verbose:

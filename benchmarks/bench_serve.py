@@ -44,7 +44,7 @@ from repro.core import (ArrivalTrace, ConcurrentCaches, EDGE_PUS,
                         solve_concurrent, solve_concurrent_horizon)
 from repro.core.paperzoo import zoo
 
-from .common import geomean
+from .common import env_meta, geomean
 
 M_SET = ("ViT-B/16 FP16", "ResNet-50 FP16", "SNN-VGG9 FP16")
 HORIZON_STATES = 1_024
@@ -199,6 +199,7 @@ def run(verbose: bool = True, smoke: bool = False,
         for c, ok in out["checks"].items():
             print(f"  [{'PASS' if ok else 'FAIL'}] {c}")
     if out_path:
+        out["meta"] = env_meta()
         with open(out_path, "w") as f:
             json.dump(out, f, indent=2)
         if verbose:

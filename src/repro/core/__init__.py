@@ -28,7 +28,8 @@ from .graph import (DenseChain, ExecGraph, build_dense_chain,
                     build_sequential_graph)
 from .op import Branch, FusedOp, OpGraph, Phase, chain_graph
 from .orchestrator import Orchestrator, Plan
-from .profiler import (AnalyticProfiler, MeasuredProfiler, measure_callable,
+from .profiler import (AnalyticProfiler, MeasuredProfiler, Measurement,
+                       measure_callable, measure_callable_stats,
                        trace_fused_ops)
 from .schedule import (ConcurrentSchedule, ConcurrentStep, ParallelSchedule,
                        SeqSchedule, evaluate_sequential,
@@ -44,8 +45,10 @@ from .search import (ConcurrentCaches, DEFAULT_HORIZON_STATES,
                      solve_parallel, solve_sequential)
 from .serve import (Arrival, ArrivalTrace, RequestRecord, ServeReport,
                     ServingEngine)
+from .targets import (Target, TargetRegistry, pu_specs_for_targets,
+                      resolve_targets, variant_tolerance)
 from .workload import Workload
-from . import autoshard, modelgraph, paperzoo  # noqa: F401  (TPU mode + graphs)
+from . import autoshard, backends, modelgraph, paperzoo  # noqa: F401
 
 __all__ = [
     "ContentionModel", "DEFAULT_MM_SF", "GroupCostCache", "PairCostCache",
@@ -62,8 +65,11 @@ __all__ = [
     "DenseChain", "ExecGraph",
     "build_dense_chain", "build_sequential_graph", "Branch", "FusedOp",
     "OpGraph", "Phase",
-    "chain_graph", "AnalyticProfiler", "MeasuredProfiler",
-    "measure_callable", "trace_fused_ops", "ConcurrentSchedule",
+    "chain_graph", "AnalyticProfiler", "MeasuredProfiler", "Measurement",
+    "measure_callable", "measure_callable_stats",
+    "Target", "TargetRegistry", "pu_specs_for_targets", "resolve_targets",
+    "variant_tolerance",
+    "trace_fused_ops", "ConcurrentSchedule",
     "ConcurrentStep", "ParallelSchedule", "SeqSchedule",
     "evaluate_sequential", "evaluate_sequential_reference",
     "schedule_from_dict", "schedule_to_dict",

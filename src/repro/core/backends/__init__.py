@@ -1,0 +1,15 @@
+"""Builtin execution backends, declared as :class:`~repro.core.targets.Target` data.
+
+``default_registry()`` is the front door: the three host backends every
+container has (`numpy-eager`, `xla-cpu`, `pallas-interpret`) plus one
+auto-discovered target per real JAX device.  Adding a backend is
+registering one more ``Target`` value — see ``builtin.py`` for the
+factories and :mod:`repro.core.targets` for the contract.
+"""
+from .builtin import (default_registry, device_target, discover_devices,
+                      numpy_eager, pallas_interpret, xla_cpu)
+
+__all__ = [
+    "default_registry", "device_target", "discover_devices",
+    "numpy_eager", "pallas_interpret", "xla_cpu",
+]

@@ -46,10 +46,27 @@ from .op import OpGraph
 
 
 class ScheduleExecutor:
-    """Runs an OpGraph whose ops carry ``fn`` payloads under an assignment."""
+    """Runs an OpGraph whose ops carry ``fn`` payloads under an assignment.
 
-    def __init__(self, pus: Sequence[str]):
+    ``targets`` optionally binds lane names to registered
+    :class:`~repro.core.targets.Target`\\ s (see
+    :mod:`repro.core.backends`): the **compiled** path then selects and
+    device-places each lane's payload variants per its bound target at
+    compile time.  The per-op interpreter deliberately ignores the
+    binding — it always executes ``op.fn`` and remains the
+    single-variant bitwise oracle.
+    """
+
+    def __init__(self, pus: Sequence[str], targets=None):
+        from .targets import resolve_targets
         self.pus = list(pus)
+        self.targets = resolve_targets(targets)
+        if self.targets:
+            unknown = sorted(set(self.targets) - set(self.pus))
+            if unknown:
+                raise ValueError(
+                    f"target binding names lane(s) {unknown} not in the "
+                    f"executor's PU set {self.pus}")
 
     def run_monolithic(self, graph: OpGraph,
                        external_inputs: Mapping[int, tuple] | None = None) -> dict[int, Any]:
@@ -325,7 +342,8 @@ class ScheduleExecutor:
         assignment = self._normalize_assignment(graph, assignment)
         queues = self._scheduled_lane_queues(graph, assignment)
         lane_items = {pu: [(0, i) for i in q] for pu, q in queues.items()}
-        return compile_lane_program([graph], lane_items, single=True)
+        return compile_lane_program([graph], lane_items, single=True,
+                                    targets=self.targets)
 
     def compile_concurrent(self, graphs: Sequence[OpGraph],
                            schedule) -> LaneProgram:
@@ -334,7 +352,8 @@ class ScheduleExecutor:
         segments); ``program.run(inputs)`` matches ``run_concurrent``."""
         lane_queues, barriers = self._concurrent_lane_queues(graphs, schedule)
         return compile_lane_program(list(graphs), lane_queues,
-                                    barriers=barriers, single=False)
+                                    barriers=barriers, single=False,
+                                    targets=self.targets)
 
     # ------------------------------------------------------------------
     @staticmethod

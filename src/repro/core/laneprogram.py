@@ -71,6 +71,7 @@ from .errors import ExecutionError, PULostError
 from .faults import (_JOIN_GRACE, ExecutionPolicy, FaultPlan, RunContext,
                      _Aborted, run_with_retries)
 from .op import OpGraph
+from .targets import variant_tolerance
 
 try:  # the compiled path degrades to composed-Python without jax
     import jax
@@ -111,6 +112,24 @@ def results_bitwise_equal(a: Mapping[int, Any], b: Mapping[int, Any]) -> bool:
     return all(_bitwise_equal(a[k], b[k]) for k in a)
 
 
+def _within_tolerance(ref, got, target) -> bool:
+    """Variant-vs-reference closeness at the target's per-dtype tolerance
+    bucket (non-float outputs must be bitwise; shape/dtype must match)."""
+    if ref is None or got is None:
+        return ref is None and got is None
+    a, b = np.asarray(ref), np.asarray(got)
+    if a.shape != b.shape or a.dtype != b.dtype:
+        return False
+    if a.dtype.kind not in "fc":
+        return a.tobytes() == b.tobytes()
+    atol, rtol = (target.tolerance(a.dtype) if target is not None
+                  else variant_tolerance(a.dtype))
+    if atol == 0.0 and rtol == 0.0:
+        return a.tobytes() == b.tobytes()
+    return bool(np.allclose(a.astype(np.float64), b.astype(np.float64),
+                            atol=atol, rtol=rtol))
+
+
 @dataclasses.dataclass
 class Segment:
     """A maximal run of same-lane ops fused into one callable.
@@ -120,13 +139,27 @@ class Segment:
     reads (same-lane predecessors are implicit in FIFO order).  A
     ``barrier`` segment holds exactly one co-scheduled concurrent-step op
     and is never fused with its neighbours.
+
+    When the lane is bound to a :class:`~repro.core.targets.Target`,
+    ``fns`` still holds the reference payloads (the probe oracle) and
+    ``var_fns`` the target-dialect variants; the cold run verifies the
+    variant composition against the reference outputs (bitwise, else the
+    target's per-dtype tolerance) before it is ever served, and the
+    target's ``jit``/``device`` policy governs compilation and input
+    placement.  ``verified`` records the outcome (``"bitwise"`` /
+    ``"tolerance"`` / ``"rejected"`` / ``"error: ..."``).
     """
 
     index: int
     lane: str
     barrier: bool = False
+    target: Any = None
     items: list[tuple[int, int]] = dataclasses.field(default_factory=list)
     fns: list[Callable | None] = dataclasses.field(default_factory=list)
+    var_fns: list[Callable | None] | None = None
+    use_variant: bool = False
+    verified: str | None = None
+    jit_verified: str | None = None
     deps: list[int] = dataclasses.field(default_factory=list)
     # results of other segments this segment reads, in flat order
     flat_refs: list[tuple[int, int]] = dataclasses.field(default_factory=list)
@@ -142,8 +175,9 @@ class Segment:
     _jfn: Any = dataclasses.field(default=None, repr=False)
 
     # -- composition --------------------------------------------------------
-    def _composed(self, flat: tuple, ext_lists: tuple) -> tuple:
-        """Run every op of the segment; the one callable that gets jitted.
+    def _compose(self, fns: Sequence[Callable | None], flat: tuple,
+                 ext_lists: tuple) -> tuple:
+        """Run every op of the segment over a payload list.
 
         ``flat`` holds the cross-segment input values (in ``flat_refs``
         order), ``ext_lists`` the per-item external-input tuples.  Arg
@@ -152,7 +186,7 @@ class Segment:
         """
         outs: list[Any] = []
         for t, spec in enumerate(self.argspecs):
-            fn = self.fns[t]
+            fn = fns[t]
             if fn is None:
                 outs.append(None)
                 continue
@@ -160,6 +194,25 @@ class Segment:
                          for kind, j in spec)
             outs.append(fn(*(tuple(ext_lists[t]) + deps)))
         return tuple(outs)
+
+    def _composed(self, flat: tuple, ext_lists: tuple) -> tuple:
+        """The reference composition (``op.fn`` payloads)."""
+        return self._compose(self.fns, flat, ext_lists)
+
+    def _composed_var(self, flat: tuple, ext_lists: tuple) -> tuple:
+        """The target-dialect variant composition."""
+        return self._compose(self.var_fns, flat, ext_lists)
+
+    def _place(self, flat: tuple, ext_lists: tuple) -> tuple[tuple, tuple]:
+        """Pin segment inputs to the bound target's device (identity when
+        no target/device is bound)."""
+        tgt = self.target
+        if tgt is None or tgt.device is None or jax is None:
+            return flat, ext_lists
+        def put(v):
+            return jax.device_put(v, tgt.device)
+        return (tuple(put(v) for v in flat),
+                tuple(tuple(put(v) for v in e) for e in ext_lists))
 
     def _gather(self, results: Sequence[dict], ext: Sequence[dict]):
         flat = tuple(results[r][p] for r, p in self.flat_refs)
@@ -170,43 +223,126 @@ class Segment:
         flat, ext_lists = self._gather(results, ext)
         if self.mode == JIT:
             outs = self._jfn(flat, ext_lists)
+        elif self.mode == PYTHON and self.use_variant:
+            outs = self._composed_var(*self._place(flat, ext_lists))
         else:
             outs = self._composed(flat, ext_lists)
             if self.mode == COLD:
-                self._maybe_compile(flat, ext_lists, outs)
+                self._settle(flat, ext_lists, outs)
         for (r, i), o in zip(self.items, outs):
             results[r][i] = o
 
-    def _maybe_compile(self, flat, ext_lists, outs) -> None:
-        """Probe-and-verify compilation: jit the composition and keep it
-        only if its outputs match the eager probe bitwise — on the probe
-        inputs AND on an independently perturbed same-shape input set,
-        so a value coincidence on the probe (e.g. an FMA contraction
-        that happens to round identically there) cannot certify a jit
-        that diverges on later inputs.  Anything else (trace failures on
-        NumPy payloads, f64→f32 dtype drift under a jit round-trip,
-        non-array outputs) keeps the Python form."""
+    def _settle(self, flat, ext_lists, outs) -> None:
+        """Cold-run settling.  ``outs`` are the eager *reference* outputs
+        (they are what this cold run serves — a variant is never served
+        unverified).  Order of business: probe-verify the target variant
+        against them, then attempt jit compilation of whichever
+        composition survived, honouring the target's jit policy."""
         self.mode = PYTHON
-        if jax is None or any(fn is None for fn in self.fns):
+        tgt = self.target
+        if self.var_fns is not None:
+            probe = self._verify_variant(flat, ext_lists, outs)
+            if probe is not None:          # variant accepted: serve it
+                if tgt is None or tgt.jit:
+                    self._jit_verify(self._composed_var, *probe)
+                return
+        if tgt is not None and not tgt.jit:
+            return                          # eager-by-policy target
+        self._maybe_compile(flat, ext_lists, outs)
+
+    def _verify_variant(self, flat, ext_lists, ref_outs):
+        """Probe the variant composition against the reference outputs.
+        Accepts on bitwise equality, else on the target's per-dtype
+        tolerance; rejection (or any execution error) drops ``var_fns``
+        so the segment permanently serves the reference payloads.
+        Returns ``(placed_flat, placed_ext, variant_outs)`` when the
+        variant is accepted, else ``None``."""
+        try:
+            pflat, pext = self._place(flat, ext_lists)
+            got = self._composed_var(pflat, pext)
+        except Exception as e:
+            self.verified = f"error: {type(e).__name__}"
+            self.var_fns = None
+            return None
+        if len(got) == len(ref_outs) and all(
+                _bitwise_equal(a, b) for a, b in zip(ref_outs, got)):
+            self.verified = "bitwise"
+        elif len(got) == len(ref_outs) and all(
+                _within_tolerance(a, b, self.target)
+                for a, b in zip(ref_outs, got)):
+            self.verified = "tolerance"
+        else:
+            self.verified = "rejected"
+            self.var_fns = None
+            return None
+        self.use_variant = True
+        return pflat, pext, got
+
+    def _maybe_compile(self, flat, ext_lists, outs) -> None:
+        """Probe-and-verify compilation of the *reference* composition:
+        jit it and keep the jitted form only if its outputs match the
+        eager probe bitwise — on the probe inputs AND on an independently
+        perturbed same-shape input set, so a value coincidence on the
+        probe (e.g. an FMA contraction that happens to round identically
+        there) cannot certify a jit that diverges on later inputs.
+        Anything else (trace failures on NumPy payloads, f64→f32 dtype
+        drift under a jit round-trip, non-array outputs) keeps the
+        Python form."""
+        self.mode = PYTHON
+        if any(fn is None for fn in self.fns):
+            return
+        self._jit_verify(self._composed, flat, ext_lists, outs)
+
+    def _jit_verify(self, composed, flat, ext_lists, outs) -> None:
+        """Shared jit probe for the reference and variant compositions:
+        bitwise on the probe inputs and on a perturbed second leg, exactly
+        the PR 5 rule.  A target that *declares* a tolerance
+        (``Target.atol``/``rtol``) additionally accepts a jit whose
+        outputs stay within that tolerance on both legs — XLA fusion
+        reorders float accumulation, so an eager-vs-jit probe of e.g. a
+        softmax composition is rarely bitwise; a declared-tolerance
+        target says so in data rather than silently eating the ~100x
+        eager fallback.  Targetless segments (the PR 5 analytic path)
+        remain strictly bitwise.  On success ``_jfn`` wraps the jitted
+        callable with the target's device placement and ``mode`` flips
+        to JIT; ``jit_verified`` records which rule admitted it."""
+        if jax is None:
             return
         if not all(isinstance(o, jax.Array) for o in outs):
             return
+        tgt = self.target
+        declared = tgt is not None and (tgt.atol or tgt.rtol)
+
+        def admit(ref_o, got_o):
+            if len(got_o) != len(ref_o):
+                return None
+            if all(_bitwise_equal(a, b) for a, b in zip(ref_o, got_o)):
+                return "bitwise"
+            if declared and all(_within_tolerance(a, b, tgt)
+                                for a, b in zip(ref_o, got_o)):
+                return "tolerance"
+            return None
+
         try:
-            jfn = jax.jit(self._composed)
-            got = tuple(jfn(flat, ext_lists))
-            ok = (len(got) == len(outs)
-                  and all(_bitwise_equal(a, b) for a, b in zip(outs, got)))
-            if ok:
+            jfn = jax.jit(composed)
+            how = admit(outs, tuple(jfn(flat, ext_lists)))
+            if how is not None:
                 flat2 = tuple(_perturb(v) for v in flat)
                 ext2 = tuple(tuple(_perturb(v) for v in e)
                              for e in ext_lists)
-                ref2 = self._composed(flat2, ext2)
-                got2 = tuple(jfn(flat2, ext2))
-                ok = all(_bitwise_equal(a, b) for a, b in zip(ref2, got2))
+                ref2 = tuple(composed(flat2, ext2))
+                how2 = admit(ref2, tuple(jfn(flat2, ext2)))
+                how = (None if how2 is None
+                       else ("bitwise" if how == how2 == "bitwise"
+                             else "tolerance"))
         except Exception:
             return
-        if ok:
-            self._jfn = jfn
+        if how is not None:
+            if self.target is not None and self.target.device is not None:
+                self._jfn = lambda f, e: tuple(jfn(*self._place(f, e)))
+            else:
+                self._jfn = jfn
+            self.jit_verified = how
             self.mode = JIT
 
 
@@ -288,16 +424,31 @@ class LaneProgram:
         # dwarf the dispatch overhead this path removes).
         self.serial_order = self._serial_order()
         self._pool: LanePool | None = None
+        # identity snapshot of every covered op's fn + variant table,
+        # taken at compile time (see payloads_current)
+        self._payload_tokens: dict[tuple[int, int], tuple] = {
+            (r, i): self.graphs[r].ops[i].payload_token()
+            for seg in segments for (r, i) in seg.items}
 
     def payloads_current(self) -> bool:
-        """True while the fns baked into the segments are still the ops'
-        payloads.  A caller that rebinds ``graph.ops[i].fn`` after
-        compilation invalidates the program — the orchestrator checks
-        this on every program-cache hit and recompiles on mismatch, so
-        a stale fused callable is never served."""
-        return all(fn is self.graphs[r].ops[i].fn
-                   for seg in self.segments
-                   for (r, i), fn in zip(seg.items, seg.fns))
+        """True while every op's payload *and variant table* are still
+        the ones baked in at compile time.  A caller that rebinds
+        ``graph.ops[i].fn`` — or any entry of ``graph.ops[i].variants``
+        — after compilation invalidates the program: the orchestrator
+        checks this on every program-cache hit and recompiles on
+        mismatch, so a stale fused callable (or a stale variant
+        selection) is never served."""
+        for (r, i), (fn0, var0) in self._payload_tokens.items():
+            op = self.graphs[r].ops[i]
+            if op.fn is not fn0:
+                return False
+            variants = op.variants
+            if len(variants) != len(var0):
+                return False
+            for key, f in var0:
+                if variants.get(key) is not f:
+                    return False
+        return True
 
     def close(self) -> None:
         """Release the persistent lane-worker pool (idempotent; a later
@@ -344,6 +495,13 @@ class LaneProgram:
             "n_python": modes.count(PYTHON),
             "n_cold": modes.count(COLD),
             "n_barrier": sum(1 for s in self.segments if s.barrier),
+            "n_variant": sum(1 for s in self.segments if s.use_variant),
+            "variant_verified": {s.index: s.verified for s in self.segments
+                                 if s.verified is not None},
+            "jit_verified": {s.index: s.jit_verified for s in self.segments
+                             if s.jit_verified is not None},
+            "lane_targets": {s.lane: s.target.name for s in self.segments
+                             if s.target is not None},
             "max_segment_ops": max((len(s.items) for s in self.segments),
                                    default=0),
             "serial": self.serial_order is not None,
@@ -481,7 +639,9 @@ class LaneProgram:
 def compile_lane_program(graphs: Sequence[OpGraph],
                          lane_items: Mapping[str, Sequence[tuple[int, int]]],
                          barriers: frozenset[tuple[int, int]] | set = frozenset(),
-                         single: bool = False) -> LaneProgram:
+                         single: bool = False,
+                         targets: Mapping[str, Any] | None = None
+                         ) -> LaneProgram:
     """Partition per-lane op queues into segments and build the program.
 
     ``lane_items`` maps each PU lane to its FIFO queue of ``(request,
@@ -498,12 +658,19 @@ def compile_lane_program(graphs: Sequence[OpGraph],
 
     Same-lane predecessors never cut (earlier queue position ⇒ an earlier
     segment on the same FIFO lane ⇒ already complete).
+
+    ``targets`` optionally binds lane names to
+    :class:`~repro.core.targets.Target`\\ s: a bound segment keeps the
+    reference payloads as its probe oracle and additionally resolves the
+    target dialect's variant payloads at compile time (served only after
+    the cold-run verification — see :class:`Segment`).
     """
     lane_of: dict[tuple[int, int], str] = {}
     for pu, items in lane_items.items():
         for it in items:
             lane_of[it] = pu
 
+    tmap = dict(targets or {})
     segments: list[Segment] = []
     lane_segments: dict[str, list[Segment]] = {pu: [] for pu in lane_items}
     seg_of: dict[tuple[int, int], Segment] = {}
@@ -514,12 +681,26 @@ def compile_lane_program(graphs: Sequence[OpGraph],
             cross = any(lane_of[(r, p)] != pu for p in graphs[r].pred[i])
             if (cur is None or barrier or cur.barrier
                     or cur.items[-1][0] != r or cross):
-                cur = Segment(index=len(segments), lane=pu, barrier=barrier)
+                cur = Segment(index=len(segments), lane=pu, barrier=barrier,
+                              target=tmap.get(pu))
                 segments.append(cur)
                 lane_segments[pu].append(cur)
             cur.items.append((r, i))
             cur.fns.append(graphs[r].ops[i].fn)
             seg_of[(r, i)] = cur
+
+    # compile-time variant selection: a segment on a non-"ref"-dialect
+    # target gets the resolved variant payload list iff any op actually
+    # carries a variant for that dialect (otherwise the reference path
+    # is the variant path and nothing needs verifying)
+    for seg in segments:
+        tgt = seg.target
+        if tgt is None or tgt.dialect in (None, "ref"):
+            continue
+        vf = [graphs[r].ops[i].payload_for(tgt.dialect)
+              for (r, i) in seg.items]
+        if any(v is not f for v, f in zip(vf, seg.fns)):
+            seg.var_fns = vf
 
     for seg in segments:
         internal = {it: t for t, it in enumerate(seg.items)}

@@ -241,3 +241,92 @@ def model_op_graph(cfg, *, kind: str = "train", batch: int = 8,
                 in_shapes=((head_tokens, 1),), out_shape=(head_tokens, 1),
                 dtype_bytes=4))
     return OpGraph(ops, edges=edges)
+
+
+def kernel_chain(*, blocks: int = 1, batch: int = 1, seq: int = 64,
+                 heads: int = 2, head_dim: int = 16, state: int = 8,
+                 experts: int = 4, moe_ff: int = 16, top_k: int = 2,
+                 chunk: int = 32, block_q: int = 32, block_k: int = 32,
+                 block_m: int = 16, block_f: int = 16, seed: int = 0,
+                 interpret: bool | None = None):
+    """Kernel-backed zoo chain: a runnable OpGraph whose ops carry real
+    payload variant tables (``op.fn`` = jnp oracle, ``op.variants`` =
+    {"pallas": ..., "numpy": ...}) so lanes bound to different targets
+    execute genuinely different code for the same op.
+
+    Each block is attention -> act -> SSD scan -> sort -> MoE -> act on a
+    ``(batch, seq, heads, head_dim)`` float32 activation: the three Pallas
+    hot-spots interleaved with the host-affine glue the paper maps to CPU
+    (Fig. 2 classes).  Returns ``(graph, external_inputs)`` ready for
+    ``ScheduleExecutor`` / per-target ``MeasuredProfiler``
+    (``meta["example_inputs"]`` is set on every op).
+
+    Lazy-imports jax so plain analytic use of this module stays
+    numpy-only.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..kernels import payloads as kp
+
+    B, T, H, D = batch, seq, heads, head_dim
+    d_model = H * D
+    tokens = B * T
+    act_shape = (B, T, H, D)
+    cap = -((-tokens * top_k) // experts)         # ceil
+    capacity = max(block_m, -(-cap // 8) * 8)     # >= block_m, mult of 8
+
+    keys = iter(jax.random.split(jax.random.PRNGKey(seed), 8 * blocks + 1))
+
+    def rnd(shape, scale=1.0):
+        return (scale * jax.random.normal(next(keys), shape)
+                ).astype(jnp.float32)
+
+    x0 = rnd(act_shape)
+    ops: list[FusedOp] = []
+    example = {}
+
+    def add(name, kind, table, wrap=None):
+        op = FusedOp(name=name, kind=kind, in_shapes=(act_shape,),
+                     out_shape=act_shape, dtype_bytes=4)
+        if wrap is not None:
+            table = {k: wrap(fn) for k, fn in table.items()}
+        kp.bind_variants(op, table, example_inputs=(x0,))
+        ops.append(op)
+        return op
+
+    for j in range(blocks):
+        kv_k = rnd((B, T, H, D), 0.5)
+        kv_v = rnd((B, T, H, D), 0.5)
+        add(f"b{j}.attn", "attention",
+            kp.attention_payloads(kv_k, kv_v, causal=True,
+                                  block_q=min(block_q, T),
+                                  block_k=min(block_k, T),
+                                  interpret=interpret))
+        add(f"b{j}.gate", "act", kp.eltwise_payloads(1.0 + 0.25 * j))
+        ssd_c = rnd((B, T, H, state), 0.5)
+        ssd_b = rnd((B, T, H, state), 0.5)
+        log_a = -0.05 * jnp.abs(rnd((B, T, H)))
+        add(f"b{j}.ssd", "scan",
+            kp.ssd_payloads(ssd_c, ssd_b, log_a, chunk=min(chunk, T),
+                            interpret=interpret))
+        add(f"b{j}.sort", "gather", kp.sort_payloads())
+        w_gate = rnd((d_model, experts), 0.5)
+        w_up = rnd((experts, d_model, 2 * moe_ff), 0.5)
+        w_down = rnd((experts, moe_ff, d_model), 0.5)
+
+        def tokenized(fn):
+            def run(x):
+                y = fn(x.reshape(tokens, d_model))
+                return y.reshape(act_shape)
+            return run
+
+        add(f"b{j}.moe", "gather",
+            kp.moe_payloads(w_gate, w_up, w_down, capacity=capacity,
+                            top_k=top_k, block_m=block_m, block_f=block_f,
+                            interpret=interpret),
+            wrap=tokenized)
+        add(f"b{j}.out", "act", kp.eltwise_payloads(0.5))
+
+    example[0] = (x0,)
+    return OpGraph(ops), example

@@ -57,7 +57,17 @@ class FusedOp:
     bytes_moved: float = 0.0  # bytes read + written (roofline memory term)
     # Optional execution payload: fn(*inputs) -> output.  Used by the
     # executor to really run the schedule; None for analytic-only graphs.
+    # ``fn`` is always the *reference* variant: the per-op interpreter
+    # executes it exclusively (the single-variant bitwise oracle).
     fn: Callable[..., Any] | None = None
+    # Per-target payload variants: ``{dialect: callable}`` with the same
+    # call signature as ``fn``.  The compiled path serves
+    # ``payload_for(target.dialect)`` on a lane bound to a target, after
+    # probe-verifying it against the reference composition.  Rebinding
+    # any entry after compilation invalidates cached lane programs (the
+    # same staleness rule as rebinding ``fn``).
+    variants: dict[str, Callable[..., Any]] = dataclasses.field(
+        default_factory=dict)
     # Free-form metadata (e.g. which paper model / layer this came from).
     meta: dict = dataclasses.field(default_factory=dict)
 
@@ -70,6 +80,21 @@ class FusedOp:
             self.bytes_moved = float((n_in + n_out) * self.dtype_bytes)
         if not self.flops:
             self.flops = default_flops(self.kind, self.in_shapes, self.out_shape)
+
+    def payload_for(self, dialect: str | None) -> Callable[..., Any] | None:
+        """The payload serving ``dialect``: the variant-table entry when
+        one is bound, else the reference ``fn`` (``"ref"``/``None`` always
+        resolve to ``fn`` — the oracle is not overridable)."""
+        if dialect is None or dialect == "ref":
+            return self.fn
+        return self.variants.get(dialect, self.fn)
+
+    def payload_token(self) -> tuple:
+        """Identity snapshot of ``fn`` + the variant table, compared with
+        ``is`` per entry by ``LaneProgram.payloads_current`` so rebinding
+        *any* payload after compilation is detected."""
+        return (self.fn,
+                tuple((k, self.variants[k]) for k in sorted(self.variants)))
 
     @property
     def out_bytes(self) -> float:

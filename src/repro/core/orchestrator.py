@@ -105,6 +105,7 @@ from .executor import ScheduleExecutor
 from .faults import ExecutionPolicy, FaultPlan
 from .laneprogram import LaneProgram
 from .op import FusedOp, OpGraph, chain_graph
+from .targets import pu_specs_for_targets, resolve_targets
 from .schedule import (ConcurrentSchedule, ConcurrentStep, ParallelSchedule,
                        SeqSchedule, schedule_from_dict, schedule_to_dict)
 from .search import (ConcurrentCaches, IncrementalConcurrentSolver,
@@ -226,12 +227,25 @@ class Orchestrator:
     (``build_table(graph)``), a profiler (``profile(graph)``), or a
     prebuilt ``CostTable`` applied to every registered graph (op indices
     must then match that table).
+
+    ``targets`` binds PU lane names to registered execution
+    :class:`~repro.core.targets.Target`\\ s (a ``{lane: Target}``
+    mapping, a :class:`~repro.core.targets.TargetRegistry`, or an
+    iterable of targets — one lane per target name).  When bound, the
+    lanes are real backends instead of anonymous host threads: ``pus``
+    defaults to the targets' synthesized specs
+    (:func:`~repro.core.targets.pu_specs_for_targets`), the compiled
+    execution path serves per-target payload variants
+    (probe-verified — see :mod:`repro.core.laneprogram`), and a
+    per-target :class:`MeasuredProfiler` can fill the cost table from
+    real execution on each backend.  The interpreter path
+    (``execute(compile=False)``) always runs the reference payloads.
     """
 
-    def __init__(self, cost, pus: Mapping[str, PUSpec] = EDGE_PUS,
+    def __init__(self, cost, pus: Mapping[str, PUSpec] | None = None,
                  contention: ContentionModel | None = None,
                  max_cached_plans: int = 256, max_cache_pools: int = 32,
-                 max_cached_programs: int = 64):
+                 max_cached_programs: int = 64, targets=None):
         if not (isinstance(cost, CostTable) or hasattr(cost, "build_table")
                 or hasattr(cost, "profile")):
             raise TypeError(
@@ -239,9 +253,20 @@ class Orchestrator:
                 "build_table(graph), or a profiler with profile(graph); "
                 f"got {type(cost).__name__}")
         self.cost = cost
+        self.targets = resolve_targets(targets)
+        if pus is None:
+            pus = (pu_specs_for_targets(self.targets)
+                   if self.targets else EDGE_PUS)
         self.pus = dict(pus)
+        if self.targets:
+            unknown = sorted(set(self.targets) - set(self.pus))
+            if unknown:
+                raise ValueError(
+                    f"target binding names lane(s) {unknown} absent from "
+                    f"the PU set {sorted(self.pus)}")
         self.contention = contention or ContentionModel()
-        self.executor = ScheduleExecutor(list(self.pus))
+        self.executor = ScheduleExecutor(list(self.pus),
+                                         targets=self.targets)
         self.condition = RuntimeCondition()
         self.stats = {"hits": 0, "misses": 0, "invalidated": 0,
                       "program_hits": 0, "program_misses": 0,

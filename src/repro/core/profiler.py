@@ -18,6 +18,7 @@ callable via its jaxpr, applying a backend-compiler-like fusion rule
 """
 from __future__ import annotations
 
+import dataclasses
 import logging
 import time
 from typing import Any, Callable, Mapping, Sequence
@@ -145,18 +146,64 @@ def trace_fused_ops(fn: Callable, *example_args, name: str = "model") -> OpGraph
 # ---------------------------------------------------------------------------
 
 
-def measure_callable(fn: Callable, args: Sequence[Any], *, warmup: int = 3,
-                     iters: int = 10) -> float:
-    """Median wall-clock seconds of ``fn(*args)`` (blocked until ready)."""
-    jfn = jax.jit(fn)
-    for _ in range(warmup):
-        jax.block_until_ready(jfn(*args))
+@dataclasses.dataclass(frozen=True)
+class Measurement:
+    """One payload's timing distribution: ``median`` (the robust number
+    the cost table consumes), ``best`` (the min — what a noiseless
+    machine would report), and the raw ``times`` so jitter is never
+    hidden by a single scalar."""
+
+    median: float
+    best: float
+    times: tuple[float, ...]
+
+    @property
+    def spread(self) -> float:
+        """max/best - 1: the visible jitter of this measurement."""
+        return (max(self.times) / self.best - 1.0) if self.best > 0 else 0.0
+
+    def __float__(self) -> float:
+        return self.median
+
+
+def measure_callable_stats(fn: Callable, args: Sequence[Any], *,
+                           warmup: int = 3, iters: int = 10,
+                           jit: bool = True,
+                           device: Any = None) -> Measurement:
+    """Wall-clock :class:`Measurement` of ``fn(*args)``.
+
+    JAX dispatch is **asynchronous**: a call returns future-backed arrays
+    long before the computation finishes, so every timed iteration (and
+    every warmup) is fenced with ``jax.block_until_ready`` on the actual
+    output pytree — without the fence a jitted payload times as ~0 (the
+    dispatch cost alone).  ``jit=False`` measures the payload eagerly
+    (still fenced — eager JAX is async too), which is what non-jitting
+    targets (NumPy/eager backends) execute; ``device`` pins the inputs
+    with ``jax.device_put`` first so transfers are not billed to the
+    kernel.
+    """
+    if device is not None:
+        args = tuple(jax.device_put(a, device) for a in args)
+    run = jax.jit(fn) if jit else fn
+    for _ in range(max(warmup, 1)):   # at least once: trigger compilation
+        jax.block_until_ready(run(*args))
     ts = []
-    for _ in range(iters):
+    for _ in range(max(iters, 1)):
         t0 = time.perf_counter()
-        jax.block_until_ready(jfn(*args))
+        out = run(*args)
+        jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    return Measurement(median=float(np.median(ts)), best=float(min(ts)),
+                       times=tuple(ts))
+
+
+def measure_callable(fn: Callable, args: Sequence[Any], *, warmup: int = 3,
+                     iters: int = 10, jit: bool = True,
+                     device: Any = None) -> float:
+    """Median wall-clock seconds of ``fn(*args)`` (blocked until ready).
+    Scalar form of :func:`measure_callable_stats`."""
+    return measure_callable_stats(fn, args, warmup=warmup, iters=iters,
+                                  jit=jit, device=device).median
 
 
 class AnalyticProfiler:
@@ -170,29 +217,53 @@ class AnalyticProfiler:
 
 
 class MeasuredProfiler:
-    """Anchor the CPU column with real wall-clock measurements; derive the
-    accelerator columns via the analytic per-PU ratios.
+    """Fill the cost table from real wall-clock measurements.
+
+    Two modes share the constructor:
+
+    * **CPU-anchored (default, ``targets=None``).**  The paper's
+      offline-profiling stand-in when the PUs don't physically exist:
+      measure each payload once on the host, anchor the CPU column, and
+      derive the accelerator columns via the analytic per-PU ratios.
+    * **Per-target (``targets={lane: Target}``).**  The real loop: each
+      op's resolved payload variant (``op.payload_for(target.dialect)``)
+      is measured *on every bound backend* under that target's jit
+      policy and device placement, and each measurement lands directly
+      in that lane's column (``kernel`` = median; ``dispatch``/
+      ``h2d``/``d2h``/``power`` from the target's declared pricing).
+      Full distributions go to ``table.meta["measurements"]``
+      (``{(op, lane): {"median", "best", "spread"}}``).  Payload-less
+      ops fall back to the analytic CPU estimate on every lane (noted
+      in ``table.meta["analytic_fallback"]``); an op a target declares
+      in ``meta["unsupported_on"]`` gets no cell on that lane.
 
     For ops that carry an ``fn`` payload and example inputs in
     ``op.meta['example_inputs']`` we measure; otherwise we fall back to the
     analytic CPU estimate.  A measurement that *fails* (payload raises,
     un-jittable closure, ...) is never silently swallowed: each failure is
     logged, collected into the returned table's
-    ``meta["profile_failures"]`` (``{op index: "ExcType: message"}``), and
-    under ``strict=True`` re-raised with the op named instead of falling
-    back.
+    ``meta["profile_failures"]`` (``{op index: "ExcType: message"}`` in
+    CPU-anchored mode, ``{(op index, lane): ...}`` per-target — where a
+    failed cell is *omitted*, i.e. the op is unsupported on that
+    backend), and under ``strict=True`` re-raised with the op named
+    instead of falling back.
     """
 
     def __init__(self, model: EdgeSoCCostModel | None = None,
-                 warmup: int = 2, iters: int = 5, strict: bool = False):
+                 warmup: int = 2, iters: int = 5, strict: bool = False,
+                 targets=None):
+        from .targets import resolve_targets
         self.model = model or EdgeSoCCostModel()
         self.warmup = warmup
         self.iters = iters
         self.strict = strict
+        self.targets = resolve_targets(targets)
 
     def profile(self, graph: OpGraph,
                 strict: bool | None = None) -> CostTable:
         strict = self.strict if strict is None else strict
+        if self.targets is not None:
+            return self._profile_targets(graph, strict)
         failures: dict[int, str] = {}
         table = CostTable(list(self.model.pus))
         table.meta["profile_failures"] = failures
@@ -226,4 +297,65 @@ class MeasuredProfiler:
                 table.set(i, name, CostEntry(
                     kernel=e.kernel * scale, dispatch=e.dispatch,
                     h2d=e.h2d, d2h=e.d2h, power=e.power))
+        return table
+
+    # -- per-target mode ----------------------------------------------------
+    def _analytic_anchor(self, op: FusedOp) -> CostEntry | None:
+        """Analytic estimate for payload-less ops: the model's CPU spec
+        (any host spec if "CPU" is absent)."""
+        pu = self.model.pus.get("CPU")
+        if pu is None:
+            pu = next(iter(self.model.pus.values()))
+        return self.model.entry(op, pu)
+
+    def _profile_targets(self, graph: OpGraph, strict: bool) -> CostTable:
+        """Measure every op on every bound backend; see the class docs."""
+        targets = self.targets
+        failures: dict[tuple[int, str], str] = {}
+        stats: dict[tuple[int, str], dict] = {}
+        fallback: list[tuple[int, str]] = []
+        table = CostTable(list(targets))
+        table.meta["profile_failures"] = failures
+        table.meta["measurements"] = stats
+        table.meta["analytic_fallback"] = fallback
+        table.meta["targets"] = {lane: t.name for lane, t in targets.items()}
+        for i, op in enumerate(graph.ops):
+            unsupported = op.meta.get("unsupported_on", ())
+            for lane, tgt in targets.items():
+                if lane in unsupported or tgt.name in unsupported:
+                    continue
+                fn = op.payload_for(tgt.dialect)
+                if fn is None or "example_inputs" not in op.meta:
+                    est = self._analytic_anchor(op)
+                    if est is None:
+                        continue
+                    fallback.append((i, lane))
+                    table.set(i, lane, CostEntry(
+                        kernel=est.kernel, dispatch=tgt.dispatch_s,
+                        h2d=tgt.handoff_s, d2h=tgt.handoff_s,
+                        power=tgt.power_compute))
+                    continue
+                try:
+                    m = measure_callable_stats(
+                        fn, op.meta["example_inputs"],
+                        warmup=self.warmup, iters=self.iters,
+                        jit=tgt.jit, device=tgt.device)
+                except Exception as e:
+                    if strict:
+                        raise RuntimeError(
+                            f"MeasuredProfiler: measuring op {i} "
+                            f"({op.name!r}, kind {op.kind!r}) on target "
+                            f"{tgt.name!r} (lane {lane!r}) failed") from e
+                    failures[(i, lane)] = f"{type(e).__name__}: {e}"
+                    _log.warning(
+                        "MeasuredProfiler: op %d (%s) failed on target %s "
+                        "(%s); cell omitted — op unsupported on this lane",
+                        i, op.name, tgt.name, failures[(i, lane)])
+                    continue
+                stats[(i, lane)] = {"median": m.median, "best": m.best,
+                                    "spread": m.spread}
+                table.set(i, lane, CostEntry(
+                    kernel=m.median, dispatch=tgt.dispatch_s,
+                    h2d=tgt.handoff_s, d2h=tgt.handoff_s,
+                    power=tgt.power_compute))
         return table

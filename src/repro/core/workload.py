@@ -40,6 +40,18 @@ import numpy as np
 from .costmodel import CostTable, DenseCostTable, PUSpec
 
 
+def _as_pu_specs(pus: Mapping[str, PUSpec]) -> dict[str, PUSpec]:
+    """Normalize a PU-axis mapping: values may be ``PUSpec``s or execution
+    :class:`~repro.core.targets.Target`\\ s (anything with ``pu_spec()``),
+    so target-backed lanes plug into every solver unchanged."""
+    out: dict[str, PUSpec] = {}
+    for name, spec in dict(pus).items():
+        if not isinstance(spec, PUSpec) and hasattr(spec, "pu_spec"):
+            spec = spec.pu_spec()
+        out[name] = spec
+    return out
+
+
 class Workload:
     """One request: an op chain bound to its dense cost views."""
 
@@ -48,7 +60,7 @@ class Workload:
                  table: CostTable | None = None):
         self.chain = list(chain)
         self.dense = dense
-        self.pus = pus
+        self.pus = pus = _as_pu_specs(pus)
         self.ops = ops                  # optional FusedOp list (names in errors)
         # The scalar source table is kept ONLY as the oracle handle for the
         # ``*_reference`` fallbacks (custom contention models); no Workload
@@ -78,6 +90,7 @@ class Workload:
         ``PUSpec`` mapping doesn't know.
         """
         chain = list(chain)
+        pus = _as_pu_specs(pus)
         if not chain:
             raise ValueError(
                 "Workload.build: empty op chain — nothing to schedule")

@@ -12,6 +12,9 @@ Each kernel is ``pl.pallas_call`` + explicit BlockSpec VMEM tiling with a
 jit wrapper in ``ops.py`` and a pure-jnp oracle in ``ref.py``; interpret-
 mode sweep tests in ``tests/test_kernels.py`` assert kernel == oracle.
 """
-from . import ops, ref  # noqa: F401
+from . import ops, payloads, ref  # noqa: F401
 from .ops import (expert_glu, flash_attention, moe_dispatch_combine,  # noqa
                   ssd_scan)
+from .payloads import (attention_payloads, bind_variants,  # noqa: F401
+                       eltwise_payloads, moe_payloads, sort_payloads,
+                       ssd_payloads)

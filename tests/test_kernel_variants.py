@@ -1,0 +1,118 @@
+"""Payload-level ref-vs-Pallas equivalence: the variant tables served to
+heterogeneous targets, parametrized over dtype with tolerance buckets
+matching ``targets.VARIANT_TOL`` (blockwise accumulation reorders sums,
+so bf16 needs a much wider bucket than f32)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.payloads import (attention_payloads, bind_variants,
+                                    eltwise_payloads, moe_payloads,
+                                    sort_payloads, ssd_payloads)
+
+jax.config.update("jax_enable_x64", False)
+
+# per-dtype tolerance buckets (match tests/test_kernels.py)
+TOL = {jnp.float32: (3e-5, 3e-5), jnp.bfloat16: (3e-2, 3e-2)}
+MOE_TOL = {jnp.float32: (2e-4, 2e-4), jnp.bfloat16: (5e-2, 5e-2)}
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _close(got, want, tol):
+    atol, rtol = tol
+    np.testing.assert_allclose(
+        np.asarray(got, np.float64), np.asarray(want, np.float64),
+        atol=atol, rtol=rtol)
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+@pytest.mark.parametrize("causal", [True, False], ids=["causal", "full"])
+def test_attention_payload_pallas_matches_ref(dtype, causal):
+    B, Tq, Tk, Hq, Hk, D = 1, 96, 96, 4, 2, 32     # GQA: 2 query groups
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(0), 3)
+    k, v = rand(kk, (B, Tk, Hk, D), dtype), rand(kv, (B, Tk, Hk, D), dtype)
+    q = rand(kq, (B, Tq, Hq, D), dtype)
+    table = attention_payloads(k, v, causal=causal, block_q=32, block_k=32,
+                               interpret=True)
+    _close(table["pallas"](q), table["ref"](q), TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_attention_payload_decode_q_offset(dtype):
+    """Single-query decode against a longer KV cache: the q_offset edge
+    case (query row 299 of a 300-token causal context)."""
+    B, Tk, Hq, Hk, D = 1, 300, 4, 2, 32
+    kq, kk, kv = jax.random.split(jax.random.PRNGKey(1), 3)
+    k, v = rand(kk, (B, Tk, Hk, D), dtype), rand(kv, (B, Tk, Hk, D), dtype)
+    q = rand(kq, (B, 1, Hq, D), dtype)
+    table = attention_payloads(k, v, causal=True, q_offset=Tk - 1,
+                               block_q=32, block_k=32, interpret=True)
+    _close(table["pallas"](q), table["ref"](q), TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+@pytest.mark.parametrize("with_s0", [False, True], ids=["zero-s0", "s0"])
+def test_ssd_payload_pallas_matches_ref(dtype, with_s0):
+    B, T, H, N, P = 1, 64, 2, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    c, b = rand(ks[0], (B, T, H, N), dtype), rand(ks[1], (B, T, H, N), dtype)
+    x = rand(ks[2], (B, T, H, P), dtype)
+    log_a = (-0.05 * jnp.abs(jax.random.normal(ks[3], (B, T, H)))
+             ).astype(dtype)
+    s0 = rand(ks[4], (B, H, N, P), dtype) if with_s0 else None
+    table = ssd_payloads(c, b, log_a, initial_state=s0, chunk=32,
+                         interpret=True)
+    _close(table["pallas"](x), table["ref"](x), TOL[dtype])
+
+
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+def test_moe_payload_pallas_matches_ref(dtype):
+    T, d, E, F, top_k = 32, 16, 4, 16, 2
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = rand(ks[0], (T, d), dtype)
+    w_gate = rand(ks[1], (d, E), dtype)
+    w_up = rand(ks[2], (E, d, 2 * F), dtype) * 0.1
+    w_down = rand(ks[3], (E, F, d), dtype) * 0.1
+    capacity = 32        # ample: routing identical across dialects
+    table = moe_payloads(w_gate, w_up, w_down, capacity=capacity,
+                         top_k=top_k, block_m=16, block_f=16, interpret=True)
+    _close(table["pallas"](x), table["ref"](x), MOE_TOL[dtype])
+
+
+def test_eltwise_payload_numpy_matches_ref():
+    x = rand(jax.random.PRNGKey(4), (8, 8), jnp.float32)
+    table = eltwise_payloads(scale=1.25)
+    got = table["numpy"](x)
+    assert isinstance(got, np.ndarray)
+    _close(got, table["ref"](x), TOL[jnp.float32])
+
+
+def test_sort_payload_numpy_matches_ref_bitwise():
+    """Sorting is exact: the host variant must agree bitwise, and both
+    dialects must preserve the activation's shape."""
+    x = rand(jax.random.PRNGKey(5), (4, 16), jnp.float32)
+    table = sort_payloads()
+    r, n = table["ref"](x), table["numpy"](x)
+    assert r.shape == n.shape == x.shape
+    assert np.asarray(r).tobytes() == np.asarray(n).tobytes()
+
+
+def test_bind_variants_installs_table():
+    from repro.core.op import FusedOp
+    op = FusedOp("gate", "act", ((4, 4),), (4, 4), fn=None)
+    x = rand(jax.random.PRNGKey(6), (4, 4), jnp.float32)
+    table = eltwise_payloads(scale=2.0)
+    bind_variants(op, table, example_inputs=(x,))
+    assert op.fn is table["ref"]
+    assert op.variants == {"numpy": table["numpy"]}
+    assert op.meta["example_inputs"] == (x,)
+    assert op.payload_for("numpy") is table["numpy"]
+    assert op.payload_for("ref") is table["ref"]
+    assert op.payload_for("pallas") is table["ref"]     # unknown -> ref
+    with pytest.raises(ValueError, match="ref"):
+        bind_variants(op, {"numpy": table["numpy"]})
