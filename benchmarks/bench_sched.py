@@ -29,6 +29,7 @@ from __future__ import annotations
 
 import json
 import math
+import os
 import time
 
 from repro.core import (ContentionModel, DEFAULT_MAX_STATES, EDGE_PUS,
@@ -246,8 +247,20 @@ def run(verbose: bool = True, smoke: bool = False,
 
     if out_path:
         out["meta"] = env_meta()
+        # preserve sections other modules merge into this file (e.g.
+        # bench_dag's "dag") instead of clobbering them
+        merged = dict(out)
+        if os.path.exists(out_path):
+            try:
+                with open(out_path) as f:
+                    prev = json.load(f)
+                for k, v in prev.items():
+                    if k not in out:
+                        merged[k] = v
+            except (OSError, json.JSONDecodeError):
+                pass
         with open(out_path, "w") as f:
-            json.dump(out, f, indent=2)
+            json.dump(merged, f, indent=2)
         if verbose:
             print(f"wrote {out_path}")
     return out

@@ -7,7 +7,7 @@ from __future__ import annotations
 import sys
 import time
 
-from . import (bench_sched, fig2_op_affinity, fig3_matmul_sweep,
+from . import (bench_dag, bench_sched, fig2_op_affinity, fig3_matmul_sweep,
                fig4_parallel_pairs, fig6_energy, fig8_concurrent,
                table2_sequential, table3_parallel, tpu_autoshard)
 
@@ -31,6 +31,7 @@ MODULES = [
      fig8_concurrent),
     ("Fig. 8 extension: 3-model concurrent sweep", _fig8_multi),
     ("Scheduler micro-benchmark (BENCH_sched.json)", bench_sched),
+    ("DAG-route benchmark (VLA intra-model parallelism)", bench_dag),
     ("TPU autoshard (beyond-paper)", tpu_autoshard),
 ]
 

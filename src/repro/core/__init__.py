@@ -31,18 +31,20 @@ from .orchestrator import Orchestrator, Plan
 from .profiler import (AnalyticProfiler, MeasuredProfiler, Measurement,
                        measure_callable, measure_callable_stats,
                        trace_fused_ops)
-from .schedule import (ConcurrentSchedule, ConcurrentStep, ParallelSchedule,
+from .schedule import (ConcurrentSchedule, ConcurrentStep, DagSchedule,
+                       DagStep, ParallelSchedule,
                        SeqSchedule, evaluate_sequential,
                        evaluate_sequential_reference, schedule_from_dict,
                        schedule_to_dict, single_pu_cost)
-from .search import (ConcurrentCaches, DEFAULT_HORIZON_STATES,
+from .search import (ConcurrentCaches, DAG_ALGORITHMS,
+                     DEFAULT_HORIZON_STATES,
                      DEFAULT_MAX_STATES, IncrementalConcurrentSolver,
                      dijkstra, sequential_dp, sequential_dp_reference,
                      solve_concurrent, solve_concurrent_aligned,
                      solve_concurrent_aligned_reference,
                      solve_concurrent_horizon,
                      solve_concurrent_joint, solve_concurrent_joint_reference,
-                     solve_parallel, solve_sequential)
+                     solve_dag, solve_parallel, solve_sequential)
 from .serve import (Arrival, ArrivalTrace, RequestRecord, ServeReport,
                     ServingEngine)
 from .targets import (Target, TargetRegistry, pu_specs_for_targets,
@@ -70,7 +72,8 @@ __all__ = [
     "Target", "TargetRegistry", "pu_specs_for_targets", "resolve_targets",
     "variant_tolerance",
     "trace_fused_ops", "ConcurrentSchedule",
-    "ConcurrentStep", "ParallelSchedule", "SeqSchedule",
+    "ConcurrentStep", "DagSchedule", "DagStep", "DAG_ALGORITHMS",
+    "solve_dag", "ParallelSchedule", "SeqSchedule",
     "evaluate_sequential", "evaluate_sequential_reference",
     "schedule_from_dict", "schedule_to_dict",
     "single_pu_cost", "dijkstra", "sequential_dp", "sequential_dp_reference",

@@ -38,7 +38,7 @@ from typing import Any, Mapping, Sequence
 
 import numpy as np
 
-from .errors import PULostError
+from .errors import InfeasibleScheduleError, PULostError
 from .faults import (_JOIN_GRACE, ExecutionPolicy, FaultPlan, RunContext,
                      _Aborted, run_with_retries)
 from .laneprogram import LaneProgram, compile_lane_program
@@ -171,6 +171,53 @@ class ScheduleExecutor:
                     f"{missing[:5]}{'...' if len(missing) > 5 else ''}")
         return lane_queues, barriers
 
+    def _dag_lane_queues(self, graph: OpGraph, schedule,
+                         completed: Mapping[int, Any] | None = None
+                         ) -> dict[str, list[tuple[int, int]]]:
+        """Lane queues in DAG-schedule step order.
+
+        Ops enqueue onto their assigned lane in the order the
+        ``DagSchedule`` lists them; synchronization at runtime comes from
+        the graph's *true dependency edges* only (per-op events in the
+        interpreter, segment cuts in the compiled path) — no step
+        barriers, so independent subgraphs on different lanes overlap
+        (the paper's intra-model-parallelism win).  Coverage and
+        precedence are validated here: a step op whose predecessors have
+        not all been listed earlier (same step counts, in listed order)
+        raises :class:`InfeasibleScheduleError` naming the node and its
+        unmet predecessors instead of deadlocking the lane workers.
+        """
+        lane_queues: dict[str, list[tuple[int, int]]] = {
+            p: [] for p in self.pus}
+        seen: set[int] = set(completed or ())
+
+        def _nm(i: int) -> str:
+            return f"op {i} ({graph.ops[i].name})"
+
+        for st in schedule.steps:
+            for oi, pu in zip(st.ops, st.pus):
+                if completed and oi in seen and oi in completed:
+                    continue  # frontier op re-listed by a stale schedule
+                unmet = [p for p in graph.pred[oi] if p not in seen]
+                if unmet:
+                    raise InfeasibleScheduleError(
+                        f"DAG schedule lists node {_nm(oi)} before its "
+                        f"unmet predecessor(s) "
+                        f"{[_nm(p) for p in unmet]} — executing it would "
+                        "deadlock the lanes")
+                if pu not in lane_queues:
+                    raise ValueError(
+                        f"DAG schedule assigns {_nm(oi)} to unknown lane "
+                        f"{pu!r} (executor lanes: {self.pus})")
+                lane_queues[pu].append((0, oi))
+                seen.add(oi)
+        if seen != set(range(len(graph.ops))):
+            missing = sorted(set(range(len(graph.ops))) - seen)
+            raise ValueError(
+                f"DAG schedule does not cover the graph: missing ops "
+                f"{missing[:5]}{'...' if len(missing) > 5 else ''}")
+        return lane_queues
+
     # ------------------------------------------------------------------
     # per-op interpreter (the bitwise-equivalence oracle)
     # ------------------------------------------------------------------
@@ -201,6 +248,26 @@ class ScheduleExecutor:
         lane_items = {pu: [(0, i) for i in q] for pu, q in lane_queues.items()}
         out = self._run_lanes(
             [graph], lane_items, [external_inputs],
+            policy=policy, faults=faults,
+            completed=[completed] if completed else None, estimate=estimate)
+        return out[0]
+
+    def run_dag(self, graph: OpGraph, schedule,
+                external_inputs: Mapping[int, tuple] | None = None, *,
+                policy: ExecutionPolicy | None = None,
+                faults: FaultPlan | None = None,
+                completed: Mapping[int, Any] | None = None,
+                estimate: float | None = None) -> dict[int, Any]:
+        """Run a ``DagSchedule``: ops enqueue per-lane in step order and
+        cross-lane synchronization happens only at true dependency edges,
+        so a multi-op (antichain) step's ops really overlap across lanes.
+
+        ``policy`` / ``faults`` / ``completed`` / ``estimate`` behave as
+        in :meth:`run_scheduled`.
+        """
+        lane_queues = self._dag_lane_queues(graph, schedule, completed)
+        out = self._run_lanes(
+            [graph], lane_queues, [external_inputs],
             policy=policy, faults=faults,
             completed=[completed] if completed else None, estimate=estimate)
         return out[0]
@@ -343,6 +410,16 @@ class ScheduleExecutor:
         queues = self._scheduled_lane_queues(graph, assignment)
         lane_items = {pu: [(0, i) for i in q] for pu, q in queues.items()}
         return compile_lane_program([graph], lane_items, single=True,
+                                    targets=self.targets)
+
+    def compile_dag(self, graph: OpGraph, schedule) -> LaneProgram:
+        """Compile a ``DagSchedule`` into a :class:`LaneProgram`: each
+        lane's queue (in step order) partitions into fused segments with
+        events only at cross-lane dependency cuts, so independent
+        subgraphs on different lanes overlap exactly as in :meth:`run_dag`;
+        ``program.run(external_inputs)`` matches it bitwise."""
+        lane_queues = self._dag_lane_queues(graph, schedule)
+        return compile_lane_program([graph], lane_queues, single=True,
                                     targets=self.targets)
 
     def compile_concurrent(self, graphs: Sequence[OpGraph],

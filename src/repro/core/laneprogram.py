@@ -13,7 +13,11 @@ orchestrator").  A :class:`LaneProgram` removes it in two moves:
   D2H/H2D handoff points), at a request switch on a shared lane, or at a
   co-scheduled concurrent step (co-scheduled ops stay individually
   dispatched so the granularity the contention laws priced is preserved —
-  they become single-op *barrier* segments).  Synchronisation collapses
+  they become single-op *barrier* segments).  The boundary test reads the
+  op graph's true predecessor sets, so for DAG schedules (lane queues
+  from ``ScheduleExecutor.compile_dag``) cuts land exactly at cross-lane
+  dependency *edges*: two independent subgraphs mapped to different
+  lanes fuse into segments that overlap with no synchronisation at all.  Synchronisation collapses
   from one event per op to one event per segment, waited on only across
   the boundary cuts.
 
@@ -30,7 +34,8 @@ orchestrator").  A :class:`LaneProgram` removes it in two moves:
   single XLA dispatch.
 
 Programs are built once per (plan, input-signature) by
-``ScheduleExecutor.compile_scheduled`` / ``compile_concurrent`` and cached
+``ScheduleExecutor.compile_scheduled`` / ``compile_dag`` /
+``compile_concurrent`` and cached
 by ``Orchestrator.execute`` (see the ``program_for`` hook), mirroring the
 plan cache: a repeat ``execute`` call skips partitioning and compilation
 entirely.  The per-op interpreter remains the bitwise-equivalence oracle

@@ -143,11 +143,18 @@ class OpGraph:
             edges = [(i, i + 1) for i in range(n - 1)]
         self.succ: list[list[int]] = [[] for _ in range(n)]
         self.pred: list[list[int]] = [[] for _ in range(n)]
+        self.n_edges = 0
         for a, b in edges:
             if not (0 <= a < n and 0 <= b < n):
                 raise ValueError(f"edge ({a},{b}) out of range")
             self.succ[a].append(b)
             self.pred[b].append(a)
+            self.n_edges += 1
+        # structure is fixed after construction, so the derived views
+        # below are computed once (the acyclicity check already pays for
+        # the first topological sort)
+        self._topo: list[int] | None = None
+        self._is_chain: bool | None = None
         self._check_acyclic()
 
     # -- basic structure ----------------------------------------------------
@@ -159,23 +166,49 @@ class OpGraph:
         return [(a, b) for a in range(len(self.ops)) for b in self.succ[a]]
 
     def is_chain(self) -> bool:
-        return all(len(s) <= 1 for s in self.succ) and all(len(p) <= 1 for p in self.pred)
+        if self._is_chain is None:
+            self._is_chain = (all(len(s) <= 1 for s in self.succ)
+                              and all(len(p) <= 1 for p in self.pred))
+        return self._is_chain
+
+    def components(self) -> list[list[int]]:
+        """Weakly-connected components, each as a topologically-ordered op
+        list (in global topo-order positions)."""
+        n = len(self.ops)
+        parent = list(range(n))
+
+        def find(x: int) -> int:
+            while parent[x] != x:
+                parent[x] = parent[parent[x]]
+                x = parent[x]
+            return x
+
+        for a, b in self.edges:
+            ra, rb = find(a), find(b)
+            if ra != rb:
+                parent[ra] = rb
+        buckets: dict[int, list[int]] = {}
+        for u in self.topo_order():
+            buckets.setdefault(find(u), []).append(u)
+        return list(buckets.values())
 
     def topo_order(self) -> list[int]:
-        n = len(self.ops)
-        indeg = [len(p) for p in self.pred]
-        stack = [i for i in range(n) if indeg[i] == 0]
-        order: list[int] = []
-        while stack:
-            u = stack.pop()
-            order.append(u)
-            for v in self.succ[u]:
-                indeg[v] -= 1
-                if indeg[v] == 0:
-                    stack.append(v)
-        if len(order) != n:
-            raise ValueError("graph has a cycle")
-        return order
+        if self._topo is None:
+            n = len(self.ops)
+            indeg = [len(p) for p in self.pred]
+            stack = [i for i in range(n) if indeg[i] == 0]
+            order: list[int] = []
+            while stack:
+                u = stack.pop()
+                order.append(u)
+                for v in self.succ[u]:
+                    indeg[v] -= 1
+                    if indeg[v] == 0:
+                        stack.append(v)
+            if len(order) != n:
+                raise ValueError("graph has a cycle")
+            self._topo = order
+        return list(self._topo)    # defensive copy: callers may mutate
 
     def _check_acyclic(self) -> None:
         self.topo_order()

@@ -17,11 +17,14 @@ wraps that into the register → plan → execute flow of a serving system:
   with descriptive errors (empty graphs, unprofiled ops, unknown PUs).
 * ``plan`` routes by shape: one chain handle → the sequential DP; one
   handle with ``Branch`` nodes (fork/join DAG) → the phase/branch
-  parallel solve; a tuple of handles → the M-ary concurrent search
-  (``mode="aligned"`` opts a pair into the lockstep solver).  Results
-  come back as a uniform :class:`Plan` and are **bitwise identical** to
-  the corresponding direct solver call — the free functions remain the
-  stable low-level layer underneath.
+  parallel solve; one *disconnected* handle (a union of chains, which
+  is no single sequence) → the DAG route; a tuple of handles → the
+  M-ary concurrent search (``mode="aligned"`` opts a pair into the
+  lockstep solver, ``mode="dag"`` forces the antichain-frontier front
+  door :func:`~repro.core.search.solve_dag` for any single-handle
+  shape).  Results come back as a uniform :class:`Plan` and are
+  **bitwise identical** to the corresponding direct solver call — the
+  free functions remain the stable low-level layer underneath.
 * Plans are cached keyed by (workload signatures + progress, objective,
   resolved mode, runtime-condition scaling); the objective-independent
   solver state (``ConcurrentCaches`` holding ``PairCostCache``s / group
@@ -106,15 +109,18 @@ from .faults import ExecutionPolicy, FaultPlan
 from .laneprogram import LaneProgram
 from .op import FusedOp, OpGraph, chain_graph
 from .targets import pu_specs_for_targets, resolve_targets
-from .schedule import (ConcurrentSchedule, ConcurrentStep, ParallelSchedule,
+from .schedule import (ConcurrentSchedule, ConcurrentStep, DagSchedule,
+                       ParallelSchedule,
                        SeqSchedule, schedule_from_dict, schedule_to_dict)
-from .search import (ConcurrentCaches, IncrementalConcurrentSolver,
+from .search import (ConcurrentCaches, DAG_ALGORITHMS,
+                     IncrementalConcurrentSolver,
                      _pair_cache, solve_concurrent, solve_concurrent_aligned,
-                     solve_concurrent_horizon, solve_parallel,
+                     solve_concurrent_horizon, solve_dag, solve_parallel,
                      solve_sequential)
 from .workload import Workload
 
-PLAN_MODES = ("auto", "sequential", "parallel", "concurrent", "aligned")
+PLAN_MODES = ("auto", "sequential", "parallel", "concurrent", "aligned",
+              "dag")
 # concurrent-search routes accepted by plan(algorithm=...); passed through
 # to solve_concurrent verbatim ("astar"/"dijkstra" are pair-only spellings
 # the low-level layer also accepts, but the front door keeps the M-ary set)
@@ -126,8 +132,9 @@ class Plan:
     """Uniform result of ``Orchestrator.plan``: one schedule of any kind
     plus the routing metadata needed to execute or serialize it."""
 
-    kind: str                 # "sequential" | "parallel" | "concurrent"
-    schedule: SeqSchedule | ParallelSchedule | ConcurrentSchedule
+    kind: str          # "sequential" | "parallel" | "concurrent" | "dag"
+    schedule: (SeqSchedule | ParallelSchedule | ConcurrentSchedule
+               | DagSchedule)
     objective: str
     handles: tuple[int, ...] = ()
     mode: str = ""            # resolved plan mode (e.g. "aligned")
@@ -153,10 +160,15 @@ class Plan:
         the one assignment shape shared by all three schedule kinds.  For
         parallel plans the order is phase-by-phase (phases are barriers),
         each branch's chain listed whole (branches within a phase
-        co-execute, so any branch interleaving is valid)."""
+        co-execute, so any branch interleaving is valid).  For DAG plans
+        the order is step-by-step (each step a precedence-valid advance,
+        co-scheduled ops listed together)."""
         s = self.schedule
         if isinstance(s, SeqSchedule):
             return [list(zip(s.chain, s.assignment))]
+        if isinstance(s, DagSchedule):
+            return [[(o, p) for st in s.steps
+                     for o, p in zip(st.ops, st.pus)]]
         if isinstance(s, ParallelSchedule):
             out: list[tuple[int, str]] = []
             for ph in s.phases:
@@ -216,6 +228,11 @@ class _Registration:
     # sequence) — kept alive so the id()-keyed memo can never collide
     # with a recycled address of a freed object
     source: Any = None
+    # lazily-built DAG workload (``Workload.from_graph`` — same dense
+    # arrays as ``wl`` plus explicit predecessor sets).  Kept separate so
+    # the preds-free ``wl``/``sig`` the chain/concurrent routes key their
+    # caches by are untouched by DAG planning.
+    dag_wl: Workload | None = None
 
 
 class Orchestrator:
@@ -373,6 +390,27 @@ class Orchestrator:
             self._cond_views[key] = self._cond_views.pop(key)  # LRU refresh
         return wl
 
+    def _dag_wl(self, reg: _Registration) -> Workload:
+        """Registration DAG workload (``Workload.from_graph``, built
+        lazily) under the active condition.  ``under_condition`` carries
+        the predecessor sets, so the derived view keeps its DAG shape;
+        views share the ``_cond_views`` LRU under a dag-tagged key."""
+        if reg.dag_wl is None:
+            reg.dag_wl = Workload.from_graph(reg.graph, reg.table, self.pus)
+        if self.condition.nominal:
+            return reg.dag_wl
+        key = ((reg.handle, "dag"), self._cond_key())
+        wl = self._cond_views.get(key)
+        if wl is None:
+            wl = reg.dag_wl.under_condition(self.condition.slowdown,
+                                            self.condition.unavailable)
+            self._cond_views[key] = wl
+            self._evict_lru(self._cond_views, self._max_pools,
+                            "cond_view_evictions")
+        else:
+            self._cond_views[key] = self._cond_views.pop(key)  # LRU refresh
+        return wl
+
     def on_condition(self, cond: RuntimeCondition
                      ) -> dict[tuple[int, str], Plan]:
         """Fold a runtime condition into the session.
@@ -458,21 +496,28 @@ class Orchestrator:
 
         ``mode="auto"`` routes a single chain handle to the sequential
         DP, a single fork/join handle (``Branch`` nodes present) to the
-        phase/branch parallel solve, and multiple handles to the M-ary
-        concurrent search; ``"aligned"`` forces the lockstep pair solver
-        for exactly two handles.  Results are bitwise identical to the
-        corresponding direct solver call on the same workloads.
+        phase/branch parallel solve, a single *disconnected* handle (a
+        union of chains — degree-wise a "chain" but not one schedulable
+        as a single sequence) to the DAG route, and multiple handles to
+        the M-ary concurrent search; ``"aligned"`` forces the lockstep
+        pair solver for exactly two handles; ``"dag"`` forces the
+        antichain-frontier front door
+        (:func:`~repro.core.search.solve_dag`) for any single-handle
+        graph shape.  Results are bitwise identical to the corresponding
+        direct solver call on the same workloads.
 
-        ``algorithm`` and ``max_states`` are the concurrent-search knobs
-        of :func:`~repro.core.search.solve_concurrent`, passed through
-        verbatim (``algorithm`` forces a route — exact vectorized
-        ``"grid"`` sweep, retained ``"grid_astar"`` heap oracle,
-        ``"rolling"`` horizon merge, or the ``"pairwise"`` fallback —
-        and ``max_states`` bounds the exact-solve grid; ``None`` keeps
-        the solver default).  Both are part of the plan-cache key, so a
-        forced-pairwise plan can never be served a cached grid schedule;
-        they are rejected for non-concurrent modes rather than silently
-        ignored.
+        ``algorithm`` and ``max_states`` are route knobs passed through
+        verbatim: for concurrent plans the
+        :func:`~repro.core.search.solve_concurrent` set (exact
+        vectorized ``"grid"`` sweep, retained ``"grid_astar"`` heap
+        oracle, ``"rolling"`` horizon merge, ``"pairwise"`` fallback),
+        for DAG plans the :func:`~repro.core.search.solve_dag` set
+        (``"chain"`` / ``"union-grid"`` / ``"phase"`` oracles and the
+        ``"frontier"`` generalization); ``max_states`` bounds the
+        exact-solve grid / discovered order ideals.  Both are part of
+        the plan-cache key, so a forced route can never be served
+        another route's cached schedule; they are rejected for modes
+        without such knobs rather than silently ignored.
         """
         hs = (handles,) if isinstance(handles, int) else tuple(handles)
         if not hs:
@@ -480,18 +525,26 @@ class Orchestrator:
         regs = [self._reg(h) for h in hs]
         if mode not in PLAN_MODES:
             raise ValueError(f"unknown mode {mode!r}; one of {PLAN_MODES}")
-        if algorithm not in CONCURRENT_ALGORITHMS:
-            raise ValueError(f"unknown algorithm {algorithm!r}; one of "
-                             f"{CONCURRENT_ALGORITHMS}")
         if max_states is not None and max_states < 1:
             raise ValueError(f"max_states must be >= 1, got {max_states}")
         if mode == "auto":
             if len(hs) > 1:
                 mode = "concurrent"
+            elif not regs[0].graph.is_chain():
+                mode = "parallel"
+            elif len(regs[0].graph.components()) > 1:
+                # degree-wise a "chain" but disconnected: a union of
+                # chains has no single sequence to DP over — route it to
+                # the DAG front door (union-grid co-scheduling)
+                mode = "dag"
             else:
-                mode = ("sequential" if regs[0].graph.is_chain()
-                        else "parallel")
-        if mode in ("sequential", "parallel") and len(hs) != 1:
+                mode = "sequential"
+        allowed = (DAG_ALGORITHMS if mode == "dag"
+                   else CONCURRENT_ALGORITHMS)
+        if algorithm not in allowed:
+            raise ValueError(f"unknown algorithm {algorithm!r}; one of "
+                             f"{allowed} for mode={mode!r}")
+        if mode in ("sequential", "parallel", "dag") and len(hs) != 1:
             raise ValueError(
                 f"mode={mode!r} plans one handle, got {len(hs)}")
         if mode == "aligned" and len(hs) != 2:
@@ -499,11 +552,12 @@ class Orchestrator:
                 f"mode='aligned' is the lockstep pair solver, got "
                 f"{len(hs)} handle(s)")
         if algorithm != "auto" or max_states is not None:
-            if mode != "concurrent":
+            if mode not in ("concurrent", "dag"):
                 raise ValueError(
                     "algorithm=/max_states= are knobs of the M-ary "
-                    f"concurrent search; this plan resolved to mode={mode!r}")
-            if len(hs) == 1:
+                    "concurrent search and the DAG route; this plan "
+                    f"resolved to mode={mode!r}")
+            if mode == "concurrent" and len(hs) == 1:
                 raise ValueError(
                     "algorithm=/max_states= route the M >= 2 concurrent "
                     "search; a single-request concurrent plan is a solo "
@@ -518,10 +572,11 @@ class Orchestrator:
                      max_states: int | None = None,
                      horizon_states: int | None = None) -> Plan:
         # the sequential/concurrent solvers consume only the chain + dense
-        # cost views (covered by the workload signature); the parallel
-        # solve additionally consumes the graph's edge structure
-        # (phases/branches), so its key must include the structure hash
-        if mode == "parallel":
+        # cost views (covered by the workload signature); the parallel and
+        # DAG solves additionally consume the graph's edge structure
+        # (phases/branches — predecessor sets), so their keys must
+        # include the structure hash
+        if mode in ("parallel", "dag"):
             wl_key = tuple((reg.sig, reg.struct_sig, prog)
                            for reg, prog in regs_progress)
         else:
@@ -608,6 +663,17 @@ class Orchestrator:
                 reg.graph, reg.table if nominal else None, self.pus,
                 self.contention, objective, workload=wl)
             return Plan("parallel", sched, objective, hs, mode)
+        if mode == "dag":
+            # DAG plans always cover the whole graph (progress tails drop
+            # predecessor sets; recovery re-plans from 0 and skips the
+            # completed frontier at execution time, like parallel plans)
+            reg = regs_progress[0][0]
+            sched = solve_dag(
+                reg.graph, reg.table if nominal else None, self.pus,
+                self.contention, objective, algorithm=algorithm,
+                workload=self._dag_wl(reg), caches=self._pool(),
+                max_states=max_states)
+            return Plan("dag", sched, objective, hs, mode)
         pool = self._pool()
         if mode == "aligned":
             w0, w1 = wls
@@ -769,6 +835,10 @@ class Orchestrator:
         if not compile:
             regs = self._execute_regs(plan, validate=True)
             graphs = [reg.graph for reg in regs]
+            if plan.kind == "dag":
+                return self.executor.run_dag(
+                    graphs[0], plan.schedule, inputs,
+                    policy=policy, faults=faults, estimate=plan.latency)
             if plan.kind in ("sequential", "parallel"):
                 return self.executor.run_scheduled(
                     graphs[0], plan.schedule, inputs,
@@ -843,6 +913,17 @@ class Orchestrator:
                 faults=faults, completed=partials[0],
                 estimate=sub.latency)
 
+        if plan.kind == "dag":
+            # same shape as parallel: precedence structure survives the
+            # condition change, so re-plan the whole DAG onto the
+            # surviving PUs and let the lane queues skip the frontier
+            sub = self._plan_cached([(regs[0], 0)], plan.handles, objective,
+                                    "dag")
+            return self.executor.run_dag(
+                graphs[0], sub.schedule, inputs, policy=policy,
+                faults=faults, completed=partials[0],
+                estimate=sub.latency)
+
         if plan.kind == "sequential":
             done = partials[0]
             prog = self._chain_progress(regs[0].chain, done)
@@ -912,7 +993,9 @@ class Orchestrator:
         # is the warm fast path the overhead gate measures
         regs = self._execute_regs(plan, validate=True)
         graphs = [reg.graph for reg in regs]
-        if plan.kind in ("sequential", "parallel"):
+        if plan.kind == "dag":
+            prog = self.executor.compile_dag(graphs[0], plan.schedule)
+        elif plan.kind in ("sequential", "parallel"):
             prog = self.executor.compile_scheduled(graphs[0], plan.schedule)
         else:
             prog = self.executor.compile_concurrent(graphs, plan.schedule)

@@ -366,6 +366,44 @@ def pi05() -> OpGraph:
     return g.graph()
 
 
+def vla_pipeline(dtb: int = 2, depth: int = 5) -> OpGraph:
+    """Compact multi-stage VLA pipeline: vision encoder || language
+    encoder -> fusion -> action head, as an explicit op DAG.
+
+    The paper's intra-model-parallelism scenario at DAG-solver scale
+    (``pi05`` is the same pipeline at full ~4,600-op profile scale; this
+    builder keeps it under the frontier DP's 63-node bitmask so the
+    antichain-frontier route can co-schedule the towers step by step).
+    The towers are deliberately affinity-split — a conv tower (NPU-fast)
+    against a GEMM/attention tower (GPU-fast) — so co-executing them on
+    different PUs beats any serialized single-sequence route: paired
+    advances cost ``max(w_v, w_l) * SF`` with the cross-PU SF factors
+    well under 2x.
+    """
+    g = _G()
+    root = g.add(_elt("inputs", "add", 3 * 224 * 224, dtb))
+    # vision encoder: conv tower (NPU-affine)
+    v = g.add(_conv("vis.patch", 3, 64, 224, 8, dtb, stride=4), after=root)
+    for i in range(depth):
+        v = g.add(_conv(f"vis.{i}.conv", 64, 64, 56, 3, dtb), after=v)
+        v = g.add(_elt(f"vis.{i}.act", "act", 64 * 56 * 56, dtb), after=v)
+    v_end = g.add(_mm("vis.proj", 196, 768, 768, dtb), after=v)
+    # language encoder: GEMM/attention tower (GPU-affine), parallel
+    t = g.add(_mm("lang.embed", 128, 768, 768, dtb), after=root)
+    for i in range(depth):
+        t = g.add(_mm(f"lang.{i}.qkv", 128, 768, 3 * 768, dtb), after=t)
+        t = g.add(FusedOp(name=f"lang.{i}.attn", kind="attention",
+                          in_shapes=((1, 12, 128, 64), (1, 12, 128, 64)),
+                          out_shape=(1, 12, 128, 64), dtype_bytes=dtb),
+                  after=t)
+    t_end = g.add(_mm("lang.proj", 128, 768, 768, dtb), after=t)
+    # fusion + action head (sequential epilogue)
+    f = g.add(_mm("fusion", 324, 768, 768, dtb), after=[v_end, t_end])
+    g.add(_mm("action.fc", 1, 768, 256, dtb), after=f)
+    g.add(_mm("action_head", 1, 256, 32, dtb))
+    return g.graph()
+
+
 # ---------------------------------------------------------------------------
 # registry: the paper's 19 model-precision configurations
 # ---------------------------------------------------------------------------

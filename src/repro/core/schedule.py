@@ -112,6 +112,51 @@ class ConcurrentSchedule:
         return out
 
 
+@dataclasses.dataclass(slots=True)
+class DagStep:
+    """One step of a DAG (antichain-frontier) schedule.
+
+    ``ops`` is the antichain of DAG node indices advanced this step —
+    mutually independent ops, all of whose predecessors completed in
+    earlier steps.  ``pus[j]`` is the PU running ``ops[j]``.  A singleton
+    step is ordinary sequential progress; a multi-op step co-executes its
+    ops under the contention model (the paper's intra-model parallelism).
+    """
+
+    ops: tuple[int, ...]           # DAG node indices (len >= 1, no None)
+    pus: tuple[str, ...]           # PU per op
+    cost: float
+
+
+@dataclasses.dataclass
+class DagSchedule:
+    """Static schedule over an op DAG: a sequence of antichain steps whose
+    union, in order, is a topological linear extension of the DAG."""
+
+    steps: list[DagStep]
+    latency: float
+    energy: float
+    objective: str
+    mode: str  # "chain" | "union-grid" | "phase" | "frontier"
+
+    @property
+    def assignment(self) -> dict[int, str]:
+        out: dict[int, str] = {}
+        for st in self.steps:
+            for o, p in zip(st.ops, st.pus):
+                out[o] = p
+        return out
+
+    @property
+    def order(self) -> list[int]:
+        """Node completion order (a linear extension of the DAG)."""
+        return [o for st in self.steps for o in st.ops]
+
+    @property
+    def n_parallel_steps(self) -> int:
+        return sum(1 for st in self.steps if len(st.ops) > 1)
+
+
 # ---------------------------------------------------------------------------
 # Fixed-assignment evaluation (dense Workload layer)
 # ---------------------------------------------------------------------------
@@ -187,7 +232,7 @@ def single_pu_cost(
 # ---------------------------------------------------------------------------
 
 
-AnySchedule = SeqSchedule | ParallelSchedule | ConcurrentSchedule
+AnySchedule = SeqSchedule | ParallelSchedule | ConcurrentSchedule | DagSchedule
 
 
 def schedule_to_dict(s: AnySchedule) -> dict:
@@ -221,6 +266,11 @@ def schedule_to_dict(s: AnySchedule) -> dict:
                 "energy": s.energy, "objective": s.objective, "mode": s.mode,
                 "steps": [{"ops": list(st.ops), "pus": list(st.pus),
                            "cost": st.cost} for st in s.steps]}
+    if isinstance(s, DagSchedule):
+        return {"type": "dag", "latency": s.latency, "energy": s.energy,
+                "objective": s.objective, "mode": s.mode,
+                "steps": [{"ops": list(st.ops), "pus": list(st.pus),
+                           "cost": st.cost} for st in s.steps]}
     raise TypeError(f"not a schedule: {type(s).__name__}")
 
 
@@ -250,6 +300,12 @@ def schedule_from_dict(d: Mapping) -> AnySchedule:
         return ConcurrentSchedule(
             steps=[ConcurrentStep(ops=tuple(st["ops"]), pus=tuple(st["pus"]),
                                   cost=st["cost"]) for st in d["steps"]],
+            latency=d["latency"], energy=d["energy"],
+            objective=d["objective"], mode=d["mode"])
+    if kind == "dag":
+        return DagSchedule(
+            steps=[DagStep(ops=tuple(st["ops"]), pus=tuple(st["pus"]),
+                           cost=st["cost"]) for st in d["steps"]],
             latency=d["latency"], energy=d["energy"],
             objective=d["objective"], mode=d["mode"])
     raise ValueError(f"unknown schedule type {kind!r}")

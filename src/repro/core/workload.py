@@ -29,6 +29,31 @@ Derived views share the source arrays where possible (``tail`` and
 ``select`` return NumPy views / fancy-indexed copies of rows; they do
 not re-ingest), so building per-branch or per-tail workloads inside
 ``solve_parallel`` / ``DynamicScheduler`` is allocation-cheap.
+
+**DAG invariants.**  A ``Workload`` may additionally carry ``preds`` —
+per-position predecessor sets over an op *DAG* — in which case the
+following invariants hold and are what every DAG route relies on:
+
+1. ``chain`` is a **topological order** of the DAG: every predecessor
+   position in ``preds[i]`` is ``< i``.  A chain-shaped workload is the
+   special case ``preds[i] == (i-1,)`` (``preds=None`` means exactly
+   that), so every chain solver remains a valid DAG solver oracle.
+2. Scheduler state is an **order ideal** (downward-closed set) of DAG
+   positions; the *frontier* is the antichain of ready positions (all
+   predecessors inside the ideal).  Any prefix of ``chain`` is an
+   ideal, so prefix-progress resume/recovery stays well-defined on
+   DAGs.
+3. Cost semantics are the *concurrent* formulation: no inter-op
+   transition costs; singleton advances are priced from the dense solo
+   arrays, co-scheduled antichain steps via the contention model's
+   group law.  Execution-side synchronization derives from the same
+   ``preds`` sets (cross-lane events only at true dependency edges).
+4. ``preds`` participates in :meth:`signature` **only when non-linear**,
+   so chain workload signatures (and every existing plan-cache key)
+   are unchanged.
+5. Row-reordering views (``tail``, ``select``) drop ``preds`` — their
+   rows no longer index the same DAG positions; row-preserving views
+   (``under_condition``, ``spliced``) carry it through unchanged.
 """
 from __future__ import annotations
 
@@ -57,11 +82,28 @@ class Workload:
 
     def __init__(self, chain: Sequence[int], dense: DenseCostTable,
                  pus: Mapping[str, PUSpec], ops: Sequence | None = None,
-                 table: CostTable | None = None):
+                 table: CostTable | None = None,
+                 preds: Sequence[Sequence[int]] | None = None):
         self.chain = list(chain)
         self.dense = dense
         self.pus = pus = _as_pu_specs(pus)
         self.ops = ops                  # optional FusedOp list (names in errors)
+        # Optional DAG structure: preds[i] = sorted tuple of predecessor
+        # *positions* (indices into ``chain``), each < i (topological
+        # order).  None means the linear chain preds[i] == (i-1,).
+        self.preds = (None if preds is None
+                      else tuple(tuple(sorted(int(q) for q in ps))
+                                 for ps in preds))
+        if self.preds is not None:
+            if len(self.preds) != len(self.chain):
+                raise ValueError(
+                    f"preds length {len(self.preds)} != chain length "
+                    f"{len(self.chain)}")
+            for i, ps in enumerate(self.preds):
+                if any(not 0 <= q < i for q in ps):
+                    raise ValueError(
+                        f"preds[{i}]={ps} is not topologically ordered "
+                        "(every predecessor position must be < its node)")
         # The scalar source table is kept ONLY as the oracle handle for the
         # ``*_reference`` fallbacks (custom contention models); no Workload
         # method iterates it.
@@ -74,11 +116,13 @@ class Workload:
         self.power_memory = np.array(
             [pus[p].power_memory for p in self.pu_names])
         self._signature: str | None = None
+        self._succs: tuple[tuple[int, ...], ...] | None = None
 
     # -- construction -------------------------------------------------------
     @classmethod
     def build(cls, chain: Sequence[int], table: CostTable,
-              pus: Mapping[str, PUSpec], ops: Sequence | None = None
+              pus: Mapping[str, PUSpec], ops: Sequence | None = None,
+              preds: Sequence[Sequence[int]] | None = None
               ) -> "Workload":
         """Ingest a scalar ``CostTable`` into a dense Workload (the single
         sanctioned dict pass).
@@ -118,7 +162,19 @@ class Workload:
                 f"the cost table on every PU: {shown}{more} — were they "
                 "profiled?")
         dense = DenseCostTable.from_chain(chain, table, pus)
-        return cls(chain, dense, pus, ops=ops, table=table)
+        return cls(chain, dense, pus, ops=ops, table=table, preds=preds)
+
+    @classmethod
+    def from_graph(cls, graph, table: CostTable,
+                   pus: Mapping[str, PUSpec]) -> "Workload":
+        """Build a DAG workload from an :class:`~repro.core.op.OpGraph`:
+        rows follow ``graph.topo_order()`` and ``preds`` holds the graph's
+        predecessor sets mapped to topological positions."""
+        order = graph.topo_order()
+        pos_of = {oi: i for i, oi in enumerate(order)}
+        preds = [tuple(sorted(pos_of[q] for q in graph.pred[oi]))
+                 for oi in order]
+        return cls.build(order, table, pus, ops=graph.ops, preds=preds)
 
     def signature(self) -> str:
         """Content hash of the dense views (chain, PU set, all cost
@@ -133,6 +189,12 @@ class Workload:
             h.update(repr((tuple(self.chain), tuple(d.pus))).encode())
             for a in (d.mask, d.w, d.power, d.h2d, d.d2h, d.dispatch, d.acc):
                 h.update(np.ascontiguousarray(a).tobytes())
+            # DAG structure changes the schedule space, so it must change
+            # the signature — but ONLY when non-linear, keeping every
+            # existing chain-workload signature (and plan-cache key) stable.
+            if not self.is_linear:
+                h.update(b"dag")
+                h.update(repr(self.preds).encode())
             self._signature = h.hexdigest()
         return self._signature
 
@@ -159,8 +221,37 @@ class Workload:
             return f"op {oi} ({self.ops[oi].name})"
         return f"op {oi}"
 
+    # -- DAG structure -------------------------------------------------------
+    @property
+    def is_linear(self) -> bool:
+        """True when the dependency structure is the plain chain
+        ``0 -> 1 -> ... -> n-1`` (including ``preds=None``)."""
+        if self.preds is None:
+            return True
+        return all(ps == (() if i == 0 else (i - 1,))
+                   for i, ps in enumerate(self.preds))
+
+    def pred_positions(self, pos: int) -> tuple[int, ...]:
+        """Predecessor positions of ``pos`` (chain semantics if no DAG)."""
+        if self.preds is None:
+            return () if pos == 0 else (pos - 1,)
+        return self.preds[pos]
+
+    @property
+    def succs(self) -> tuple[tuple[int, ...], ...]:
+        """Successor positions per position (derived from ``preds``)."""
+        if self._succs is None:
+            out: list[list[int]] = [[] for _ in range(self.n)]
+            for i in range(self.n):
+                for q in self.pred_positions(i):
+                    out[q].append(i)
+            self._succs = tuple(tuple(s) for s in out)
+        return self._succs
+
     # -- derived views -------------------------------------------------------
-    def _derive(self, dense: DenseCostTable) -> "Workload":
+    def _derive(self, dense: DenseCostTable,
+                preds: tuple[tuple[int, ...], ...] | None = None
+                ) -> "Workload":
         wl = Workload.__new__(Workload)
         wl.chain = list(dense.chain)
         wl.dense = dense
@@ -175,6 +266,10 @@ class Workload:
         wl._col = self._col
         wl.power_memory = self.power_memory
         wl._signature = None
+        # row-preserving views pass the DAG structure through explicitly;
+        # row-reordering views (tail/select) leave it behind
+        wl.preds = preds
+        wl._succs = None
         return wl
 
     def tail(self, pos: int) -> "Workload":
@@ -232,7 +327,7 @@ class Workload:
             w[:, j] = np.inf
         sub = DenseCostTable(d.pus, d.chain, mask, w, d.power, d.h2d, d.d2h,
                              d.acc, dispatch=d.dispatch)
-        return self._derive(sub)
+        return self._derive(sub, preds=self.preds)
 
     def spliced(self, other: "Workload", pos: int) -> "Workload":
         """Rows ``[:pos]`` from this workload, rows ``[pos:]`` from
@@ -249,7 +344,7 @@ class Workload:
             np.concatenate([d0.d2h[:pos], d1.d2h[pos:]]),
             d0.acc,
             dispatch=np.concatenate([d0.dispatch[:pos], d1.dispatch[pos:]]))
-        return self._derive(sub)
+        return self._derive(sub, preds=self.preds)
 
     # -- evaluation ----------------------------------------------------------
     def evaluate(self, assignment: Sequence[str],
