@@ -1,0 +1,257 @@
+"""Chaos-serving benchmark: availability of the degraded-mode serving
+loop under scripted fault traces.
+
+Drives ``ServingEngine(execution="real")`` through four chaos scenarios
+(each a replayable :class:`ChaosTrace`, run under a hard SIGALRM
+timeout so a wedged loop fails the gate instead of hanging CI):
+
+* **transient_storm** — a burst of transient faults early in the run;
+  the per-op retry loop must absorb them (every request completes).
+* **straggler** — one lane injected with persistent per-op delay; the
+  health monitor must collect drift observations on that lane while the
+  run stays bitwise-correct.
+* **stall** — one lane stalls far past the watchdog budget; the loop
+  must respond (window retries, a breaker open, or typed sheds) and
+  drain — never hang.
+* **pu_lost_return** — a lane dies mid-run and returns later; the
+  breaker must open, the active set recover fleet-wide (recovery
+  latency recorded), and a half-open probe re-admit the lane after its
+  scripted return.
+
+Gates (enforced under ``--smoke`` too — these are the acceptance
+criteria of degraded-mode serving, not informational timings):
+every scenario drains with ``completed + shed == n`` and **zero
+bitwise failures** (completed ⇒ bitwise-identical to a fault-free solo
+run; otherwise a typed shed); the loss scenario records a breaker open,
+>= 1 fleet-wide recovery, and a probe re-admission of the returned
+lane.  Results merge into ``BENCH_serve.json`` under ``"chaos"``.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import signal
+
+import numpy as np
+
+from repro.core import (ArrivalTrace, ChaosEvent, ChaosTrace,
+                        EdgeSoCCostModel, ExecutionPolicy, FusedOp,
+                        HealthPolicy, Orchestrator, ServingEngine,
+                        chain_graph)
+
+from .common import env_meta
+
+DIM = 8
+SCENARIO_TIMEOUT_S = 120.0     # hard wall-clock ceiling per scenario
+
+
+class ScenarioTimeout(Exception):
+    pass
+
+
+@contextlib.contextmanager
+def _hard_timeout(seconds: float):
+    def handler(signum, frame):
+        raise ScenarioTimeout(
+            f"scenario exceeded the {seconds}s hard timeout — "
+            "a serving path blocked")
+    old = signal.signal(signal.SIGALRM, handler)
+    signal.setitimer(signal.ITIMER_REAL, seconds)
+    try:
+        yield
+    finally:
+        signal.setitimer(signal.ITIMER_REAL, 0.0)
+        signal.signal(signal.SIGALRM, old)
+
+
+def _payload(salt: int):
+    w = np.random.default_rng(salt).standard_normal(
+        (DIM, DIM)).astype(np.float32)
+    import jax.numpy as jnp
+    wj = jnp.asarray(w)
+
+    def fn(x, w=wj):
+        return jnp.tanh(x @ w)
+    return fn
+
+
+def _jax_chain(n: int, salt: int):
+    import jax.numpy as jnp
+    ops = [FusedOp(name=f"op{salt}_{k}", kind="matmul", flops=1e6,
+                   bytes_moved=1e4, fn=_payload(salt * 97 + k))
+           for k in range(n)]
+    x = jnp.asarray(np.random.default_rng(salt).standard_normal(
+        (1, DIM)).astype(np.float32))
+    return chain_graph(ops), {0: (x,)}
+
+
+def _engine(**kw):
+    gA, inA = _jax_chain(5, salt=1)
+    gB, inB = _jax_chain(4, salt=2)
+    orch = Orchestrator(EdgeSoCCostModel())
+    kw.setdefault("exec_policy", ExecutionPolicy(timeout=20.0))
+    kw.setdefault("health_policy", HealthPolicy(cooldown=0.005))
+    kw.setdefault("max_concurrent", 2)
+    return ServingEngine(orch, {"A": gA, "B": gB}, execution="real",
+                         inputs={"A": inA, "B": inB}, **kw)
+
+
+def _scenarios(n: int):
+    """(name, trace, chaos, engine_kw) per scenario; traces are seeded
+    so a failing run replays from the JSON artifacts alone."""
+    out = []
+
+    t = ArrivalTrace.poisson(["A", "B"], rate=50.0, n=n, seed=11)
+    out.append(("transient_storm", t, ChaosTrace([
+        ChaosEvent(time=0.0, kind="transient", count=4),
+    ], kind="transient_storm", seed=11), {}))
+
+    t = ArrivalTrace.poisson(["A", "B"], rate=50.0, n=n, seed=12)
+    out.append(("straggler", t, ChaosTrace([
+        ChaosEvent(time=0.0, kind="straggler", lane="CPU", delay=0.01,
+                   count=-1),
+    ], kind="straggler", seed=12), {
+        "health_policy": HealthPolicy(cooldown=0.005, calibration=4,
+                                      rescale_threshold=3.0)}))
+
+    t = ArrivalTrace.poisson(["A", "B"], rate=50.0, n=max(4, n // 2),
+                             seed=13)
+    out.append(("stall", t, ChaosTrace([
+        ChaosEvent(time=0.0, kind="stall", lane="CPU", delay=30.0,
+                   count=-1),
+    ], kind="stall", seed=13), {
+        "exec_policy": ExecutionPolicy(timeout=0.2, min_timeout=0.2,
+                                       max_retries=0),
+        "max_window_retries": 1}))
+
+    t = ArrivalTrace.poisson(["A", "B"], rate=50.0, n=max(12, n), seed=14)
+    out.append(("pu_lost_return", t, ChaosTrace([
+        ChaosEvent(time=t.arrivals[3].time, kind="pu_lost", lane="CPU"),
+        ChaosEvent(time=t.arrivals[min(8, len(t) - 2)].time,
+                   kind="pu_restored", lane="CPU"),
+    ], kind="pu_lost_return", seed=14), {}))
+
+    return out
+
+
+def _row(name: str, rep, timed_out: bool) -> dict:
+    return {
+        "scenario": name,
+        "timed_out": timed_out,
+        "n_requests": rep.n_requests if rep else None,
+        "completed": rep.completed if rep else 0,
+        "shed": rep.shed if rep else 0,
+        "shed_reasons": rep.shed_reasons if rep else {},
+        "recovered": rep.recovered if rep else 0,
+        "retried": rep.retried if rep else 0,
+        "recoveries": rep.recoveries if rep else 0,
+        "recovery_ms_p50": rep.recovery_ms_p50 if rep else 0.0,
+        "recovery_ms_p99": rep.recovery_ms_p99 if rep else 0.0,
+        "bitwise_checked": rep.bitwise_checked if rep else 0,
+        "bitwise_failures": rep.bitwise_failures if rep else -1,
+        "exec_wall_s": rep.exec_wall_s if rep else 0.0,
+        "breaker": {k: v for k, v in (rep.breaker or {}).items()
+                    if k != "targets"} if rep else {},
+        "cache": rep.cache if rep else {},
+    }
+
+
+def run(verbose: bool = True, smoke: bool = False,
+        out_path: str | None = None) -> dict:
+    n = 8 if smoke else 16
+    rows = []
+    for name, trace, chaos, kw in _scenarios(n):
+        eng = _engine(**kw)
+        rep, timed_out = None, False
+        try:
+            with _hard_timeout(SCENARIO_TIMEOUT_S):
+                rep = eng.serve(trace, chaos=chaos)
+        except ScenarioTimeout:
+            timed_out = True
+        rows.append(_row(name, rep, timed_out))
+
+    by = {r["scenario"]: r for r in rows}
+    drained = {r["scenario"]:
+               (not r["timed_out"]
+                and r["completed"] + r["shed"] == r["n_requests"])
+               for r in rows}
+    plr = by["pu_lost_return"]
+    chaosrec = {
+        "mode": "smoke" if smoke else "full",
+        "scenarios": rows,
+        "checks": {
+            "every scenario drains under the hard timeout "
+            "(completed + shed == n, no hang)": all(drained.values()),
+            "zero bitwise failures across all scenarios (completed => "
+            "bitwise-identical to fault-free solo run, else typed shed)":
+                all(r["bitwise_failures"] == 0 for r in rows),
+            "transient storm absorbed in-loop (all requests complete)":
+                by["transient_storm"]["shed"] == 0
+                and by["transient_storm"]["completed"] == n,
+            "stall scenario responds (window retries, breaker open, or "
+            "typed sheds) instead of hanging":
+                by["stall"]["retried"] >= 1
+                or by["stall"]["breaker"].get("opens", 0) >= 1
+                or by["stall"]["shed"] >= 1,
+            "mid-run PU loss opens the breaker and recovers the active "
+            "set fleet-wide (recovery latency recorded)":
+                plr["breaker"].get("opens", 0) >= 1
+                and plr["recoveries"] >= 1
+                and plr["recovery_ms_p50"] > 0.0,
+            "returned PU re-admitted via an observed half-open probe":
+                plr["breaker"].get("readmits", 0) >= 1,
+        },
+    }
+
+    if verbose:
+        print(f"== chaos-serving benchmark ({chaosrec['mode']}) ==")
+        for r in rows:
+            b = r["breaker"]
+            print(f"  {r['scenario']:16s} {r['completed']}/{r['n_requests']}"
+                  f" completed, shed {r['shed']} {r['shed_reasons']}, "
+                  f"retried {r['retried']}, recoveries {r['recoveries']} "
+                  f"(p50 {r['recovery_ms_p50']:.2f}ms), breaker "
+                  f"opens/probes/readmits "
+                  f"{b.get('opens', 0)}/{b.get('probes', 0)}/"
+                  f"{b.get('readmits', 0)}, bitwise "
+                  f"{r['bitwise_checked']} checked "
+                  f"{r['bitwise_failures']} failed")
+        for c, ok in chaosrec["checks"].items():
+            print(f"  [{'PASS' if ok else 'FAIL'}] {c}")
+
+    if out_path:
+        # merge into the serving benchmark record rather than clobbering
+        merged: dict = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                merged = json.load(f)
+        merged["chaos"] = chaosrec
+        merged["meta"] = env_meta()
+        with open(out_path, "w") as f:
+            json.dump(merged, f, indent=2)
+        if verbose:
+            print(f"wrote {out_path} (chaos section)")
+    return chaosrec
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale subset (CI)")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path ('' to skip writing; default "
+                         "BENCH_serve.json, or BENCH_serve.smoke.json "
+                         "under --smoke so the tracked full-run "
+                         "trajectory is never clobbered by a smoke run)")
+    args = ap.parse_args()
+    out_path = args.out
+    if out_path is None:
+        out_path = ("BENCH_serve.smoke.json" if args.smoke
+                    else "BENCH_serve.json")
+    out = run(smoke=args.smoke, out_path=out_path or None)
+    # every check gates, even under --smoke: drain-or-die, bitwise-or-
+    # typed-shed, and breaker recovery are acceptance criteria
+    raise SystemExit(0 if all(out["checks"].values()) else 1)

@@ -13,10 +13,21 @@ hundreds of ms (every warm plan is bitwise-identical to the cold solve;
 can no longer meet their SLO are shed gracefully instead of stalling the
 set.
 
+The last act switches to ``execution="real"``: requests really execute
+through the fault runtime while a :class:`ChaosTrace` kills a PU mid-run
+and brings it back — the per-target circuit breaker quarantines the
+lane, the active set warm-re-plans on the survivors, and a half-open
+probe re-admits the lane once it is observed healthy again.  Every
+completed request is checked bitwise against a fault-free solo run.
+
 Run:  PYTHONPATH=src python examples/streaming_serving.py
 """
-from repro.core import (ArrivalTrace, EdgeSoCCostModel, Orchestrator,
-                        ServingEngine)
+import numpy as np
+
+from repro.core import (ArrivalTrace, ChaosEvent, ChaosTrace,
+                        EdgeSoCCostModel, ExecutionPolicy, FusedOp,
+                        HealthPolicy, Orchestrator, ServingEngine,
+                        chain_graph)
 from repro.core.paperzoo import zoo
 
 MODELS = ("ViT-B/16 FP16", "ResNet-50 FP16", "SNN-VGG9 FP16")
@@ -51,3 +62,49 @@ print(f"bursty   n={rep2.n_requests:3d}: {rep2.completed} served, "
       f"mean occupancy {rep2.occupancy_mean:.2f}/{eng2.max_concurrent}")
 assert rep2.completed + rep2.shed == rep2.n_requests
 assert rep.replans_cold == 0 and rep2.replans_cold == 0
+
+# -- degraded-mode serving: real execution under chaos --------------------
+# small jax-payload chains (the zoo graphs carry no executable payloads)
+import jax.numpy as jnp
+
+
+def _chain(n, salt):
+    def payload(k):
+        w = jnp.asarray(np.random.default_rng(salt * 97 + k)
+                        .standard_normal((8, 8)).astype(np.float32))
+        return lambda x, w=w: jnp.tanh(x @ w)
+    g = chain_graph([FusedOp(name=f"c{salt}_{k}", kind="matmul",
+                             flops=1e6, bytes_moved=1e4, fn=payload(k))
+                     for k in range(n)])
+    x = jnp.asarray(np.random.default_rng(salt)
+                    .standard_normal((1, 8)).astype(np.float32))
+    return g, {0: (x,)}
+
+
+gA, inA = _chain(5, 1)
+gB, inB = _chain(4, 2)
+eng3 = ServingEngine(Orchestrator(EdgeSoCCostModel()), {"A": gA, "B": gB},
+                     execution="real", inputs={"A": inA, "B": inB},
+                     exec_policy=ExecutionPolicy(timeout=20.0),
+                     health_policy=HealthPolicy(cooldown=0.005),
+                     max_concurrent=2)
+trace3 = ArrivalTrace.poisson(["A", "B"], rate=50.0, n=12, seed=3)
+chaos = ChaosTrace([
+    ChaosEvent(time=trace3.arrivals[4].time, kind="pu_lost", lane="CPU"),
+    ChaosEvent(time=trace3.arrivals[8].time, kind="pu_restored",
+               lane="CPU"),
+], kind="pu_lost_return", seed=3)
+rep3 = eng3.serve(trace3, chaos=chaos)
+b = rep3.breaker
+print(f"chaos    n={rep3.n_requests:3d}: {rep3.completed} served "
+      f"({rep3.recovered} through a recovery), {rep3.shed} shed "
+      f"{rep3.shed_reasons}, bitwise {rep3.bitwise_checked} checked / "
+      f"{rep3.bitwise_failures} failed")
+print(f"         breaker: {b['opens']} opens, {b['probes']} probes, "
+      f"{b['readmits']} readmits; {rep3.recoveries} recoveries "
+      f"(p50 {rep3.recovery_ms_p50:.2f} ms)")
+for t in b["transitions"]:
+    print(f"           t={t['time']:.3f}s {t['pu']}: "
+          f"{t['frm']} -> {t['to']} ({t['reason']})")
+assert rep3.bitwise_failures == 0
+assert b["opens"] >= 1 and b["readmits"] >= 1

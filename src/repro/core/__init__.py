@@ -21,8 +21,10 @@ from .dynamic import DynamicScheduler, RuntimeCondition
 from .errors import (ExecutionError, ExecutionTimeoutError,
                      FaultRetryExceededError, PULostError)
 from .executor import ScheduleExecutor
-from .faults import (DEFAULT_POLICY, ExecutionPolicy, FaultPlan, FaultSpec,
-                     TransientFault)
+from .faults import (CHAOS_KINDS, ChaosEvent, ChaosTrace, DEFAULT_POLICY,
+                     ExecutionPolicy, FaultPlan, FaultSpec, TransientFault)
+from .health import (BreakerTransition, HealthMonitor, HealthPolicy,
+                     TargetHealth)
 from .laneprogram import LaneProgram, compile_lane_program, results_bitwise_equal
 from .graph import (DenseChain, ExecGraph, build_dense_chain,
                     build_sequential_graph)
@@ -45,8 +47,8 @@ from .search import (ConcurrentCaches, DAG_ALGORITHMS,
                      solve_concurrent_horizon,
                      solve_concurrent_joint, solve_concurrent_joint_reference,
                      solve_dag, solve_parallel, solve_sequential)
-from .serve import (Arrival, ArrivalTrace, RequestRecord, ServeReport,
-                    ServingEngine)
+from .serve import (Arrival, ArrivalTrace, RequestRecord, SHED_REASONS,
+                    ServeReport, ServingEngine)
 from .targets import (Target, TargetRegistry, pu_specs_for_targets,
                       resolve_targets, variant_tolerance)
 from .workload import Workload
@@ -59,7 +61,8 @@ __all__ = [
     "DynamicScheduler", "EdgeSoCCostModel", "InfeasibleScheduleError",
     "ExecutionError", "ExecutionTimeoutError", "FaultRetryExceededError",
     "PULostError", "DEFAULT_POLICY", "ExecutionPolicy", "FaultPlan",
-    "FaultSpec", "TransientFault",
+    "FaultSpec", "TransientFault", "CHAOS_KINDS", "ChaosEvent", "ChaosTrace",
+    "BreakerTransition", "HealthMonitor", "HealthPolicy", "TargetHealth",
     "Orchestrator", "PUSpec",
     "Plan", "RuntimeCondition", "Workload", "DEFAULT_MAX_STATES",
     "transition_cost", "ScheduleExecutor", "LaneProgram",
@@ -83,6 +86,6 @@ __all__ = [
     "solve_concurrent_aligned_reference", "solve_concurrent_horizon",
     "solve_concurrent_joint", "solve_concurrent_joint_reference",
     "solve_parallel", "solve_sequential",
-    "Arrival", "ArrivalTrace", "RequestRecord", "ServeReport",
-    "ServingEngine",
+    "Arrival", "ArrivalTrace", "RequestRecord", "SHED_REASONS",
+    "ServeReport", "ServingEngine",
 ]

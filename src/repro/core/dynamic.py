@@ -79,6 +79,17 @@ class RuntimeCondition:
             slowdown=dict(self.slowdown),
             unavailable=frozenset(self.unavailable) | set(pus))
 
+    def restore(self, *pus: str) -> "RuntimeCondition":
+        """This condition with ``pus`` available again (and any slowdown
+        override on them dropped) — the inverse of :meth:`lose`, how a
+        half-open circuit-breaker probe re-admits a quarantined PU into
+        the planning table (:mod:`repro.core.health`)."""
+        back = set(pus)
+        return RuntimeCondition(
+            slowdown={p: f for p, f in self.slowdown.items()
+                      if p not in back},
+            unavailable=frozenset(self.unavailable) - back)
+
 
 # InfeasibleScheduleError historically lived here; it now sits in
 # ``repro.core.errors`` so the concurrent solvers can raise it too

@@ -35,7 +35,18 @@ class ExecutionTimeoutError(ExecutionError):
     factor (see :class:`~repro.core.faults.ExecutionPolicy`); a lane that
     hangs raises this — naming the lane, op/segment, and elapsed vs
     budget — instead of deadlocking the run forever.
+
+    ``inflight`` is a structured snapshot of ``RunContext.current`` at
+    the deadline (``{lane: in-flight work description}``): the lanes
+    that were still executing when the watchdog fired.  Health tracking
+    (:mod:`repro.core.health`) uses it to attribute the timeout to the
+    stalled lane(s) instead of blaming the whole PU set.
     """
+
+    def __init__(self, message: str,
+                 inflight: dict[str, str] | None = None):
+        super().__init__(message)
+        self.inflight: dict[str, str] = dict(inflight or {})
 
 
 class PULostError(ExecutionError):
@@ -64,4 +75,16 @@ class PULostError(ExecutionError):
 class FaultRetryExceededError(ExecutionError):
     """A transient (``RecoverableError``) failure persisted through every
     bounded retry attempt; raised ``from`` the final transient error with
-    the failing point and attempt count in the message."""
+    the failing point and attempt count in the message.
+
+    Carries the failing point structurally (``lane``/``request``/``op``,
+    any of which may be ``None`` when the caller had no point context) so
+    the serving layer can attribute the exhaustion to a lane's health
+    record and shed exactly the affected request."""
+
+    def __init__(self, message: str, lane: str | None = None,
+                 request: int | None = None, op: int | None = None):
+        super().__init__(message)
+        self.lane = lane
+        self.request = request
+        self.op = op

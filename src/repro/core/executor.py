@@ -123,7 +123,7 @@ class ScheduleExecutor:
 
     def _concurrent_lane_queues(self, graphs: Sequence[OpGraph], schedule,
                                 completed: Sequence[Mapping[int, Any]] | None
-                                = None
+                                = None, partial: bool = False
                                 ) -> tuple[dict[str, list[tuple[int, int]]],
                                            set[tuple[int, int]]]:
         """Lane queues in schedule-step order + the co-scheduled op set.
@@ -135,7 +135,11 @@ class ScheduleExecutor:
         dispatched so the co-execution granularity the contention laws
         priced is preserved.  ``completed`` (a resume frontier) seeds the
         per-request done sets: frontier ops need no schedule step and
-        satisfy dependency/coverage checks.
+        satisfy dependency/coverage checks.  ``partial=True`` skips the
+        final full-coverage check — a *window* of a longer plan (the
+        real-execution serving loop runs plans chunk by chunk) is a valid
+        unit of execution as long as precedence holds; dependency
+        validation is never skipped.
         """
         m = len(graphs)
         if schedule.n_requests != m:
@@ -163,12 +167,13 @@ class ScheduleExecutor:
                 seen[r].add(oi)
                 if len(active) > 1:
                     barriers.add((r, oi))
-        for r, g in enumerate(graphs):
-            if seen[r] != set(range(len(g.ops))):
-                missing = sorted(set(range(len(g.ops))) - seen[r])
-                raise ValueError(
-                    f"schedule does not cover request {r}: missing ops "
-                    f"{missing[:5]}{'...' if len(missing) > 5 else ''}")
+        if not partial:
+            for r, g in enumerate(graphs):
+                if seen[r] != set(range(len(g.ops))):
+                    missing = sorted(set(range(len(g.ops))) - seen[r])
+                    raise ValueError(
+                        f"schedule does not cover request {r}: missing ops "
+                        f"{missing[:5]}{'...' if len(missing) > 5 else ''}")
         return lane_queues, barriers
 
     def _dag_lane_queues(self, graph: OpGraph, schedule,
@@ -278,7 +283,9 @@ class ScheduleExecutor:
                        policy: ExecutionPolicy | None = None,
                        faults: FaultPlan | None = None,
                        completed: Sequence[Mapping[int, Any]] | None = None,
-                       estimate: float | None = None
+                       estimate: float | None = None,
+                       partial: bool = False,
+                       op_timings: list | None = None
                        ) -> list[dict[int, Any]]:
         """Run an M-model ``ConcurrentSchedule`` across the PU lanes.
 
@@ -293,15 +300,21 @@ class ScheduleExecutor:
 
         ``policy`` / ``faults`` / ``completed`` / ``estimate`` behave as
         in :meth:`run_scheduled` (``completed`` is one frontier dict per
-        request).
+        request).  ``partial=True`` accepts a schedule that covers only a
+        *window* of each request's remaining ops (precedence is still
+        validated against the frontier) — the unit the real-execution
+        serving loop advances by.  ``op_timings``, when a list, receives
+        one ``(pu, request, op, wall_seconds)`` tuple per completed op —
+        the measurement feed for EWMA latency-drift health tracking.
         """
         m = len(graphs)
         lane_queues, _ = self._concurrent_lane_queues(graphs, schedule,
-                                                      completed)
+                                                      completed, partial)
         ext = list(external_inputs or [None] * m)
         return self._run_lanes(list(graphs), lane_queues, ext,
                                policy=policy, faults=faults,
-                               completed=completed, estimate=estimate)
+                               completed=completed, estimate=estimate,
+                               op_timings=op_timings)
 
     # ------------------------------------------------------------------
     def _run_lanes(self, graphs: Sequence[OpGraph],
@@ -310,7 +323,8 @@ class ScheduleExecutor:
                    policy: ExecutionPolicy | None,
                    faults: FaultPlan | None,
                    completed: Sequence[Mapping[int, Any]] | None,
-                   estimate: float | None) -> list[dict[int, Any]]:
+                   estimate: float | None,
+                   op_timings: list | None = None) -> list[dict[int, Any]]:
         """Shared lane runtime of both interpreter entry points.
 
         One daemon worker thread per non-empty lane; per-op events bound
@@ -359,7 +373,11 @@ class ScheduleExecutor:
                 dep_vals = tuple(results[r][p] for p in g.pred[i])
                 return op.fn(*(tuple(e) + dep_vals))
 
-            results[r][i] = run_with_retries(run, attempt, what)
+            t0 = time.monotonic() if op_timings is not None else 0.0
+            results[r][i] = run_with_retries(run, attempt, what,
+                                             lane=pu, request=r, op=i)
+            if op_timings is not None:
+                op_timings.append((pu, r, i, time.monotonic() - t0))
             run.current.pop(pu, None)
             done_ev[(r, i)].set()
 
@@ -422,12 +440,19 @@ class ScheduleExecutor:
         return compile_lane_program([graph], lane_queues, single=True,
                                     targets=self.targets)
 
-    def compile_concurrent(self, graphs: Sequence[OpGraph],
-                           schedule) -> LaneProgram:
+    def compile_concurrent(self, graphs: Sequence[OpGraph], schedule,
+                           completed: Sequence[Mapping[int, Any]] | None
+                           = None, partial: bool = False) -> LaneProgram:
         """Compile an M-model ``ConcurrentSchedule`` into a
         :class:`LaneProgram` (co-scheduled steps become single-op barrier
-        segments); ``program.run(inputs)`` matches ``run_concurrent``."""
-        lane_queues, barriers = self._concurrent_lane_queues(graphs, schedule)
+        segments); ``program.run(inputs)`` matches ``run_concurrent``.
+
+        ``completed``/``partial`` compile a *window* program over the
+        remaining ops of a partially-executed plan; run it with the same
+        frontier (``program.run(..., completed=...)``) so cross-window
+        inputs resolve from already-computed values."""
+        lane_queues, barriers = self._concurrent_lane_queues(
+            graphs, schedule, completed, partial)
         return compile_lane_program(list(graphs), lane_queues,
                                     barriers=barriers, single=False,
                                     targets=self.targets)

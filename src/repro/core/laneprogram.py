@@ -533,10 +533,12 @@ class LaneProgram:
                     run.faults.fire(seg.lane, r, i, run)
             seg.execute(results, ext)
 
+        r0, i0 = seg.items[0]
         if run is not None:
             run.current[seg.lane] = what
         try:
-            run_with_retries(run, attempt, what)
+            run_with_retries(run, attempt, what,
+                             lane=seg.lane, request=r0, op=i0)
         except (ExecutionError, RecoverableError):
             raise
         except Exception:
@@ -547,7 +549,8 @@ class LaneProgram:
             # and retry once, mirroring the probe's fallback rule
             seg.mode = PYTHON
             seg._jfn = None
-            run_with_retries(run, attempt, what)
+            run_with_retries(run, attempt, what,
+                             lane=seg.lane, request=r0, op=i0)
         finally:
             if run is not None:
                 run.current.pop(seg.lane, None)
@@ -555,7 +558,9 @@ class LaneProgram:
     def run(self, external_inputs=None, *,
             policy: ExecutionPolicy | None = None,
             faults: FaultPlan | None = None,
-            estimate: float | None = None):
+            estimate: float | None = None,
+            completed=None,
+            segment_timings: list | None = None):
         """Execute the program; same results shape as the interpreter.
 
         ``policy`` tunes the watchdog/retry runtime (``estimate`` — e.g.
@@ -565,9 +570,20 @@ class LaneProgram:
         deadline-bounded; on a permanent PU loss the raised
         :class:`~repro.core.errors.PULostError` carries the execution
         frontier (results of every segment completed before the loss).
+
+        ``completed`` seeds the results with an execution frontier (one
+        ``{op: value}`` dict for single-graph programs, a sequence of
+        them for M-request programs): a program compiled over a *window*
+        of remaining ops (``compile_concurrent(..., completed=...)``)
+        reads its cross-window inputs from the frontier instead of
+        recomputing them.  ``segment_timings``, when a list, receives one
+        ``(lane, items, wall_seconds)`` tuple per completed segment — the
+        compiled path's advance-event / drift-measurement feed, mirroring
+        the interpreter's ``op_timings``.
         """
         if self.single:
             ext = [dict(external_inputs or {})]
+            seeds = [dict(completed or {})]
         else:
             ext_seq = list(external_inputs or [None] * self.n_requests)
             if len(ext_seq) != self.n_requests:
@@ -575,7 +591,16 @@ class LaneProgram:
                     f"program covers {self.n_requests} requests, got "
                     f"{len(ext_seq)} input mapping(s)")
             ext = [dict(e or {}) for e in ext_seq]
-        results: list[dict[int, Any]] = [{} for _ in range(self.n_requests)]
+            seeds = [dict(c or {}) for c in
+                     (completed or [None] * self.n_requests)]
+        results: list[dict[int, Any]] = seeds
+
+        def exec_seg(seg: Segment, run: RunContext | None) -> None:
+            t0 = time.monotonic() if segment_timings is not None else 0.0
+            self._exec_segment(seg, results, ext, run)
+            if segment_timings is not None:
+                segment_timings.append(
+                    (seg.lane, tuple(seg.items), time.monotonic() - t0))
 
         if self.serial_order is not None:
             # inherently serial: no cross-lane waits exist, so the
@@ -585,7 +610,7 @@ class LaneProgram:
                    if faults is not None else None)
             try:
                 for seg in self.serial_order:
-                    self._exec_segment(seg, results, ext, run)
+                    exec_seg(seg, run)
             except PULostError as e:
                 if e.partial is None:
                     e.partial = [dict(res) for res in results]
@@ -609,7 +634,7 @@ class LaneProgram:
                         if not done[d].is_set():
                             run.wait(done[d], dwhat)
                     run.check_abort()
-                    self._exec_segment(seg, results, ext, run)
+                    exec_seg(seg, run)
                     done[seg.index].set()
             except _Aborted:
                 pass  # a peer already failed; unwind silently
@@ -664,6 +689,11 @@ def compile_lane_program(graphs: Sequence[OpGraph],
     Same-lane predecessors never cut (earlier queue position ⇒ an earlier
     segment on the same FIFO lane ⇒ already complete).
 
+    A predecessor absent from every lane queue is a *frontier* op (window
+    programs over a partially-executed plan): it cuts like a cross-lane
+    handoff and resolves as a flat input read from the ``completed``
+    seeds at run time, with no segment dependency.
+
     ``targets`` optionally binds lane names to
     :class:`~repro.core.targets.Target`\\ s: a bound segment keeps the
     reference payloads as its probe oracle and additionally resolves the
@@ -683,7 +713,8 @@ def compile_lane_program(graphs: Sequence[OpGraph],
         cur: Segment | None = None
         for (r, i) in items:
             barrier = (r, i) in barriers
-            cross = any(lane_of[(r, p)] != pu for p in graphs[r].pred[i])
+            cross = any(lane_of.get((r, p)) != pu
+                        for p in graphs[r].pred[i])
             if (cur is None or barrier or cur.barrier
                     or cur.items[-1][0] != r or cross):
                 cur = Segment(index=len(segments), lane=pu, barrier=barrier,
@@ -721,8 +752,8 @@ def compile_lane_program(graphs: Sequence[OpGraph],
                     continue
                 j = flat_index.setdefault(src, len(flat_index))
                 spec.append(("f", j))
-                producer = seg_of[src]
-                if producer.lane != seg.lane:
+                producer = seg_of.get(src)
+                if producer is not None and producer.lane != seg.lane:
                     deps.add(producer.index)
             seg.argspecs.append(spec)
         seg.flat_refs = sorted(flat_index, key=flat_index.get)

@@ -315,6 +315,30 @@ class Orchestrator:
                 victim.close()
             self.stats[stat] += 1
 
+    def cache_stats(self) -> dict:
+        """Bounded-cache pressure snapshot: the session's LRU eviction
+        counters plus the live pools' ``ConcurrentCaches`` trim counters
+        and current cache sizes.  ``ServeReport.cache`` surfaces the
+        over-a-run delta of the counters so cache-pressure-induced
+        serving slowdowns are visible in serving output, not just in
+        ``orchestrator.stats``.  (Trim counters cover the *live* pools;
+        a pool evicted whole takes its counts with it — the eviction
+        itself shows up in ``pool_evictions``.)"""
+        counters = {k: self.stats[k] for k in (
+            "plan_evictions", "pool_evictions", "cond_view_evictions",
+            "program_evictions", "warm_evictions", "invalidated")}
+        trims = {"pair_trims": 0, "group_table_trims": 0,
+                 "group_scope_trims": 0}
+        for pool in self._pools.values():
+            for k in trims:
+                trims[k] += pool.stats[k]
+        return {**counters, **trims,
+                "sizes": {"plans": len(self._plans),
+                          "pools": len(self._pools),
+                          "cond_views": len(self._cond_views),
+                          "warm_solvers": len(self._warm),
+                          "programs": len(self._programs)}}
+
     # -- register -----------------------------------------------------------
     def register(self, graph: OpGraph | Sequence[FusedOp],
                  table: CostTable | None = None) -> int:

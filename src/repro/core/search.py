@@ -1247,19 +1247,28 @@ class ConcurrentCaches:
         self.group_tables: dict[tuple, GroupCostCache] = {}
         self.max_table_bytes = max_table_bytes
         self.max_group_scopes = max_group_scopes
+        # monotonic trim counters, surfaced by Orchestrator.cache_stats()
+        # (and from there ServeReport): sustained growth during a serving
+        # run is the cache-pressure signal behind re-plan slowdowns
+        self.stats = {"pair_trims": 0, "group_table_trims": 0,
+                      "group_scope_trims": 0}
 
     def trim(self) -> None:
         """Evict oldest ``pair``/``group_tables`` entries past the byte
         budget (lazily built tables are accounted as they fill) and
         oldest ``group`` scopes past the scope cap.  Entries still
-        referenced by an in-flight solve stay alive until it finishes."""
+        referenced by an in-flight solve stay alive until it finishes.
+        Every eviction bumps the matching ``stats`` counter."""
         half = self.max_table_bytes // 2
-        for d in (self.pair, self.group_tables):
+        for d, key in ((self.pair, "pair_trims"),
+                       (self.group_tables, "group_table_trims")):
             while len(d) > 1 and \
                     sum(v.nbytes() for v in d.values()) > half:
                 d.pop(next(iter(d)))
+                self.stats[key] += 1
         while len(self.group) > self.max_group_scopes:
             self.group.pop(next(iter(self.group)))
+            self.stats["group_scope_trims"] += 1
 
 
 def _require_oracle_tables(wls: Sequence[Workload],

@@ -22,26 +22,63 @@ artifact and a scheduler that serves requests (ROADMAP item 1).
   *request* latency (virtual queueing + execution time), plus the
   warm/cold re-plan split from ``orchestrator.stats``.
 
-Execution is virtual-time: a planned :class:`ConcurrentStep` "runs" by
-advancing the virtual clock by its cost-model latency and recording
-progress via ``advance`` — the same discrete-event convention as the
-cost-model benchmarks, so the loop exercises the full planning path at
-thousands of requests without burning hours of wall clock.  Re-plan
-latencies are the real wall-clock cost of the plan calls.
+Two execution modes share the loop:
+
+* ``execution="virtual"`` (default) — a planned :class:`ConcurrentStep`
+  "runs" by advancing the virtual clock by its cost-model latency and
+  recording progress via ``advance`` — the same discrete-event
+  convention as the cost-model benchmarks, so the loop exercises the
+  full planning path at thousands of requests without burning hours of
+  wall clock.  Re-plan latencies are the real wall-clock cost of the
+  plan calls.
+
+* ``execution="real"`` — advance events come from *completed execution*:
+  at every boundary the loop carves the next window of planned steps
+  (up to the arrival horizon or the first request completion), executes
+  it through the fault runtime (``ScheduleExecutor.run_concurrent`` on
+  the interpreter oracle, or compiled :class:`LaneProgram` segments
+  with ``compile_exec=True``), and only then advances the orchestrator
+  and the virtual clock by what actually finished.  The virtual clock
+  still sequences arrivals/SLOs — it is the serving timeline chaos
+  scripts (:class:`~repro.core.faults.ChaosTrace`) and breaker
+  cooldowns run on.  A per-target :class:`~repro.core.health.
+  HealthMonitor` watches every window: transient faults retry in-loop,
+  a degrading PU trips its circuit breaker and is quarantined via
+  ``Orchestrator.on_condition`` (warm-re-planning the entire active set
+  on the survivors), a half-open probe re-admits it on observed
+  success, and unrecoverable requests are shed with a typed reason
+  (:data:`SHED_REASONS`) — never a hang, and never a silent wrong
+  answer: every completed request's outputs are checked bitwise against
+  a fault-free solo run (``RequestRecord.bitwise_ok``).
 """
 from __future__ import annotations
 
 import asyncio
 import dataclasses
+import json
 import time
 from typing import Mapping, Sequence
 
 import numpy as np
 
-from .errors import InfeasibleScheduleError
+from .errors import (ExecutionTimeoutError, FaultRetryExceededError,
+                     InfeasibleScheduleError, PULostError)
+from .faults import ChaosTrace, ExecutionPolicy, FaultPlan
+from .health import HealthMonitor, HealthPolicy
+from .laneprogram import results_bitwise_equal
 from .op import FusedOp, OpGraph, chain_graph
 from .orchestrator import Orchestrator, Plan
+from .schedule import ConcurrentSchedule
 from .search import DEFAULT_HORIZON_STATES
+
+# the typed shed vocabulary: every shed request carries exactly one
+#   slo        — the optimistic remaining-work bound misses the deadline
+#   infeasible — no available PU supports some remaining op
+#   timeout    — a window kept exceeding the watchdog budget past the
+#                in-loop retry allowance
+#   fault      — a fault persisted through every retry and could be
+#                pinned on this request
+SHED_REASONS = ("slo", "infeasible", "timeout", "fault")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +103,20 @@ class ArrivalTrace:
 
     def __len__(self) -> int:
         return len(self.arrivals)
+
+    def to_json(self) -> str:
+        """Serialize the exact stream (floats round-trip via repr): a
+        failing serving run ships as a replayable artifact, not a
+        seed + generator-version pair."""
+        return json.dumps({
+            "kind": self.kind,
+            "arrivals": [dataclasses.asdict(a) for a in self.arrivals]})
+
+    @classmethod
+    def from_json(cls, s: str) -> "ArrivalTrace":
+        d = json.loads(s)
+        return cls(arrivals=[Arrival(**a) for a in d["arrivals"]],
+                   kind=d.get("kind", "custom"))
 
     @classmethod
     def poisson(cls, models: Sequence[str], rate: float, n: int,
@@ -117,7 +168,12 @@ class RequestRecord:
     admitted_at: float | None = None
     finished_at: float | None = None
     shed: bool = False
-    shed_reason: str = ""
+    shed_reason: str = ""          # one of SHED_REASONS when shed
+    # real-execution bookkeeping
+    retries: int = 0               # window re-executions touching this req
+    recovered: bool = False        # survived at least one fault recovery
+    bitwise_ok: bool | None = None  # outputs == fault-free solo run
+    results: dict = dataclasses.field(default_factory=dict, repr=False)
 
     @property
     def latency(self) -> float | None:
@@ -133,7 +189,16 @@ def _pct(xs: Sequence[float], q: float) -> float:
 
 @dataclasses.dataclass
 class ServeReport:
-    """What a serving run sustained, and what it cost to plan it."""
+    """What a serving run sustained, and what it cost to plan it.
+
+    The availability block (``recovered`` … ``breaker``) is populated by
+    real-execution runs: recovery latency is the wall-clock cost from
+    catching a fault to a successful warm re-plan of the active set, and
+    ``breaker`` carries the :class:`~repro.core.health.HealthMonitor`
+    stats including the full breaker-transition log.  ``cache`` is the
+    over-the-run delta of ``Orchestrator.cache_stats()`` (LRU evictions
+    + ``ConcurrentCaches`` trims), so cache-pressure-induced slowdowns
+    show up in serving output."""
     n_requests: int
     completed: int
     shed: int
@@ -147,13 +212,26 @@ class ServeReport:
     replans_warm: int
     replans_cold: int
     occupancy_mean: float         # time-weighted mean concurrent set size
+    # availability accounting (real-execution runs)
+    recovered: int = 0            # completed despite >= 1 fault recovery
+    retried: int = 0              # window re-executions
+    recoveries: int = 0           # fault -> re-plan recovery cycles
+    recovery_ms_p50: float = 0.0  # wall-clock fault -> re-planned
+    recovery_ms_p99: float = 0.0
+    shed_reasons: dict = dataclasses.field(default_factory=dict)
+    bitwise_checked: int = 0      # completions verified vs solo reference
+    bitwise_failures: int = 0     # MUST stay 0: silent-wrong-answer count
+    exec_wall_s: float = 0.0      # wall clock spent really executing
+    breaker: dict = dataclasses.field(default_factory=dict)
+    cache: dict = dataclasses.field(default_factory=dict)
     requests: list[RequestRecord] = dataclasses.field(
         default_factory=list, repr=False)
 
     def to_dict(self) -> dict:
-        d = dataclasses.asdict(self)
-        d.pop("requests")
-        return d
+        # not dataclasses.asdict: that would deep-copy every request's
+        # results payloads just to drop them
+        return {f.name: getattr(self, f.name)
+                for f in dataclasses.fields(self) if f.name != "requests"}
 
 
 class ServingEngine:
@@ -184,6 +262,20 @@ class ServingEngine:
       :class:`InfeasibleScheduleError` (e.g. a condition change left an
       op with no supporting PU), the offending requests are shed and the
       survivors re-planned.
+    * **Degradation** (``execution="real"``): a window that keeps timing
+      out is shed ``"timeout"``; a fault that survives every retry and
+      names a request sheds exactly that request ``"fault"``; a PU whose
+      breaker opens is quarantined and the active set warm-re-planned on
+      the survivors (see module docstring).
+
+    Real-execution knobs: ``inputs`` maps model name → ``{op index:
+    args tuple}`` external inputs (shared by every request of the
+    model); ``exec_policy`` is the per-window watchdog/retry policy;
+    ``health_policy`` tunes the breaker; ``max_window_retries`` bounds
+    in-loop re-execution of a failed window before shedding;
+    ``compile_exec=True`` executes windows as compiled
+    :class:`~repro.core.laneprogram.LaneProgram` segments instead of the
+    per-op interpreter (same bitwise guarantee — jit is probe-verified).
     """
 
     def __init__(self, orch: Orchestrator,
@@ -191,17 +283,35 @@ class ServingEngine:
                  objective: str = "latency",
                  horizon_states: int | None = DEFAULT_HORIZON_STATES,
                  max_concurrent: int = 3,
-                 slo_factor: float | None = None):
+                 slo_factor: float | None = None,
+                 execution: str = "virtual",
+                 inputs: Mapping[str, Mapping[int, tuple]] | None = None,
+                 exec_policy: ExecutionPolicy | None = None,
+                 health_policy: HealthPolicy | None = None,
+                 max_window_retries: int = 2,
+                 compile_exec: bool = False):
         if not models:
             raise ValueError("ServingEngine needs at least one model")
         if max_concurrent < 1:
             raise ValueError(
                 f"max_concurrent must be >= 1, got {max_concurrent}")
+        if execution not in ("virtual", "real"):
+            raise ValueError(
+                f"execution must be 'virtual' or 'real', got {execution!r}")
         self.orch = orch
         self.objective = objective
         self.horizon_states = horizon_states
         self.max_concurrent = max_concurrent
         self.slo_factor = slo_factor
+        self.execution = execution
+        self.exec_policy = exec_policy
+        self.health_policy = health_policy
+        self.max_window_retries = max_window_retries
+        self.compile_exec = compile_exec
+        self.health: HealthMonitor | None = None   # set per serve() run
+        self._inputs: dict[str, dict] = {
+            m: dict(v) for m, v in (inputs or {}).items()}
+        self._refs: dict[str, dict] = {}  # model -> fault-free solo results
         self._graphs: dict[str, OpGraph] = {}
         self._base: dict[str, int] = {}       # model -> provider handle
         self._tables: dict[str, object] = {}  # model -> profiled CostTable
@@ -235,13 +345,31 @@ class ServingEngine:
     def _release(self, model: str, h: int) -> None:
         self._free[model].append(h)
 
-    # -- serving loop --------------------------------------------------------
-    def serve(self, trace: ArrivalTrace) -> ServeReport:
-        """Run a trace to drain (synchronous wrapper over the async
-        loop)."""
-        return asyncio.run(self.serve_async(trace))
+    def _ref(self, model: str) -> dict:
+        """Fault-free solo reference outputs of ``model`` (memoized):
+        the oracle every real-mode completion is checked bitwise
+        against."""
+        ref = self._refs.get(model)
+        if ref is None:
+            ref = self.orch.executor.run_monolithic(
+                self._graphs[model], self._inputs.get(model))
+            self._refs[model] = ref
+        return ref
 
-    async def serve_async(self, trace: ArrivalTrace) -> ServeReport:
+    # -- serving loop --------------------------------------------------------
+    def serve(self, trace: ArrivalTrace,
+              chaos: ChaosTrace | None = None) -> ServeReport:
+        """Run a trace to drain (synchronous wrapper over the async
+        loop).  ``chaos`` scripts seeded faults across the run on the
+        serving clock (real execution only)."""
+        return asyncio.run(self.serve_async(trace, chaos))
+
+    async def serve_async(self, trace: ArrivalTrace,
+                          chaos: ChaosTrace | None = None) -> ServeReport:
+        if chaos is not None and self.execution != "real":
+            raise ValueError(
+                "a ChaosTrace needs execution='real' — virtual serving "
+                "never dispatches, so there is nothing to inject into")
         queue: asyncio.Queue = asyncio.Queue()
 
         async def produce() -> None:
@@ -251,13 +379,13 @@ class ServingEngine:
 
         producer = asyncio.create_task(produce())
         try:
-            report = await self._schedule(queue, len(trace.arrivals))
+            report = await self._schedule(queue, len(trace.arrivals), chaos)
         finally:
             producer.cancel()
         return report
 
-    async def _schedule(self, queue: asyncio.Queue,
-                        n_expected: int) -> ServeReport:
+    async def _schedule(self, queue: asyncio.Queue, n_expected: int,
+                        chaos: ChaosTrace | None = None) -> ServeReport:
         orch = self.orch
         now = 0.0
         t0 = None                      # virtual time of first arrival
@@ -270,8 +398,23 @@ class ServingEngine:
         busy_time = 0.0                # integral of |active| over time
         warm0 = orch.stats["replans_warm"]
         cold0 = orch.stats["replans_cold"]
+        cache0 = orch.cache_stats()
         plan: Plan | None = None
         cursor = 0                     # next step of `plan` to run
+
+        # -- real-execution state -------------------------------------------
+        real = self.execution == "real"
+        health = HealthMonitor(self.health_policy) if real else None
+        self.health = health
+        base_cond = orch.condition     # externally-imposed condition
+        faults = FaultPlan([], seed=chaos.seed if chaos else 0)
+        chaos_events = list(chaos.events) if chaos is not None else []
+        chaos_idx = 0
+        rid_specs: list = []           # (ChaosEvent, armed FaultSpec) pairs
+        recovery_ms: list[float] = []
+        recoveries = 0
+        retried = 0
+        exec_wall = 0.0
 
         def record_of(a: Arrival) -> RequestRecord:
             wl = orch.workload(self._base[a.model])
@@ -341,6 +484,244 @@ class ServingEngine:
                         shed(rec, "infeasible")
                     plan = None
 
+        # -- real-execution helpers -----------------------------------------
+        def arm_chaos() -> None:
+            """Fold chaos events whose scripted time has arrived into the
+            live fault plan (the executor only ever sees armed specs)."""
+            nonlocal chaos_idx
+            while chaos_idx < len(chaos_events) \
+                    and chaos_events[chaos_idx].time <= now:
+                ev = chaos_events[chaos_idx]
+                chaos_idx += 1
+                if ev.kind == "pu_restored":
+                    faults.revive(ev.lane)
+                    continue
+                spec = ev.spec()
+                if ev.rid is not None:
+                    spec.request = -1      # bound per window (slots shift)
+                    rid_specs.append((ev, spec))
+                faults.add(spec)
+
+        def bind_rid_specs(handles) -> None:
+            """Re-translate rid-targeted specs to this window's execution
+            slots (slot = position in the plan's handle tuple)."""
+            slot_of = {inflight[h].rid: s for s, h in enumerate(handles)
+                       if h in inflight}
+            for ev, spec in rid_specs:
+                spec.request = slot_of.get(ev.rid, -1)
+
+        def apply_health() -> None:
+            """Fold the health-derived condition into the orchestrator
+            and warm re-plan the entire active set on the survivors
+            (requests with no surviving PU shed typed)."""
+            nonlocal plan
+            orch.on_condition(health.condition(base_cond))
+            plan = None
+            replan()
+
+        def check_bitwise(rec: RequestRecord) -> None:
+            rec.bitwise_ok = results_bitwise_equal(
+                rec.results, self._ref(rec.model))
+
+        def finish(h: int) -> None:
+            nonlocal plan, cursor
+            rec = inflight.pop(h)
+            rec.finished_at = now
+            rec.handle = None
+            if real:
+                check_bitwise(rec)
+            plan = timed(orch.retire, h, self.objective,
+                         self.horizon_states)
+            cursor = 0
+            self._release(rec.model, h)
+
+        def shed_inflight(h: int, reason: str) -> None:
+            rec = inflight.pop(h)
+            orch.retire(h, self.objective, self.horizon_states)
+            shed(rec, reason)
+
+        def recover(t_fail: float) -> None:
+            """One fault -> re-plan recovery cycle, timed wall-clock from
+            the catch to the re-planned active set."""
+            nonlocal recoveries
+            recoveries += 1
+            for rec in inflight.values():
+                rec.recovered = True
+            apply_health()
+            recovery_ms.append((time.perf_counter() - t_fail) * 1e3)
+
+        def commit(handles, results, steps) -> None:
+            """Fold executed results into the request frontiers, advance
+            the orchestrator by what newly completed, and move the
+            serving clock past the fully-completed step prefix."""
+            nonlocal now, busy_time, cursor
+            for slot, h in enumerate(handles):
+                rec = inflight.get(h)
+                if rec is None:
+                    continue
+                fresh = [op for op in results[slot]
+                         if op not in rec.results]
+                rec.results.update(results[slot])
+                if fresh:
+                    orch.advance(h, len(fresh))
+                    rec.ops_done += len(fresh)
+            for st in steps:
+                if not all(op is None
+                           or op in inflight[handles[slot]].results
+                           for slot, op in enumerate(st.ops)
+                           if handles[slot] in inflight):
+                    break
+                cursor += 1
+                busy_time += len(inflight) * st.cost
+                now += st.cost
+            for h in [h for h, rec in inflight.items()
+                      if rec.ops_done >= rec.ops_total]:
+                finish(h)
+
+        def select_window() -> int:
+            """End index (exclusive) of the step window to execute this
+            boundary: stop at the arrival horizon or after a step that
+            completes a request — the same boundaries the virtual loop
+            observes, so both modes re-plan at identical membership
+            events."""
+            steps = plan.schedule.steps
+            horizon = pending.time if pending is not None else None
+            t = now
+            done = {h: inflight[h].ops_done for h in plan.handles}
+            end = cursor
+            while end < len(steps):
+                if horizon is not None and t >= horizon:
+                    break
+                st = steps[end]
+                end += 1
+                t += st.cost
+                fin = False
+                for slot, op in enumerate(st.ops):
+                    if op is None:
+                        continue
+                    h = plan.handles[slot]
+                    done[h] += 1
+                    if done[h] >= inflight[h].ops_total:
+                        fin = True
+                if fin:
+                    break
+            return end
+
+        def exec_window(end: int) -> None:
+            """Really execute plan steps [cursor:end) through the fault
+            runtime, with in-loop retries, breaker-driven quarantine +
+            fleet-wide re-plan, and typed shedding."""
+            nonlocal plan, retried, exec_wall
+            handles = plan.handles
+            steps = list(plan.schedule.steps[cursor:end])
+            graphs = [orch._reg(h).graph for h in handles]
+            ext = [self._inputs.get(inflight[h].model) for h in handles]
+            est = sum(st.cost for st in steps)
+            sub = ConcurrentSchedule(steps=steps, latency=est, energy=0.0,
+                                     objective=self.objective,
+                                     mode="window")
+            window_pus = sorted({pu for st in steps for pu in st.pus
+                                 if pu is not None})
+            attempts = 0
+            while True:
+                arm_chaos()
+                bind_rid_specs(handles)
+                frontiers = [dict(inflight[h].results) if h in inflight
+                             else {} for h in handles]
+                timings: list = []
+                tw = time.perf_counter()
+                try:
+                    if self.compile_exec:
+                        seg_t: list = []
+                        prog = orch.executor.compile_concurrent(
+                            graphs, sub, completed=frontiers, partial=True)
+                        results = prog.run(
+                            ext, policy=self.exec_policy, faults=faults,
+                            estimate=est, completed=frontiers,
+                            segment_timings=seg_t)
+                        timings = [(lane, r, i, dt / max(len(items), 1))
+                                   for lane, items, dt in seg_t
+                                   for (r, i) in items]
+                    else:
+                        results = orch.executor.run_concurrent(
+                            graphs, sub, ext, completed=frontiers,
+                            policy=self.exec_policy, faults=faults,
+                            estimate=est, partial=True,
+                            op_timings=timings)
+                except PULostError as err:
+                    exec_wall += time.perf_counter() - tw
+                    t_fail = time.perf_counter()
+                    commit(handles, err.partial or frontiers, steps)
+                    health.record_loss(err.pu, now)
+                    recover(t_fail)
+                    return
+                except ExecutionTimeoutError as err:
+                    exec_wall += time.perf_counter() - tw
+                    t_fail = time.perf_counter()
+                    lanes = sorted(err.inflight) or window_pus
+                    opened = False
+                    for lane in lanes:
+                        opened |= health.record_failure(
+                            lane, now, "timeout")
+                    attempts += 1
+                    retried += 1
+                    for h in handles:
+                        if h in inflight:
+                            inflight[h].retries += 1
+                    if opened:
+                        recover(t_fail)
+                        return
+                    if attempts <= self.max_window_retries:
+                        continue       # discard + re-execute the window
+                    for h in handles:
+                        if h in inflight:
+                            shed_inflight(h, "timeout")
+                    plan = None
+                    return
+                except FaultRetryExceededError as err:
+                    exec_wall += time.perf_counter() - tw
+                    t_fail = time.perf_counter()
+                    opened = err.lane is not None and health.record_failure(
+                        err.lane, now, "retry_exceeded")
+                    attempts += 1
+                    retried += 1
+                    for h in handles:
+                        if h in inflight:
+                            inflight[h].retries += 1
+                    if opened:
+                        recover(t_fail)
+                        return
+                    if attempts <= self.max_window_retries:
+                        continue
+                    if err.request is not None \
+                            and 0 <= err.request < len(handles) \
+                            and handles[err.request] in inflight:
+                        shed_inflight(handles[err.request], "fault")
+                    else:
+                        for h in handles:
+                            if h in inflight:
+                                shed_inflight(h, "fault")
+                    plan = None
+                    return
+                # -- success ------------------------------------------------
+                exec_wall += time.perf_counter() - tw
+                slot_model = [inflight[h].model if h in inflight else None
+                              for h in handles]
+                commit(handles, results, steps)
+                for pu, r, i, dt in timings:
+                    if slot_model[r] is None:
+                        continue
+                    pred = self._predicted(slot_model[r], i, pu)
+                    if pred is not None:
+                        health.observe(pu, pred, dt, now)
+                executed = {pu for pu, _r, _i, _dt in timings} \
+                    if timings else set(window_pus)
+                for pu in executed & health.half_open():
+                    health.probe_result(pu, ok=True, now=now)
+                if health.dirty():
+                    apply_health()     # e.g. a drift rescale folded in
+                return
+
         while True:
             # -- drain the arrival stream up to the virtual clock ------------
             while not stream_done:
@@ -370,6 +751,10 @@ class ServingEngine:
                 continue
 
             # -- membership / progress boundary: admit + (re)plan ------------
+            if real:
+                arm_chaos()            # the serving clock reached new events
+                if health.due_probes(now):
+                    apply_health()     # half-open: re-admit for probing
             if admit_due():
                 cursor = 0
             if plan is None:
@@ -377,43 +762,58 @@ class ServingEngine:
             if plan is None:           # everything fully advanced
                 for h, rec in list(inflight.items()):
                     rec.finished_at = now
+                    rec.handle = None
+                    if real:
+                        check_bitwise(rec)
                     inflight.pop(h)
                     orch.retire(h, self.objective, self.horizon_states)
                     self._release(rec.model, h)
                 continue
 
-            # -- run planned steps in virtual time ---------------------------
-            steps = plan.schedule.steps
-            handles = plan.handles
-            horizon = pending.time if pending is not None else None
-            finished: list[int] = []
-            while cursor < len(steps):
-                if horizon is not None and now >= horizon:
-                    break              # an arrival is due: admit first
-                step = steps[cursor]
-                cursor += 1
-                busy_time += len(inflight) * step.cost
-                now += step.cost
-                for slot, op in enumerate(step.ops):
-                    if op is None:
-                        continue
-                    h = handles[slot]
-                    rec = inflight[h]
-                    orch.advance(h, 1)
-                    rec.ops_done += 1
-                    if rec.ops_done >= rec.ops_total:
-                        finished.append(h)
-                if finished:
-                    break              # membership change: re-plan
-            for h in finished:
-                rec = inflight.pop(h)
-                rec.finished_at = now
-                plan = timed(orch.retire, h, self.objective,
-                             self.horizon_states)
-                cursor = 0
-                self._release(rec.model, h)
-            if not finished and cursor >= len(steps):
-                plan = None            # window exhausted: warm re-plan
+            if real:
+                # -- really execute the next step window ---------------------
+                end = select_window()
+                if end <= cursor:
+                    plan = None        # window exhausted: warm re-plan
+                else:
+                    exec_window(end)
+                    if plan is not None and cursor >= \
+                            len(plan.schedule.steps):
+                        plan = None
+            else:
+                # -- run planned steps in virtual time -----------------------
+                steps = plan.schedule.steps
+                handles = plan.handles
+                horizon = pending.time if pending is not None else None
+                finished: list[int] = []
+                while cursor < len(steps):
+                    if horizon is not None and now >= horizon:
+                        break          # an arrival is due: admit first
+                    step = steps[cursor]
+                    cursor += 1
+                    busy_time += len(inflight) * step.cost
+                    now += step.cost
+                    for slot, op in enumerate(step.ops):
+                        if op is None:
+                            continue
+                        h = handles[slot]
+                        rec = inflight[h]
+                        orch.advance(h, 1)
+                        rec.ops_done += 1
+                        if rec.ops_done >= rec.ops_total:
+                            finished.append(h)
+                    if finished:
+                        break          # membership change: re-plan
+                for h in finished:
+                    rec = inflight.pop(h)
+                    rec.finished_at = now
+                    rec.handle = None
+                    plan = timed(orch.retire, h, self.objective,
+                                 self.horizon_states)
+                    cursor = 0
+                    self._release(rec.model, h)
+                if not finished and cursor >= len(steps):
+                    plan = None        # window exhausted: warm re-plan
             # mid-flight SLO check at the boundary
             for h, rec in list(inflight.items()):
                 if rec.deadline is not None and \
@@ -427,6 +827,16 @@ class ServingEngine:
         lats = [r.latency for r in records if r.latency is not None]
         completed = len(lats)
         makespan = max(now - (t0 or 0.0), 0.0)
+        shed_reasons: dict[str, int] = {}
+        for r in records:
+            if r.shed:
+                shed_reasons[r.shed_reason] = \
+                    shed_reasons.get(r.shed_reason, 0) + 1
+        cache1 = orch.cache_stats()
+        cache_delta = {k: v - cache0.get(k, 0)
+                       for k, v in cache1.items() if isinstance(v, int)}
+        cache_delta["sizes"] = cache1.get("sizes", {})
+        checked = [r for r in records if r.bitwise_ok is not None]
         return ServeReport(
             n_requests=len(records),
             completed=completed,
@@ -439,7 +849,32 @@ class ServingEngine:
             replans_warm=orch.stats["replans_warm"] - warm0,
             replans_cold=orch.stats["replans_cold"] - cold0,
             occupancy_mean=busy_time / makespan if makespan > 0 else 0.0,
+            recovered=sum(1 for r in records
+                          if r.recovered and r.latency is not None),
+            retried=retried,
+            recoveries=recoveries,
+            recovery_ms_p50=_pct(recovery_ms, 50),
+            recovery_ms_p99=_pct(recovery_ms, 99),
+            shed_reasons=shed_reasons,
+            bitwise_checked=len(checked),
+            bitwise_failures=sum(1 for r in checked if not r.bitwise_ok),
+            exec_wall_s=exec_wall,
+            breaker=health.stats() if health is not None else {},
+            cache=cache_delta,
             requests=records)
+
+    def _predicted(self, model: str, op: int, pu: str) -> float | None:
+        """Cost-model latency for ``op`` of ``model`` on ``pu`` (drift ref)."""
+        wl = self.orch.workload(self._base[model])
+        d = wl.dense
+        try:
+            pos = list(wl.chain).index(op)
+            j = list(d.pus).index(pu)
+        except ValueError:
+            return None
+        if not d.mask[pos, j]:
+            return None
+        return float(d.w[pos, j])
 
     # -- feasibility probes --------------------------------------------------
     def _avail_cols(self, model: str) -> list[int]:

@@ -1,0 +1,213 @@
+"""HealthMonitor unit suite: breaker state machine, EWMA drift
+rescaling, condition synthesis, and probe-backoff accounting.
+
+Pure state-machine tests — no execution, no jax — so they run in the
+tier-1 sweep unmarked.  The serving-loop integration (breakers driven
+by real injected faults) lives in ``test_chaos_serving.py``.
+"""
+import pytest
+
+from repro.core import (BreakerTransition, HealthMonitor, HealthPolicy,
+                        RuntimeCondition)
+from repro.core.health import BREAKER_CLOSED, BREAKER_HALF_OPEN, BREAKER_OPEN
+
+
+# -- policy validation ------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    {"failure_threshold": 0},
+    {"ewma_alpha": 0.0},
+    {"ewma_alpha": 1.5},
+    {"rescale_threshold": 1.0},
+    {"cooldown": -0.1},
+    {"cooldown": 5.0, "max_cooldown": 1.0},
+])
+def test_policy_validation(kw):
+    with pytest.raises(ValueError):
+        HealthPolicy(**kw)
+
+
+# -- breaker state machine --------------------------------------------------
+
+def test_consecutive_failures_open_the_breaker():
+    mon = HealthMonitor(HealthPolicy(failure_threshold=3))
+    assert not mon.record_failure("GPU", now=0.0)
+    assert not mon.record_failure("GPU", now=0.1)
+    assert mon.health("GPU").state == BREAKER_CLOSED
+    assert mon.record_failure("GPU", now=0.2)       # third opens
+    assert mon.health("GPU").state == BREAKER_OPEN
+    assert mon.quarantined() == {"GPU"}
+    assert mon.opens == 1 and mon.dirty()
+
+
+def test_success_resets_the_failure_counter():
+    mon = HealthMonitor(HealthPolicy(failure_threshold=2))
+    mon.record_failure("GPU", now=0.0)
+    mon.observe("GPU", predicted=1.0, measured=1.0, now=0.1)
+    assert mon.health("GPU").consecutive_failures == 0
+    assert not mon.record_failure("GPU", now=0.2)   # counting restarts
+    assert mon.health("GPU").state == BREAKER_CLOSED
+
+
+def test_loss_opens_immediately():
+    mon = HealthMonitor(HealthPolicy(failure_threshold=5))
+    mon.record_loss("NPU", now=1.0)
+    assert mon.health("NPU").state == BREAKER_OPEN
+    assert mon.transitions[-1].reason == "pu_lost"
+
+
+def test_cooldown_half_open_probe_cycle():
+    mon = HealthMonitor(HealthPolicy(failure_threshold=1, cooldown=0.5))
+    mon.record_failure("GPU", now=0.0)
+    assert mon.due_probes(now=0.4) == []            # cooldown not elapsed
+    assert mon.due_probes(now=0.5) == ["GPU"]
+    assert mon.health("GPU").state == BREAKER_HALF_OPEN
+    assert mon.due_probes(now=0.6) == []            # already half-open
+    mon.probe_result("GPU", ok=True, now=0.7)
+    th = mon.health("GPU")
+    assert th.state == BREAKER_CLOSED
+    assert th.cooldown == 0.5 and th.opened_at is None
+    assert mon.readmits == 1
+    states = [(t.frm, t.to) for t in mon.transitions]
+    assert states == [("closed", "open"), ("open", "half_open"),
+                      ("half_open", "closed")]
+
+
+def test_failed_probe_reopens_with_backoff():
+    pol = HealthPolicy(failure_threshold=1, cooldown=0.5,
+                       cooldown_backoff=2.0, max_cooldown=1.6)
+    mon = HealthMonitor(pol)
+    mon.record_failure("GPU", now=0.0)
+    for k, expect in enumerate([1.0, 1.6, 1.6]):    # growth then cap
+        t_half = mon.health("GPU").opened_at + mon.health("GPU").cooldown
+        assert mon.due_probes(now=t_half) == ["GPU"]
+        mon.probe_result("GPU", ok=False, now=t_half)
+        assert mon.health("GPU").state == BREAKER_OPEN
+        assert mon.health("GPU").cooldown == pytest.approx(expect)
+
+
+def test_failure_during_half_open_counts_as_failed_probe():
+    mon = HealthMonitor(HealthPolicy(failure_threshold=1, cooldown=0.1))
+    mon.record_failure("GPU", now=0.0)
+    mon.due_probes(now=0.2)
+    assert mon.record_failure("GPU", now=0.25)      # probe dispatch failed
+    assert mon.health("GPU").state == BREAKER_OPEN
+    assert mon.health("GPU").cooldown > 0.1
+
+
+def test_probe_result_ignored_unless_half_open():
+    mon = HealthMonitor()
+    mon.probe_result("GPU", ok=True, now=0.0)       # no-op on closed
+    assert mon.health("GPU").state == BREAKER_CLOSED
+    assert mon.readmits == 0 and not mon.transitions
+
+
+# -- EWMA drift / rescale ---------------------------------------------------
+
+def _calibrate(mon, pu="GPU", ratio=2.0, n=8, t0=0.0):
+    for k in range(n):
+        mon.observe(pu, predicted=1.0, measured=ratio, now=t0 + k * 0.01)
+
+
+def test_drift_rescale_recommended_past_threshold():
+    pol = HealthPolicy(calibration=8, rescale_threshold=4.0, ewma_alpha=0.5)
+    mon = HealthMonitor(pol)
+    _calibrate(mon, ratio=2.0)                      # baseline ~= 2.0
+    mon.dirty()                                     # clear any noise
+    assert mon.health("GPU").baseline == pytest.approx(2.0)
+    for k in range(20):                             # 10x slower than profile
+        mon.observe("GPU", predicted=1.0, measured=20.0, now=1.0 + k * 0.01)
+    th = mon.health("GPU")
+    assert th.rescale is not None and th.rescale >= 4.0
+    assert mon.rescales == 1 and mon.dirty()
+    assert any("drift_rescale" in t.reason for t in mon.transitions)
+
+
+def test_drift_rescale_hysteresis_and_recovery():
+    pol = HealthPolicy(calibration=4, rescale_threshold=4.0,
+                       rescale_hysteresis=0.5, ewma_alpha=0.5)
+    mon = HealthMonitor(pol)
+    _calibrate(mon, ratio=1.0, n=4)
+    for k in range(20):
+        mon.observe("GPU", predicted=1.0, measured=10.0, now=1.0 + k * 0.01)
+    assert mon.health("GPU").rescale is not None
+    mon.dirty()
+    # drifting back but above thr*hysteresis keeps the rescale active
+    # (no thrash); dropping below it clears the recommendation
+    for k in range(200):
+        mon.observe("GPU", predicted=1.0, measured=1.0, now=2.0 + k * 0.01)
+        if mon.health("GPU").rescale is None:
+            break
+    assert mon.health("GPU").rescale is None
+    assert any(t.reason == "drift_recovered" for t in mon.transitions)
+
+
+def test_drift_needs_calibration_first():
+    mon = HealthMonitor(HealthPolicy(calibration=8))
+    for k in range(7):
+        mon.observe("GPU", predicted=1.0, measured=100.0, now=k * 0.01)
+    th = mon.health("GPU")
+    assert th.baseline is None and th.drift() is None
+    assert th.rescale is None                       # never before baseline
+
+
+# -- condition synthesis ----------------------------------------------------
+
+def test_condition_folds_quarantine_and_rescale():
+    mon = HealthMonitor(HealthPolicy(failure_threshold=1, calibration=2,
+                                     rescale_threshold=2.0, ewma_alpha=1.0))
+    mon.record_failure("NPU", now=0.0)              # NPU quarantined
+    _calibrate(mon, pu="GPU", ratio=1.0, n=2)
+    mon.observe("GPU", predicted=1.0, measured=5.0, now=0.1)  # 5x drift
+    base = RuntimeCondition(slowdown={"CPU": 1.5})
+    cond = mon.condition(base)
+    assert cond.unavailable == frozenset({"NPU"})
+    assert cond.slowdown["CPU"] == 1.5              # base preserved
+    assert cond.slowdown["GPU"] == pytest.approx(5.0)
+
+
+def test_condition_restores_half_open_for_probing():
+    mon = HealthMonitor(HealthPolicy(failure_threshold=1, cooldown=0.1))
+    mon.record_failure("GPU", now=0.0)
+    base = RuntimeCondition(unavailable=frozenset({"GPU"}))
+    assert "GPU" in mon.condition(base).unavailable
+    mon.due_probes(now=0.2)                         # -> half-open
+    # the probe needs the lane plannable even if the *base* condition
+    # still lists it: health owns the lane while its breaker is live
+    assert "GPU" not in mon.condition(base).unavailable
+    mon.probe_result("GPU", ok=True, now=0.3)
+    assert "GPU" not in mon.condition().unavailable
+
+
+def test_rescale_suppressed_while_not_closed():
+    mon = HealthMonitor(HealthPolicy(failure_threshold=1, calibration=2,
+                                     rescale_threshold=2.0, ewma_alpha=1.0))
+    _calibrate(mon, pu="GPU", ratio=1.0, n=2)
+    mon.observe("GPU", predicted=1.0, measured=9.0, now=0.1)
+    mon.record_failure("GPU", now=0.2)              # opens
+    cond = mon.condition()
+    assert "GPU" in cond.unavailable
+    assert "GPU" not in cond.slowdown               # unavailable, not slow
+
+
+# -- accounting -------------------------------------------------------------
+
+def test_stats_shape_and_transition_log():
+    mon = HealthMonitor(HealthPolicy(failure_threshold=1, cooldown=0.1))
+    mon.record_failure("GPU", now=0.0)
+    mon.due_probes(now=0.2)
+    mon.probe_result("GPU", ok=True, now=0.3)
+    s = mon.stats()
+    assert s["opens"] == 1 and s["probes"] == 1 and s["readmits"] == 1
+    assert s["quarantined"] == [] and s["half_open"] == []
+    assert s["targets"]["GPU"]["state"] == "closed"
+    assert [t["to"] for t in s["transitions"]] == \
+        ["open", "half_open", "closed"]
+    assert all(isinstance(t, dict) for t in s["transitions"])
+
+
+def test_dirty_is_read_and_clear():
+    mon = HealthMonitor(HealthPolicy(failure_threshold=1))
+    assert not mon.dirty()
+    mon.record_failure("GPU", now=0.0)
+    assert mon.dirty() and not mon.dirty()
